@@ -1,0 +1,203 @@
+"""One benchmark per paper table/figure, at reduced scale (CPU container).
+
+The paper's absolute numbers need the original 14-30B checkpoints + GPU
+eval; these benchmarks reproduce each experiment's MECHANISM and report the
+same comparisons on an in-repo trained MoE (DESIGN.md §8 fidelity note):
+
+  table_quality        — Tables 1-3: Full / MergeMoE / M-SMoE / Average /
+                         ZipIt at equal compression ratio (held-out loss)
+  table_generalization — Table 4: calibrate on corpus A, evaluate on B
+  table_ablation       — Table 5: w/ vs w/o merging errors (oracle)
+  fig_ratio            — Fig. 2: loss vs #merged-experts and #layers
+  fig_timecost         — Fig. 3: merge wall-time MergeMoE vs M-SMoE
+  fig_samples          — Fig. 4: loss vs calibration sample count
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import calibration as CAL
+from repro.core import clustering as CL
+from repro.core import compress as CMP
+from repro.core import merge as MG
+from repro.core import oracle as ORC
+from repro.data.pipeline import SyntheticLM
+from repro.launch.train import TrainConfig, train
+from repro.models import model as MD
+
+_CACHE: Dict = {}
+
+
+def bench_cfg():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    # a little deeper than the smoke config so layer sweeps are meaningful
+    return cfg.replace(n_layers=4)
+
+
+def trained_model(steps=80):
+    if "model" not in _CACHE:
+        tc = TrainConfig(arch="qwen3-moe-30b-a3b", reduced=True, steps=steps,
+                         global_batch=4, seq_len=64, lr=3e-3, ckpt_dir="",
+                         log_every=1000)
+        cfg = bench_cfg()
+        out = _train_with_cfg(cfg, tc)
+        _CACHE["model"] = (cfg, out)
+    return _CACHE["model"]
+
+
+def _train_with_cfg(cfg, tc):
+    """train() but with an explicit cfg (benchmarks tweak depth)."""
+    from repro.launch import sharding as SH
+    from repro.launch import steps as ST
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import make_optimizer
+    from repro.models.numerics import set_activation_mesh
+    mesh = make_host_mesh()
+    set_activation_mesh(mesh)
+    opt = make_optimizer("adamw", lr=tc.lr)
+    params = MD.init(cfg, jax.random.PRNGKey(tc.seed))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(ST.make_train_step(cfg, opt))
+    data = SyntheticLM(cfg.vocab_size, tc.seq_len, tc.global_batch,
+                       seed=tc.seed)
+    loss = None
+    for step in range(tc.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt_state, loss, _ = step_fn(
+            params, opt_state, batch, jnp.asarray(step, jnp.int32))
+    return params
+
+
+def _eval_batches(cfg, n=4, seed=0, corpus_seed=999, batch=4, seq=64):
+    data = SyntheticLM(cfg.vocab_size, seq, batch, seed=corpus_seed)
+    out = []
+    for _ in range(n):
+        out.append({k: jnp.asarray(v) for k, v in next(data).items()})
+    return out
+
+
+def _loss(cfg, params, batches):
+    fn = jax.jit(lambda p, b: MD.loss(cfg, p, b)[0])
+    return float(np.mean([float(fn(params, b)) for b in batches]))
+
+
+# ---------------------------------------------------------------------------
+
+def table_quality(merged=4, split=2) -> List[dict]:
+    cfg, params = trained_model()
+    calib = _eval_batches(cfg, n=2, corpus_seed=7)
+    evalb = _eval_batches(cfg, n=4, corpus_seed=999)
+    rows = [{"strategy": "Full", "ratio": 1.0,
+             "loss": _loss(cfg, params, evalb), "t_merge_s": 0.0}]
+    for method in ("average", "zipit", "msmoe", "mergemoe"):
+        t0 = time.perf_counter()
+        ncfg, nparams, info = CMP.compress_model(
+            cfg, params, method=method, merged_experts=merged, split=split,
+            batches=calib)
+        dt = time.perf_counter() - t0
+        rows.append({"strategy": method, "ratio": info["compression_ratio"],
+                     "loss": _loss(ncfg, nparams, evalb),
+                     "t_merge_s": round(info["t_merge_s"], 3),
+                     "t_total_s": round(dt, 3)})
+    return rows
+
+
+def table_generalization(merged=4, split=2) -> List[dict]:
+    cfg, params = trained_model()
+    corpora = {"A": 7, "B": 21, "C": 42}
+    evals = {k: _eval_batches(cfg, n=3, corpus_seed=s + 1000)
+             for k, s in corpora.items()}
+    rows = []
+    for src, seed in corpora.items():
+        calib = _eval_batches(cfg, n=2, corpus_seed=seed)
+        ncfg, nparams, _ = CMP.compress_model(
+            cfg, params, method="mergemoe", merged_experts=merged,
+            split=split, batches=calib)
+        row = {"calib_source": src}
+        for tgt in corpora:
+            row[f"loss_on_{tgt}"] = round(_loss(ncfg, nparams, evals[tgt]), 4)
+        rows.append(row)
+    return rows
+
+
+def table_ablation(merged=4) -> List[dict]:
+    """w/ merging errors (real compressed model) vs w/o (output oracle)."""
+    cfg, params = trained_model()
+    batches = _eval_batches(cfg, n=2, corpus_seed=7)
+    calib = CAL.collect(cfg, params, batches)
+    ncfg, nparams, _ = CMP.compress_model(
+        cfg, params, method="mergemoe", merged_experts=merged, split=0,
+        batches=batches)
+    remaps = np.asarray(nparams["stack_c"]["moe"]["remap"])
+    assigns = {l: remaps[l] for l in range(cfg.n_layers)}
+    bweights = {l: CL.merge_weights(remaps[l], calib[l].counts, merged)
+                for l in range(cfg.n_layers)}
+    batch = batches[0]
+    full, _, _ = MD.forward(cfg, params, batch)
+    oracle = ORC.oracle_forward(cfg, params, batch, assigns, bweights)
+    merged_l, _, _ = MD.forward(ncfg, nparams, batch)
+    mse = lambda a: float(jnp.mean((a.astype(jnp.float32)
+                                    - full.astype(jnp.float32)) ** 2))
+    return [
+        {"strategy": "full", "logit_mse_vs_full": 0.0},
+        {"strategy": "w/o merging errors (oracle)",
+         "logit_mse_vs_full": mse(oracle)},
+        {"strategy": "w/ merging errors (MergeMoE)",
+         "logit_mse_vs_full": mse(merged_l)},
+    ]
+
+
+def fig_ratio() -> List[dict]:
+    cfg, params = trained_model()
+    calib = _eval_batches(cfg, n=2, corpus_seed=7)
+    evalb = _eval_batches(cfg, n=3, corpus_seed=999)
+    rows = []
+    for merged in (8, 6, 4, 2):      # vary #experts (Fig. 2a)
+        ncfg, npar, info = CMP.compress_model(
+            cfg, params, method="mergemoe", merged_experts=merged, split=2,
+            batches=calib)
+        rows.append({"sweep": "experts", "merged": merged, "split": 2,
+                     "ratio": round(info["compression_ratio"], 3),
+                     "loss": round(_loss(ncfg, npar, evalb), 4)})
+    for split in (3, 2, 1, 0):       # vary #layers (Fig. 2b)
+        ncfg, npar, info = CMP.compress_model(
+            cfg, params, method="mergemoe", merged_experts=4, split=split,
+            batches=calib)
+        rows.append({"sweep": "layers", "merged": 4, "split": split,
+                     "ratio": round(info["compression_ratio"], 3),
+                     "loss": round(_loss(ncfg, npar, evalb), 4)})
+    return rows
+
+
+def fig_timecost() -> List[dict]:
+    cfg, params = trained_model()
+    calib = _eval_batches(cfg, n=2, corpus_seed=7)
+    rows = []
+    for method in ("msmoe", "mergemoe"):
+        t0 = time.perf_counter()
+        CMP.compress_model(cfg, params, method=method, merged_experts=4,
+                           split=0, batches=calib)
+        rows.append({"method": method,
+                     "t_total_s": round(time.perf_counter() - t0, 3)})
+    return rows
+
+
+def fig_samples() -> List[dict]:
+    cfg, params = trained_model()
+    evalb = _eval_batches(cfg, n=3, corpus_seed=999)
+    calib_all = _eval_batches(cfg, n=4, corpus_seed=7)
+    rows = []
+    for max_tokens in (8, 32, 128, 512):
+        ncfg, npar, info = CMP.compress_model(
+            cfg, params, method="mergemoe", merged_experts=4, split=2,
+            batches=calib_all, max_tokens=max_tokens)
+        rows.append({"calib_tokens": max_tokens,
+                     "loss": round(_loss(ncfg, npar, evalb), 4)})
+    return rows

@@ -1,0 +1,87 @@
+"""Roofline table builder — reads experiments/dryrun/*.json and renders the
+per-(arch x shape x mesh) three-term analysis (EXPERIMENTS.md §Roofline).
+
+Terms (per device, TPU v5e constants from the assignment):
+  t_compute    = MXU dot FLOPs / 197e12
+  t_memory     = post-fusion HBM traffic / 819e9
+  t_collective = ring-weighted collective bytes / 50e9
+
+``--flash`` recomputes t_memory with the Pallas flash-attention kernel's
+traffic model (materialized [B,H,S,S] buffers replaced by q/k/v/o reads).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.hlo_analysis import roofline_terms
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str = "pod", tag: str = ""):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}{tag}.json")):
+        r = json.loads(p.read_text())
+        recs.append(r)
+    return recs
+
+
+def row(rec, flash: bool = False):
+    if rec.get("skipped"):
+        return {"arch": rec["arch"], "shape": rec["shape"], "skip": True}
+    pd = rec["per_dev"]
+    hbm = pd["hbm_bytes_flash"] if flash else pd["hbm_bytes"]
+    terms = roofline_terms(pd["flops"], hbm, pd["coll_bytes"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "mesh": rec["mesh"],
+        "flops": pd["flops"], "hbm": hbm, "coll": pd["coll_bytes"],
+        "peak_gib": rec["mem_per_dev"]["peak"] / 2**30,
+        "useful": rec.get("useful_flops_ratio", 0.0),
+        **terms,
+    }
+
+
+def render(rows, title):
+    out = [f"### {title}", ""]
+    hdr = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
+           "roofline frac | 6ND/HLO | peak GiB/dev |")
+    out += [hdr, "|" + "---|" * 9]
+    for r in rows:
+        if r.get("skip"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP (full attention, DESIGN.md §5) | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{r['useful']:.2f} | {r['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = [row(r, flash=args.flash) for r in load_records(args.mesh)]
+    if args.markdown:
+        print(render(rows, f"Roofline — {args.mesh} "
+                           f"({'flash-adjusted' if args.flash else 'XLA sdpa'})"))
+        return
+    for r in rows:
+        if r.get("skip"):
+            print(f"{r['arch']:20s} {r['shape']:12s} SKIP")
+        else:
+            print(f"{r['arch']:20s} {r['shape']:12s} dom={r['dominant']:10s} "
+                  f"frac={r['roofline_fraction']:.3f} "
+                  f"tc={r['t_compute_s']:.3f} tm={r['t_memory_s']:.3f} "
+                  f"tx={r['t_collective_s']:.3f} useful={r['useful']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one function per paper table/figure plus
+the roofline summary. Prints ``name,value,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import paper_tables as PT
+
+
+def _emit(name: str, rows) -> None:
+    print(f"\n== {name} ==")
+    for r in rows:
+        print("csv," + name + "," + json.dumps(r))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower sweeps (ratio/samples)")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    _emit("table1_3_quality", PT.table_quality())
+    _emit("table4_generalization", PT.table_generalization())
+    _emit("table5_ablation", PT.table_ablation())
+    _emit("fig3_timecost", PT.fig_timecost())
+    if not args.fast:
+        _emit("fig2_ratio", PT.fig_ratio())
+        _emit("fig4_samples", PT.fig_samples())
+
+    # roofline summary (from dry-run artifacts, if present)
+    try:
+        from benchmarks import roofline as RL
+        rows = [RL.row(r) for r in RL.load_records("pod")]
+        worst = [r for r in rows if not r.get("skip") and r["kind"] == "train"]
+        worst.sort(key=lambda r: r["roofline_fraction"])
+        _emit("roofline_train_cells", [
+            {"arch": r["arch"], "shape": r["shape"],
+             "dominant": r["dominant"],
+             "fraction": round(r["roofline_fraction"], 4)} for r in worst])
+    except Exception as e:  # dry-run artifacts absent
+        print(f"csv,roofline,skipped: {e}")
+
+    print(f"\n[benchmarks] total {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production-mesh dry-run from the public API: lower + compile one
+(arch x shape) cell on the 512-chip multi-pod mesh and print its roofline.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        --arch qwen3-moe-30b-a3b --shape prefill_32k
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import dryrun as DR   # sets XLA device-count flags on import
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+
+    rec = DR.run_cell(args.arch, args.shape, multi_pod=not args.single_pod)
+    r = rec["roofline"]
+    print(json.dumps({
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": rec["chips"], "profile": rec.get("profile"),
+        "peak_GiB_per_dev": round(rec["mem_per_dev"]["peak"] / 2**30, 2),
+        "t_compute_s": round(r["t_compute_s"], 3),
+        "t_memory_s": round(r["t_memory_s"], 3),
+        "t_collective_s": round(r["t_collective_s"], 3),
+        "dominant": r["dominant"],
+        "roofline_fraction": round(r["roofline_fraction"], 3),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

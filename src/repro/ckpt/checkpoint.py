@@ -1,0 +1,167 @@
+"""Fault-tolerant checkpointing: atomic, step-tagged, keep-N, async-capable,
+and ELASTIC (restore onto a different mesh than the one that saved).
+
+Layout:
+    <dir>/step_00000420.tmp/...      (in-flight write)
+    <dir>/step_00000420/             (atomic rename on completion)
+        meta.json                    (tree structure, shapes, dtypes, extras)
+        leaf_00000.npy ...           (one file per leaf, logical full array)
+        COMMIT                       (terminal marker — restarts ignore any
+                                      step directory without it)
+
+Leaves are written as FULL logical arrays (device_get gathers shards), so a
+relaunch may re-shard onto any mesh: ``load(..., shardings=...)`` device_puts
+each leaf with the new NamedSharding. On a multi-host fleet the same format
+generalizes to per-host index-range files; meta.json already records the
+global shape per leaf.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _flatten(tree) -> Tuple[List[Any], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(directory, step: int, tree, extras: Optional[Dict] = None,
+         keep: int = 3) -> Path:
+    """Synchronous atomic save. Returns the committed directory."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _flatten(tree)
+    meta = {
+        "step": step,
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "leaves": [],
+        "extras": extras or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(leaf.dtype)
+        if dtype == _BF16:                       # npy can't store bf16
+            arr = arr.astype(np.float32)
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        meta["leaves"].append({"dtype": dtype, "shape": list(arr.shape)})
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / "COMMIT").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: Path, keep: int) -> None:
+    steps = sorted(d for d in directory.glob("step_????????")
+                   if (d / "COMMIT").exists())
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(d, ignore_errors=True)
+    for d in directory.glob("step_*.tmp"):       # orphaned partial writes
+        if not (d / "COMMIT").exists():
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in directory.glob("step_????????")
+             if (d / "COMMIT").exists()]
+    return max(steps) if steps else None
+
+
+def load(directory, step: Optional[int] = None, shardings=None,
+         ) -> Tuple[Any, Dict]:
+    """Restore (tree, extras). ``shardings``: optional pytree of NamedSharding
+    (same structure) — enables elastic restore onto a NEW mesh."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = directory / f"step_{step:08d}"
+    meta = json.loads((d / "meta.json").read_text())
+    from jax.tree_util import PyTreeDef, default_registry
+    treedef = PyTreeDef.deserialize_using_proto(
+        default_registry, bytes.fromhex(meta["treedef"]))
+
+    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                 if shardings is not None else None)
+    leaves = []
+    for i, info in enumerate(meta["leaves"]):
+        arr = np.load(d / f"leaf_{i:05d}.npy")
+        if info["dtype"] == _BF16:
+            import jax.numpy as jnp
+            arr = jnp.asarray(arr, jnp.bfloat16)
+        if sh_leaves is not None:
+            leaves.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr) if not hasattr(arr, "devices")
+                          else arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, meta.get("extras", {})
+
+
+class CheckpointManager:
+    """Keep-N manager with optional ASYNC saves (device_get on the caller
+    thread — cheap snapshot — then file I/O on a worker thread, so the train
+    loop never blocks on disk)."""
+
+    def __init__(self, directory, keep: int = 3, async_save: bool = False):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extras: Optional[Dict] = None) -> None:
+        self.wait()
+        if not self.async_save:
+            save(self.directory, step, tree, extras, self.keep)
+            return
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        dtypes = jax.tree.map(lambda x: str(x.dtype), tree)
+
+        def work():
+            try:
+                restored = jax.tree.map(
+                    lambda a, dt: a if dt != _BF16 else a, snapshot, dtypes)
+                save(self.directory, step, restored, extras, self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.directory)
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        self.wait()
+        return load(self.directory, step, shardings)

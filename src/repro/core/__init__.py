@@ -1,0 +1,5 @@
+from repro.core.errors import TechniqueInapplicable, CalibrationError  # noqa: F401
+from repro.core.compress import compress_model  # noqa: F401
+from repro.core.merge import merge_layer, MergeResult, METHODS  # noqa: F401
+from repro.core.clustering import (  # noqa: F401
+    cluster_experts, merge_weights, summation_matrix, mixing_matrix)

@@ -1,0 +1,52 @@
+"""Calibration-activation capture (JAX replacement for the paper's Torch
+hooks, App. B).
+
+``collect(cfg, params, batches)`` runs the ORIGINAL model with
+``capture=True`` and returns, per MoE layer, the expert-input activations X̂
+and the expert usage counts f. Because JAX forwards are pure, a single-shot
+capture is exactly equivalent to the paper's back-to-front layer traversal
+(merging layer ℓ never perturbs activations at layers ≤ ℓ) — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import model as MD
+
+
+@dataclass
+class LayerCalibration:
+    x: np.ndarray        # [T, d] expert-layer inputs (tokens pooled)
+    counts: np.ndarray   # [N] usage frequencies
+
+
+def collect(cfg: ModelConfig, params: dict, batches: Iterable[dict],
+            max_tokens_per_layer: int | None = None
+            ) -> Dict[int, LayerCalibration]:
+    """Returns {layer_index: LayerCalibration} for every MoE layer."""
+    assert cfg.moe is not None, "calibration capture requires an MoE model"
+    fwd = jax.jit(lambda p, b: MD.forward(cfg, p, b, capture=True)[2])
+
+    xs: List[np.ndarray] = []
+    counts: np.ndarray | None = None
+    for batch in batches:
+        cap = fwd(params, batch)
+        expert_inputs, cnts = cap                     # [L,B,S,d], [L,N]
+        xi = np.asarray(expert_inputs, np.float32)
+        L = xi.shape[0]
+        xs.append(xi.reshape(L, -1, xi.shape[-1]))    # [L, B*S, d]
+        c = np.asarray(cnts, np.float32)
+        counts = c if counts is None else counts + c
+
+    x_all = np.concatenate(xs, axis=1)                # [L, T, d]
+    if max_tokens_per_layer is not None:
+        x_all = x_all[:, :max_tokens_per_layer]
+    return {
+        l: LayerCalibration(x=x_all[l], counts=counts[l])
+        for l in range(x_all.shape[0])
+    }

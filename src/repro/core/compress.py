@@ -1,0 +1,115 @@
+"""End-to-end MergeMoE compression pipeline.
+
+``compress_model(cfg, params, method, merged_experts, split, batches)``:
+  1. capture calibration activations + usage counts from the ORIGINAL model,
+  2. merge every MoE layer in [split, n_layers) independently (the paper's
+     back-to-front traversal is equivalent under pure-functional capture —
+     DESIGN.md §3),
+  3. return (compressed_cfg, compressed_params) with the suffix stack's expert
+     tables replaced by M merged experts + the [N]->[M] remap (matrix A).
+
+Works on any MoE config; raises TechniqueInapplicable for expert-free
+architectures (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as CAL
+from repro.core import merge as MG
+from repro.core.errors import TechniqueInapplicable, CalibrationError
+from repro.models.config import ModelConfig
+
+# Paper Fig. 4: below ~32 calibration samples the least-squares system is
+# under-determined and quality collapses to chance.
+MIN_SAMPLE_WARN = 32
+
+
+def _slice_layers(tree, sel):
+    return jax.tree.map(lambda a: a[sel], tree)
+
+
+def compress_model(cfg: ModelConfig, params: dict, *, method: str = "mergemoe",
+                   merged_experts: int, split: int | None = None,
+                   batches: Iterable[dict], max_tokens: int | None = None,
+                   strict_samples: bool = False,
+                   ) -> Tuple[ModelConfig, dict, Dict]:
+    if cfg.moe is None:
+        raise TechniqueInapplicable(
+            f"{cfg.name} ({cfg.family}) has no routed experts (DESIGN.md §4).")
+    if cfg.moe_merged:
+        raise ValueError("model is already compressed")
+
+    new_cfg = cfg.compressed(merged_experts, split)
+    split = new_cfg.moe_split
+    L, N, M = cfg.n_layers, cfg.moe.n_experts, merged_experts
+
+    t0 = time.perf_counter()
+    calib = CAL.collect(cfg, params, batches, max_tokens_per_layer=max_tokens)
+    t_calib = time.perf_counter() - t0
+
+    n_samples = calib[split].x.shape[0]
+    if n_samples < MIN_SAMPLE_WARN and strict_samples:
+        raise CalibrationError(
+            f"{n_samples} calibration tokens < critical threshold "
+            f"{MIN_SAMPLE_WARN} (paper Fig. 4)")
+
+    stack = params["stack"]
+    moe_p = stack["moe"]
+    router_all = np.asarray(moe_p["router"], np.float32)      # [L, d, N]
+
+    t0 = time.perf_counter()
+    merged: List[MG.MergeResult] = []
+    for l in range(split, L):
+        res = MG.merge_layer(
+            method,
+            np.asarray(moe_p["wg"][l], np.float32),
+            np.asarray(moe_p["wu"][l], np.float32),
+            np.asarray(moe_p["wd"][l], np.float32),
+            calib[l].counts,
+            calib[l].x,
+            M,
+            router=router_all[l] if method == "msmoe" else None,
+        )
+        merged.append(res)
+    t_merge = time.perf_counter() - t0
+
+    # ---- assemble the compressed parameter tree
+    dt = cfg.param_dtype
+    suffix = _slice_layers(stack, slice(split, L))
+    suffix_moe = dict(suffix["moe"])
+    suffix_moe["wg"] = jnp.asarray(np.stack([r.wg for r in merged]), dt)
+    suffix_moe["wu"] = jnp.asarray(np.stack([r.wu for r in merged]), dt)
+    suffix_moe["wd"] = jnp.asarray(np.stack([r.wd for r in merged]), dt)
+    suffix_moe["remap"] = jnp.asarray(np.stack([r.remap for r in merged]),
+                                      jnp.int32)
+    suffix = dict(suffix)
+    suffix["moe"] = suffix_moe
+
+    new_params = {k: v for k, v in params.items() if k != "stack"}
+    if split > 0:
+        new_params["stack"] = _slice_layers(stack, slice(0, split))
+    new_params["stack_c"] = suffix
+
+    orig = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    comp = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(new_params))
+    info = {
+        "method": method,
+        "layers_merged": list(range(split, L)),
+        "n_experts": N,
+        "merged_experts": M,
+        "calib_tokens": int(n_samples),
+        "t_calibrate_s": t_calib,
+        "t_merge_s": t_merge,
+        "bytes_original": int(orig),
+        "bytes_compressed": int(comp),
+        "compression_ratio": float(orig) / float(comp),
+        "resid": [r.info.get("resid") for r in merged
+                  if r.info.get("resid") is not None],
+    }
+    return new_cfg, new_params, info

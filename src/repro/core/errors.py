@@ -1,0 +1,12 @@
+"""Typed errors for the compression pipeline."""
+
+
+class TechniqueInapplicable(Exception):
+    """Raised when MergeMoE is requested for an architecture without routed
+    experts (dense / ssm / hybrid / vlm / audio families). See DESIGN.md
+    §Arch-applicability."""
+
+
+class CalibrationError(Exception):
+    """Raised when calibration data is insufficient (e.g. below the paper's
+    critical sample threshold, Fig. 4) and the caller asked for strictness."""

@@ -1,0 +1,73 @@
+"""The "w/o merging errors" oracle (paper Table 5).
+
+Keeps ALL original experts and merges their OUTPUTS exactly: per token the
+routing weight of original expert j becomes
+    u_j = B_{j, c(j)} * sum of top-k weights landing in cluster c(j),
+so the layer output equals  Y · B · A · mask_top_K(softmax(W_r X))ᵀ  with zero
+T1/T2/T3 approximation error. Memory is NOT reduced — this is the upper bound
+that isolates clustering error from merging error.
+
+Implemented with dense all-expert evaluation; use on reduced/eval models only.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MoE
+from repro.models import model as MD
+from repro.models.numerics import ein
+
+F32 = jnp.float32
+
+
+def oracle_moe_apply(cfg: ModelConfig, p: dict, x, assign, bweights):
+    """assign: [N] int32 cluster ids; bweights: [N] fp32 B entries."""
+    m = cfg.moe
+    B_, S, d = x.shape
+    w, idx, probs = MoE.route(cfg, p, x)                 # [.., k]
+    # cluster weight sums s_c per token
+    cl = jnp.take(jnp.asarray(assign), idx)              # [.., k] cluster of picks
+    M = int(np.max(np.asarray(assign))) + 1
+    onehot = jax.nn.one_hot(cl, M, dtype=F32)            # [.., k, M]
+    s_c = jnp.einsum("...km,...k->...m", onehot, w)      # [.., M]
+    # expand to per-original-expert weight u_j = B_j * s_{c(j)}
+    u = jnp.take(s_c, jnp.asarray(assign), axis=-1) * jnp.asarray(bweights)
+    # dense all-expert evaluation
+    g = ein("bsd,edf->bsef", x, p["wg"])
+    uu = ein("bsd,edf->bsef", x, p["wu"])
+    h = (jax.nn.silu(g) * uu).astype(x.dtype)
+    ye = ein("bsef,efd->bsed", h, p["wd"])
+    y = jnp.einsum("bsed,bse->bsd", ye.astype(F32), u.astype(F32)).astype(x.dtype)
+    if m.n_shared_experts:
+        y = y + L.mlp_apply(p["shared"], x)
+    return y
+
+
+def oracle_forward(cfg: ModelConfig, params: dict, batch: dict,
+                   assigns: Dict[int, np.ndarray],
+                   bweights: Dict[int, np.ndarray]):
+    """Full-model forward where layers in ``assigns`` use exact output
+    merging. Runs the stack unscanned (eval-scale models only)."""
+    inv_freq = L.rope_freqs(cfg.hd, cfg.rope_theta)
+    x = L.embed_apply(params["embed"], batch["tokens"])
+    stack = params["stack"]
+    n_layers = jax.tree.leaves(stack)[0].shape[0]
+    for i in range(n_layers):
+        lp = jax.tree.map(lambda a: a[i], stack)
+        h = x + L.attn_apply(cfg, lp["attn"],
+                             L.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                             inv_freq=inv_freq)
+        hn = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        if i in assigns:
+            y = oracle_moe_apply(cfg, lp["moe"], hn, assigns[i], bweights[i])
+        else:
+            y = MoE.moe_apply(cfg, lp["moe"], hn).y
+        x = h + y
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    return L.lm_head(cfg, params["embed"], x)

@@ -1,0 +1,3 @@
+from repro.distributed.compression import (  # noqa: F401
+    ef_compressed, compressed_psum, quantize, dequantize)
+from repro.distributed.straggler import StragglerMonitor, StragglerReport  # noqa: F401

@@ -1,0 +1,109 @@
+"""Flash attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Online-softmax blocked attention: grid (B*H, Sq/bq, Skv/bk); running max /
+normalizer / fp32 output accumulator live in VMEM scratch, so the [S, S]
+logits matrix never touches HBM — this is the kernel that collapses the
+"sdpa" HBM-traffic term in the roofline (see hlo_analysis.sdpa_flash_bytes).
+
+Causal masking is block-aware: fully-masked kv blocks are skipped.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, bq: int, bk: int, nk: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0]                                      # [bq, hd]
+        k = k_ref[0]                                      # [bk, hd]
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=F32) * scale
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=F32))
+        m_ref[...] = m_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(jk * bk <= iq * bq + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(jk == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False):
+    """q/k/v: [B, H, S, hd] (GQA pre-expanded by the caller) -> [B, H, S, hd]."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    bq = _block(Sq, block_q)
+    bk = _block(Sk, block_k)
+    nq, nk = Sq // bq, Sk // bk
+
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * H, Sk, hd)
+    vf = v.reshape(B * H, Sk, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), F32),      # running max
+            pltpu.VMEM((bq,), F32),      # normalizer
+            pltpu.VMEM((bq, hd), F32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, hd)

@@ -1,0 +1,103 @@
+"""Grouped (per-expert) SwiGLU Pallas kernel — megablocks-style MoE compute.
+
+Tokens arrive SORTED by expert (``x: [T, d]``, ``group_sizes: [E]``). The
+wrapper pads each expert's segment to a multiple of the token block so every
+grid block maps to exactly one expert; a scalar-prefetched ``block_expert``
+table then indexes the expert weight tables in the BlockSpec index maps —
+the dense one-hot dispatch einsum (GShard path) is replaced by pure gathers.
+
+This is the TPU-native realization of the paper's deployment claim: after
+MergeMoE halves the expert count, each merged expert's token group DOUBLES,
+so blocks are fuller and fewer — better MXU utilization at identical
+arithmetic (see EXPERIMENTS.md §Perf, MoE serving iteration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(be_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, nf: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=F32)
+    u = jnp.dot(x, wu_ref[0], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jnp.dot(h, wd_ref[0], preferred_element_type=F32)
+
+    @pl.when(j == nf - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f",
+                                             "interpret"))
+def grouped_swiglu(x, wg, wu, wd, group_sizes, block_t: int = 128,
+                   block_f: int = 512, interpret: bool = False):
+    """x: [T, d] sorted by expert; wg/wu: [E, d, f]; wd: [E, f, d];
+    group_sizes: [E] int32 summing to T. Returns [T, d]."""
+    T, d = x.shape
+    E, _, f = wg.shape
+    bt = block_t
+    bf = _block(f, block_f)
+    nf = f // bf
+
+    # ---- pad each expert segment to a multiple of bt (static worst case:
+    # T + E*(bt-1) rows), build block -> expert map + row scatter indices.
+    starts = jnp.cumsum(group_sizes) - group_sizes            # [E]
+    padded_sizes = ((group_sizes + bt - 1) // bt) * bt
+    padded_starts = jnp.cumsum(padded_sizes) - padded_sizes
+    Tp = T + E * (bt - 1)
+    Tp = ((Tp + bt - 1) // bt) * bt
+    nb = Tp // bt
+
+    # destination row for each source row (stable within its expert segment)
+    eid = jnp.searchsorted(starts, jnp.arange(T), side="right") - 1
+    eid = jnp.clip(eid, 0, E - 1)
+    dest = padded_starts[eid] + (jnp.arange(T) - starts[eid])
+    xp = jnp.zeros((Tp, d), x.dtype).at[dest].set(x)
+
+    # block -> expert table (blocks beyond the last padded segment run
+    # expert E-1 on zero rows — harmless, output discarded)
+    block_starts = jnp.arange(nb) * bt
+    block_expert = jnp.clip(
+        jnp.searchsorted(padded_starts, block_starts, side="right") - 1,
+        0, E - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j, be: (i, 0)),
+            pl.BlockSpec((1, d, bf), lambda i, j, be: (be[i], 0, j)),
+            pl.BlockSpec((1, d, bf), lambda i, j, be: (be[i], 0, j)),
+            pl.BlockSpec((1, bf, d), lambda i, j, be: (be[i], j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j, be: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bt, d), F32)],
+    )
+    yp = pl.pallas_call(
+        functools.partial(_kernel, nf=nf),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, d), x.dtype),
+        interpret=interpret,
+    )(block_expert, xp, wg, wu, wd)
+    return yp[dest]

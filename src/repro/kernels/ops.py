@@ -1,0 +1,44 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas implementations run natively; on
+CPU (this container) they run through the jnp oracle by default, while tests
+exercise the kernel bodies via ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def swiglu_mlp(x, wg, wu, wd, interpret: bool = False):
+    if _on_tpu() or interpret:
+        from repro.kernels import swiglu as _k
+        return _k.swiglu_mlp(x, wg, wu, wd, interpret=not _on_tpu())
+    return ref.swiglu_mlp(x, wg, wu, wd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_swiglu(x, wg, wu, wd, group_sizes, interpret: bool = False):
+    if _on_tpu() or interpret:
+        from repro.kernels import grouped_mlp as _k
+        return _k.grouped_swiglu(x, wg, wu, wd, group_sizes,
+                                 interpret=not _on_tpu())
+    return ref.grouped_swiglu(x, wg, wu, wd, group_sizes)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
+    if _on_tpu() or interpret:
+        from repro.kernels import flash_attention as _k
+        return _k.flash_attention(q, k, v, causal=causal,
+                                  interpret=not _on_tpu())
+    return ref.flash_attention(q, k, v, causal=causal)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret-mode
+allclose tests in tests/test_kernels.py) and the fallback implementations on
+backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.numerics import ein, dot as _ndot
+
+F32 = jnp.float32
+
+
+def swiglu_mlp(x: jax.Array, wg: jax.Array, wu: jax.Array,
+               wd: jax.Array) -> jax.Array:
+    """Fused SwiGLU MLP oracle. x: [T, d]; wg/wu: [d, f]; wd: [f, d]."""
+    g = _ndot(x, wg)
+    u = _ndot(x, wu)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return _ndot(h, wd).astype(x.dtype)
+
+
+def grouped_swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+                   group_sizes: jax.Array) -> jax.Array:
+    """Grouped (per-expert) SwiGLU oracle.
+
+    x: [T, d] rows sorted by expert; wg/wu: [E, d, f]; wd: [E, f, d];
+    group_sizes: [E] int32 with sum == T. Row t is processed by expert
+    e(t) = the bucket t falls into.
+    """
+    T = x.shape[0]
+    E = wg.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    eid = jnp.searchsorted(starts, jnp.arange(T), side="right") - 1
+    eid = jnp.clip(eid, 0, E - 1)
+    g = ein("td,tdf->tf", x, wg[eid])
+    u = ein("td,tdf->tf", x, wu[eid])
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return ein("tf,tfd->td", h, wd[eid]).astype(x.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Attention oracle. q/k/v: [B, H, S, hd] (same H; GQA expansion is done
+    by the caller)."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    logits = ein("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        S_q, S_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((S_q, S_k), bool), k=S_k - S_q)
+        logits = jnp.where(mask[None, None], logits, jnp.finfo(F32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return ein("bhqk,bhkd->bhqd", probs, v)

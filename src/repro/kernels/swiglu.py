@@ -1,0 +1,71 @@
+"""Fused SwiGLU MLP Pallas kernel (TPU target, interpret-validated on CPU).
+
+Computes  y = (silu(x @ wg) * (x @ wu)) @ wd  without materializing the
+[T, d_ff] intermediates in HBM: the grid tiles (tokens x d_ff), the hidden
+block lives in VMEM, and the down-projection accumulates into an fp32 VMEM
+scratch that is flushed to the output on the last d_ff block.
+
+Blocking: bt x bf tiles, MXU-aligned (multiples of 128 where shapes allow);
+the fp32 accumulator gives exact f32 accumulation across d_ff blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, nf: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=F32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jnp.dot(h, wd_ref[...], preferred_element_type=F32)
+
+    @pl.when(j == nf - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def swiglu_mlp(x, wg, wu, wd, block_t: int = 256, block_f: int = 512,
+               interpret: bool = False):
+    """x: [T, d]; wg/wu: [d, f]; wd: [f, d] -> [T, d]."""
+    T, d = x.shape
+    f = wg.shape[1]
+    bt = _block(T, block_t)
+    bf = _block(f, block_f)
+    nt, nf = T // bt, f // bf
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nf=nf),
+        grid=(nt, nf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d), F32)],
+        interpret=interpret,
+    )(x, wg, wu, wd)

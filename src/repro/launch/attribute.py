@@ -1,0 +1,116 @@
+"""Collective / traffic attribution for a dry-run cell — the §Perf profiling
+tool (we have no wall-clock TPU profile; the lowered IR is the profile).
+
+    PYTHONPATH=src python -m repro.launch.attribute --arch kimi-k2-1t-a32b \
+        --shape train_4k --top 15
+"""
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("REPRO_TPU_SEMANTICS", "1")
+
+import argparse
+import collections
+import re
+import shutil
+import tempfile
+from pathlib import Path
+
+from repro import configs
+from repro.launch import dryrun as DR
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models.numerics import set_activation_mesh
+
+
+def _mults(hlo, comps):
+    entry = next((n for n in comps
+                  if re.search(r"ENTRY\s+%?" + re.escape(n), hlo)), None)
+    mult = collections.defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(12):
+        ch = False
+        for name, comp in comps.items():
+            if mult[name] <= 0:
+                continue
+            for callee, kind in H._call_edges(comp):
+                if callee not in comps:
+                    continue
+                if kind in ("while_body", "while_cond"):
+                    conds = [c for c, k in H._call_edges(comp)
+                             if k == "while_cond"]
+                    t = max([H._trip_count(comps[c]) for c in conds
+                             if c in comps] or [1])
+                    new = mult[name] * t
+                else:
+                    new = mult[name]
+                if new > mult[callee]:
+                    mult[callee] = new
+                    ch = True
+        if not ch:
+            break
+    return mult
+
+
+def attribute(arch, shape, multi_pod=False, top=15, cfg_override=None,
+              opt_override=None, kind_filter="coll"):
+    cfg = cfg_override if cfg_override is not None else configs.get(arch)
+    sh = configs.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_activation_mesh(mesh)
+    from repro.optim import default_optimizer_for
+    opt = opt_override or default_optimizer_for(cfg.param_count())
+    dump = Path(tempfile.mkdtemp(prefix="attr_"))
+    try:
+        _, compiled, _, _ = DR._lower_compile(
+            cfg, sh["kind"], sh["global_batch"], sh["seq_len"], mesh, opt,
+            dump_dir=dump)
+        hlo = DR._read_spmd_dump(dump)
+    finally:
+        shutil.rmtree(dump, ignore_errors=True)
+        set_activation_mesh(None)
+    comps = H.split_computations(hlo)
+    mult = _mults(hlo, comps)
+    rows = []
+    for name, comp in comps.items():
+        m = mult[name] or 0
+        if m <= 0:
+            continue
+        sym = {i.name: H._shape_bytes(i.type_str) for i in comp.instrs}
+        for ins in comp.instrs:
+            ckind = next((k for k in H._COLL_KINDS
+                          if ins.opcode in (k, k + "-start")), None)
+            if kind_filter == "coll" and not ckind:
+                continue
+            if kind_filter == "traffic" and (
+                    ckind or ins.opcode not in H._TRAFFIC_OPS):
+                continue
+            if ckind:
+                b = H._shape_bytes(ins.type_str) * H._COLL_FACTOR[ckind] * m
+                label = ckind
+            else:
+                b = (H._shape_bytes(ins.type_str)
+                     + H._operand_bytes(ins, sym)) * m
+                label = ins.opcode
+            meta = re.search(r'op_name="([^"]+)"', ins.line)
+            rows.append((b, label, int(m), ins.type_str[:44],
+                         (meta.group(1) if meta else "")[-95:]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total {kind_filter} bytes/dev: {total/2**30:.1f} GiB")
+    for b, label, m, t, meta in rows[:top]:
+        print(f" {b/2**30:9.2f}GiB x{m:3d} {label:18s} {t:44s} {meta}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--kind", default="coll", choices=["coll", "traffic"])
+    args = ap.parse_args()
+    attribute(args.arch, args.shape, args.multi_pod, args.top,
+              kind_filter=args.kind)

@@ -1,0 +1,289 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+os.environ.setdefault("REPRO_TPU_SEMANTICS", "1")   # lower bf16 dots, never executed
+
+"""Multi-pod dry-run: prove the distribution config is coherent for every
+(architecture x input-shape x mesh) cell without real hardware.
+
+Per cell this driver:
+  1. lowers + compiles the PRODUCTION form (scan-over-layers, full depth) on
+     the requested mesh -> memory_analysis (fits?), collective schedule
+     (while-trip-multiplied), compile wall time;
+  2. lowers unrolled 1-layer / 2-layer PROBES -> exact per-layer FLOPs/bytes,
+     extrapolated to full depth (XLA cost_analysis counts loop bodies once,
+     so the scanned module alone under-reports — see hlo_analysis.py);
+  3. emits a JSON record consumed by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis as H
+from repro.launch import input_specs as I
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.models import model as MD
+from repro.optim import make_optimizer, default_optimizer_for
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _probe_layers(cfg):
+    """(L1, L2, n_units): unrolled probe depths + number of repeating units."""
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        return e, 2 * e, cfg.n_layers // e
+    return 1, 2, cfg.n_layers
+
+
+def _probe_cfg(cfg, n_layers):
+    kw = dict(n_layers=n_layers, scan_layers=False, remat="none")
+    if cfg.moe_merged:
+        kw["moe_split"] = 0
+    return cfg.replace(**kw)
+
+
+def _build(cfg, kind, gb, seq, mesh, opt_name):
+    """Returns (jitted_fn, arg_specs tuple) ready to .lower(*arg_specs)."""
+    p_specs = I.params_specs(cfg)
+    p_sh = SH.named(SH.params_pspecs(p_specs, mesh), mesh)
+    if kind == "train":
+        opt = make_optimizer(opt_name)
+        o_specs = jax.eval_shape(opt.init, p_specs)
+        o_sh = SH.named(SH.opt_pspecs(o_specs, mesh), mesh)
+        b_specs = I.train_batch_specs(cfg, gb, seq)
+        b_sh = SH.named(SH.batch_pspecs(b_specs, mesh), mesh)
+        s_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        s_sh = NamedSharding(mesh, P())
+        fn = ST.make_train_step(cfg, opt)
+        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh, s_sh),
+                      out_shardings=(p_sh, o_sh, s_sh, None),
+                      donate_argnums=(0, 1))
+        return jfn, (p_specs, o_specs, b_specs, s_spec)
+    if kind == "prefill":
+        b_specs = I.train_batch_specs(cfg, gb, seq)
+        b_sh = SH.named(SH.batch_pspecs(b_specs, mesh), mesh)
+        fn = ST.make_serve_prefill(cfg)
+        cache_specs = jax.eval_shape(
+            lambda p, b: fn(p, b)[1], p_specs, b_specs)
+        c_sh = SH.named(SH.cache_pspecs(cache_specs, mesh), mesh)
+        l_sh = NamedSharding(mesh, SH.logits_pspec(mesh, (gb, cfg.vocab_size)))
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                      out_shardings=(l_sh, c_sh))
+        return jfn, (p_specs, b_specs)
+    if kind == "decode":
+        cache_specs, tok_spec = I.decode_specs(cfg, gb, seq)
+        c_sh = SH.named(SH.cache_pspecs(cache_specs, mesh), mesh)
+        t_sh = SH.named(SH.batch_pspecs(tok_spec, mesh), mesh)
+        l_sh = NamedSharding(mesh, SH.logits_pspec(mesh, (gb, cfg.vocab_size)))
+        fn = ST.make_serve_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                      out_shardings=(l_sh, c_sh), donate_argnums=(1,))
+        return jfn, (p_specs, cache_specs, tok_spec)
+    raise ValueError(kind)
+
+
+def _lower_compile(cfg, kind, gb, seq, mesh, opt_name, dump_dir=None):
+    jfn, arg_specs = _build(cfg, kind, gb, seq, mesh, opt_name)
+    t0 = time.perf_counter()
+    lowered = jfn.lower(*arg_specs)
+    t_lower = time.perf_counter() - t0
+    opts = None
+    if dump_dir is not None:
+        opts = {"xla_dump_to": str(dump_dir),
+                "xla_dump_hlo_pass_re": "spmd-partitioning"}
+    t0 = time.perf_counter()
+    compiled = lowered.compile(compiler_options=opts) if opts else lowered.compile()
+    t_compile = time.perf_counter() - t0
+    return lowered, compiled, t_lower, t_compile
+
+
+def _read_spmd_dump(dump_dir) -> str:
+    """Pick the post-SPMD, pre-legalization HLO snapshot — TRUE dtypes (the
+    CPU backend later rewrites bf16 dots/collectives to f32, which would
+    double every byte count)."""
+    cands = sorted(Path(dump_dir).glob("*after_spmd-partitioning*.txt"))
+    if not cands:
+        raise FileNotFoundError(f"no post-SPMD dump in {dump_dir}")
+    return max(cands, key=lambda p: p.stat().st_size).read_text()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cfg_override=None, tag: str = "", opt_override=None,
+             skip_probes: bool = True) -> dict:
+    cfg = cfg_override if cfg_override is not None else configs.get(arch)
+    sh = configs.SHAPES[shape_name]
+    kind, gb, seq = sh["kind"], sh["global_batch"], sh["seq_len"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_devices(mesh)
+    opt_name = opt_override or default_optimizer_for(cfg.param_count())
+
+    from repro.models.numerics import set_activation_mesh
+    profile = SH.profile_for(cfg, mesh, gb)
+    SH.set_profile(profile)
+    if profile == "dp_only":
+        set_activation_mesh(mesh, dp=tuple(mesh.axis_names), m=None)
+    else:
+        set_activation_mesh(mesh)
+    rec_profile = profile
+
+    rec = {"arch": arch, "shape": shape_name, "kind": kind,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+           "global_batch": gb, "seq_len": seq, "optimizer": opt_name,
+           "profile": rec_profile, "tag": tag, "ok": False}
+
+    try:
+        # ---- production form: compile + memory + full HLO analysis
+        import shutil
+        import tempfile
+        dump_dir = Path(tempfile.mkdtemp(prefix="spmd_dump_"))
+        lowered, compiled, t_lo, t_co = _lower_compile(
+            cfg, kind, gb, seq, mesh, opt_name, dump_dir=dump_dir)
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = _read_spmd_dump(dump_dir)   # true-dtype post-SPMD module
+        shutil.rmtree(dump_dir, ignore_errors=True)
+        an = H.analyze_module(hlo)        # FLOPs + HBM traffic (true dtypes)
+        # collectives from the FINAL schedule (post AR-folding/RS-creation),
+        # byte sizes dtype-corrected against the dump
+        coll = H.analyze_collectives(
+            compiled.as_text(), H._collective_dtype_reference(hlo))
+        an.coll_bytes = coll.coll_bytes
+        an.coll_by_kind = coll.coll_by_kind
+        an.coll_count = coll.coll_count
+        rec.update({
+            "t_lower_s": round(t_lo, 2), "t_compile_s": round(t_co, 2),
+            "mem_per_dev": {
+                "arguments": int(ma.argument_size_in_bytes),
+                "output": int(ma.output_size_in_bytes),
+                "temp": int(ma.temp_size_in_bytes),
+                "peak": int(ma.peak_memory_in_bytes),
+            },
+            "cost_analysis_raw": {k: float(ca.get(k, 0.0))
+                                  for k in ("flops", "bytes accessed")},
+            "per_dev": {
+                "flops": an.dot_flops,
+                "hbm_bytes": an.traffic_bytes,
+                "hbm_bytes_flash": an.traffic_bytes_flash,
+                "sdpa_bytes": an.sdpa_traffic_bytes,
+                "coll_bytes": an.coll_bytes,
+                "dot_count": an.dot_count,
+            },
+            "collectives_per_dev": {
+                "total_bytes": an.coll_bytes,
+                "by_kind_bytes": an.coll_by_kind,
+                "by_kind_count": an.coll_count,
+            },
+        })
+        rec["roofline"] = H.roofline_terms(an.dot_flops, an.traffic_bytes,
+                                           an.coll_bytes)
+        # useful-FLOPs accounting: 6ND (train) / 2ND (inference)
+        n_active = cfg.param_count(active_only=True)
+        tokens = gb * seq if kind != "decode" else gb
+        mult = {"train": 6, "prefill": 2, "decode": 2}[kind]
+        model_flops = mult * n_active * tokens
+        rec["model_flops_global"] = float(model_flops)
+        rec["hlo_flops_global"] = an.dot_flops * chips
+        rec["useful_flops_ratio"] = (
+            float(model_flops) / max(an.dot_flops * chips, 1.0))
+        rec["ok"] = True
+        del lowered, compiled
+    finally:
+        set_activation_mesh(None)
+        SH.set_profile("2d")
+    return rec
+
+
+def all_cells():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        for shape in configs.SHAPES:
+            yield arch, shape, configs.shape_applicable(cfg, shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true",
+                    help="compile proof + memory only (multi-pod pass)")
+    ap.add_argument("--compressed", default="",
+                    help="M[:split] — dry-run the MergeMoE-compressed "
+                         "variant (M merged experts in layers [split, L))")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch, shape, applicable in all_cells():
+            cells.append((arch, shape, applicable))
+    else:
+        cfg = configs.get(args.arch)
+        cells.append((args.arch, args.shape,
+                      configs.shape_applicable(cfg, args.shape)))
+
+    cfg_override, comp_tag = None, ""
+    if args.compressed:
+        parts = args.compressed.split(":")
+        merged = int(parts[0])
+        split = int(parts[1]) if len(parts) > 1 else 0
+        cfg_override = configs.get(args.arch).compressed(merged, split)
+        comp_tag = f"__compressed{merged}"
+
+    for arch, shape, applicable in cells:
+        mesh_tag = "multipod" if args.multi_pod else "pod"
+        name = f"{configs.canonical(arch)}__{shape}__{mesh_tag}{comp_tag}"
+        path = out_dir / f"{name}.json"
+        if not applicable:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "skipped": "long_500k needs sub-quadratic attention; "
+                              "this arch is pure full-attention (DESIGN.md §5)"}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[skip] {name}")
+            continue
+        print(f"[run ] {name}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            rec = run_cell(arch, shape, args.multi_pod,
+                           cfg_override=cfg_override, tag=comp_tag.strip("_"),
+                           skip_probes=args.skip_probes)
+            rec["t_total_s"] = round(time.perf_counter() - t0, 1)
+            path.write_text(json.dumps(rec, indent=1))
+            r = rec.get("roofline", {})
+            print(f"[ ok ] {name}: peak/dev="
+                  f"{rec['mem_per_dev']['peak']/2**30:.2f}GiB "
+                  f"dominant={r.get('dominant','-')} "
+                  f"({rec['t_total_s']}s)", flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[FAIL] {name}: {type(e).__name__}: {str(e)[:200]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,367 @@
+"""Post-SPMD HLO analysis: MXU FLOPs, HBM traffic, collective traffic.
+
+Why hand-rolled: XLA's ``compiled.cost_analysis()`` on this CPU backend
+(a) counts while-loop bodies ONCE, ignoring trip counts — fatal for
+scan-over-layers models — and (b) reflects CPU fusion decisions. This module
+parses the post-optimization, post-SPMD HLO text directly:
+
+* computations are classified (entry / while body / fused / applied lambda)
+  and given execution MULTIPLIERS from while-loop trip counts (recovered from
+  the loop condition's comparison constant);
+* ``dot`` instructions contribute 2 * |out| * |contraction| FLOPs wherever
+  they appear (including inside fusions — they run on the MXU either way);
+* HBM traffic is counted post-fusion: for every top-level-executed
+  instruction, operand bytes + output bytes (fused computations' internals
+  stay in registers/VMEM and are skipped);
+* collectives contribute link traffic with ring-algorithm factors:
+  all-gather ~ out bytes, all-reduce ~ 2x, reduce-scatter ~ in bytes,
+  all-to-all / collective-permute ~ bytes. Collective buffers are excluded
+  from HBM traffic (they are accounted in the collective term).
+
+All numbers are PER DEVICE (the module is the SPMD-partitioned per-device
+program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*?)\s+([\w\-]+)\(")
+_HDR_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%[\w\.\-]+\s+=")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "iota", "after-all", "partition-id", "replica-id", "domain", "token",
+    "opt-barrier", "copy-start", "copy-done",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims.strip() else []
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    text: str = ""
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        is_header = (stripped.endswith("{") and
+                     not _HDR_ASSIGN_RE.match(line) and
+                     ("(" in line))
+        if is_header:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        cur.text += line + "\n"
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(Instr(im.group(1), im.group(2), im.group(3),
+                                    line))
+    return comps
+
+
+def _call_edges(comp: Computation) -> List[Tuple[str, str]]:
+    """(callee, kind) pairs; kind in {call, while_body, while_cond}."""
+    edges = []
+    for ins in comp.instrs:
+        if ins.opcode == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+            if mb:
+                edges.append((mb.group(1), "while_body"))
+            if mc:
+                edges.append((mc.group(1), "while_cond"))
+        else:
+            for ref in re.findall(r"(?:calls=|to_apply=)%?([\w\.\-]+)",
+                                  ins.line):
+                edges.append((ref, "call"))
+    return edges
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = re.findall(r"s32\[\]\s+constant\((\d+)\)", cond.text)
+    return max((int(c) for c in consts), default=1)
+
+
+@dataclass
+class ModuleAnalysis:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    dot_count: int = 0
+    sdpa_traffic_bytes: float = 0.0   # attention-materialization traffic
+    sdpa_flash_bytes: float = 0.0     # what a fused flash kernel would move
+    notes: List[str] = field(default_factory=list)
+
+    @property
+    def traffic_bytes_flash(self) -> float:
+        """HBM traffic if the Pallas flash-attention kernel replaces the
+        materialized [B,H,S,S] softmax path (reads q,k,v + writes o only)."""
+        return self.traffic_bytes - self.sdpa_traffic_bytes + self.sdpa_flash_bytes
+
+
+# Instruction classes that materialize HBM traffic on TPU (pre-fusion HLO):
+# elementwise chains fuse into their consumers, so only "anchor" ops count.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "sort", "concatenate", "pad",
+    "custom-call", "cholesky", "triangular-solve", "fft", "rng",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",  # collective buffers also touch HBM locally
+}
+
+
+def _collective_dtype_reference(hlo: str) -> Dict[Tuple[str, Tuple[int, ...]], str]:
+    """Map (collective kind, dims) -> dtype from a TRUE-dtype module (the
+    post-SPMD dump), used to undo the CPU backend's bf16->f32 legalization
+    when counting the FINAL schedule."""
+    ref: Dict[Tuple[str, Tuple[int, ...]], str] = {}
+    for m in re.finditer(
+            r"=\s+\(?([a-z0-9]+)\[([\d,]*)\][^\s]*\)?\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", hlo):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        ref.setdefault((m.group(3), dims), m.group(1))
+    return ref
+
+
+def analyze_collectives(schedule_hlo: str,
+                        dtype_ref: Optional[Dict] = None) -> ModuleAnalysis:
+    """Collective accounting on the FINAL optimized module — the real
+    schedule after XLA's all-reduce folding / reduce-scatter creation / CSE
+    (the post-SPMD dump overstates collectives by ~2-5x). Byte sizes are
+    dtype-corrected against ``dtype_ref`` because the CPU backend legalizes
+    bf16 collectives to f32."""
+    comps = split_computations(schedule_hlo)
+    entry = next((n for n in comps
+                  if re.search(r"ENTRY\s+%?" + re.escape(n), schedule_hlo)),
+                 None)
+    mult = _multipliers(comps, entry)[0]
+    out = ModuleAnalysis(coll_by_kind=defaultdict(float),
+                         coll_count=defaultdict(int))
+    for name, comp in comps.items():
+        m = mult[name] if mult[name] > 0 else 0.0
+        if m <= 0:
+            continue
+        for ins in comp.instrs:
+            kind = next((k for k in _COLL_KINDS
+                         if ins.opcode in (k, k + "-start")), None)
+            if not kind:
+                continue
+            b = _shape_bytes(ins.type_str)
+            if dtype_ref is not None:
+                sm = _SHAPE_RE.search(ins.type_str)
+                if sm and sm.group(1) == "f32":
+                    dims = tuple(int(d) for d in sm.group(2).split(",") if d)
+                    if dtype_ref.get((kind, dims)) == "bf16":
+                        b //= 2
+            b = b * _COLL_FACTOR[kind] * m
+            out.coll_bytes += b
+            out.coll_by_kind[kind] += b
+            out.coll_count[kind] += 1
+    out.coll_by_kind = dict(out.coll_by_kind)
+    out.coll_count = dict(out.coll_count)
+    return out
+
+
+def _multipliers(comps, entry):
+    mult: Dict[str, float] = defaultdict(float)
+    toplevel: Dict[str, bool] = defaultdict(bool)
+    if entry:
+        mult[entry] = 1.0
+        toplevel[entry] = True
+    else:
+        for n in comps:
+            mult[n] = 1.0
+            toplevel[n] = True
+    for _ in range(12):
+        changed = False
+        for name, comp in comps.items():
+            if mult[name] <= 0:
+                continue
+            for callee, kind in _call_edges(comp):
+                if callee not in comps:
+                    continue
+                if kind == "while_body":
+                    cond_names = [c for c, k in _call_edges(comp)
+                                  if k == "while_cond"]
+                    trips = 1
+                    for cn in cond_names:
+                        if cn in comps:
+                            trips = max(trips, _trip_count(comps[cn]))
+                    new = mult[name] * trips
+                    top = True
+                elif kind == "while_cond":
+                    new = mult[name] * max(_trip_count(comps[callee]), 1)
+                    top = True
+                else:
+                    new = mult[name]
+                    top = False
+                if new > mult[callee]:
+                    mult[callee] = new
+                    changed = True
+                if top and not toplevel[callee]:
+                    toplevel[callee] = True
+                    changed = True
+        if not changed:
+            break
+    return mult, toplevel
+
+
+def analyze_module(hlo: str) -> ModuleAnalysis:
+    comps = split_computations(hlo)
+    entry = next((n for n in comps
+                  if re.search(r"ENTRY\s+%?" + re.escape(n), hlo)), None)
+    mult, toplevel = _multipliers(comps, entry)
+
+    # ---- per-instruction accounting
+    out = ModuleAnalysis(coll_by_kind=defaultdict(float),
+                         coll_count=defaultdict(int))
+    for name, comp in comps.items():
+        m = mult[name] if mult[name] > 0 else 0.0
+        if m <= 0:
+            continue
+        # symbol table for operand byte lookups
+        sym = {ins.name: _shape_bytes(ins.type_str) for ins in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.opcode
+            in_sdpa = "sdpa" in ins.line  # named_scope tag in metadata
+            if op == "dot":
+                dims_out = _shape_dims(ins.type_str)
+                n_out = 1
+                for d in dims_out:
+                    n_out *= d
+                lhs_m = re.search(r"dot\(%([\w\.\-]+)", ins.line)
+                cdim_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                   ins.line)
+                contract = 1
+                if lhs_m and cdim_m and lhs_m.group(1) in sym:
+                    lhs_ins = next((i for i in comp.instrs
+                                    if i.name == lhs_m.group(1)), None)
+                    if lhs_ins is not None and cdim_m.group(1).strip():
+                        lhs_dims = _shape_dims(lhs_ins.type_str)
+                        for ci in cdim_m.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(lhs_dims):
+                                contract *= lhs_dims[ci]
+                out.dot_flops += 2.0 * n_out * contract * m
+                out.dot_count += 1
+            is_coll = next((k for k in _COLL_KINDS
+                            if op == k or op == k + "-start"), None)
+            if is_coll:
+                b = _shape_bytes(ins.type_str) * _COLL_FACTOR[is_coll] * m
+                out.coll_bytes += b
+                out.coll_by_kind[is_coll] += b
+                out.coll_count[is_coll] += 1
+                continue
+            if op in _SKIP_TRAFFIC or op not in _TRAFFIC_OPS:
+                continue
+            buf_sizes = [_shape_bytes(ins.type_str)]
+            args_m = re.search(re.escape(op) + r"\((.*?)\)", ins.line)
+            if args_m:
+                buf_sizes += [sym.get(r, 0)
+                              for r in re.findall(r"%([\w\.\-]+)",
+                                                  args_m.group(1))]
+            b = sum(buf_sizes) * m
+            out.traffic_bytes += b
+            if in_sdpa:
+                # attention materialization: the [B,H,S,S] logits/probs
+                # buffers dwarf q/k/v/o; a flash kernel only moves the
+                # latter. Classify buffers by relative size.
+                out.sdpa_traffic_bytes += b
+                big = max(buf_sizes) if buf_sizes else 0
+                flash = sum(s for s in buf_sizes if s < 0.25 * big)
+                out.sdpa_flash_bytes += flash * m
+
+    out.coll_by_kind = dict(out.coll_by_kind)
+    out.coll_count = dict(out.coll_count)
+    return out
+
+
+def _operand_bytes(ins: Instr, sym: Dict[str, int]) -> int:
+    args_m = re.search(re.escape(ins.opcode) + r"\((.*?)\)", ins.line)
+    if not args_m:
+        return 0
+    total = 0
+    for ref in re.findall(r"%([\w\.\-]+)", args_m.group(1)):
+        total += sym.get(ref, 0)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e-like target; assignment constants)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    t_c = flops_per_dev / PEAK_FLOPS
+    t_m = bytes_per_dev / HBM_BW
+    t_x = coll_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x, 1e-30)
+    return {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dom,
+        "roofline_fraction": t_c / bound,
+    }

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as MD
+from repro import configs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int) -> Dict:
+    specs = {"tokens": SDS((global_batch, seq_len), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patches"] = SDS(
+            (global_batch, cfg.vlm_num_patches, cfg.d_model), cfg.param_dtype)
+    if cfg.family == "audio":
+        specs["frames"] = SDS(
+            (global_batch, cfg.n_audio_ctx, cfg.d_model), cfg.param_dtype)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, global_batch: int, s_max: int) -> Tuple:
+    """(cache_specs, token_spec) for serve_step lowering."""
+    cache = jax.eval_shape(lambda: MD.init_cache(cfg, global_batch, s_max))
+    token = SDS((global_batch,), jnp.int32)
+    return cache, token
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: MD.init(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(arch: str, shape_name: str) -> Dict:
+    """Assignment entry point: per (arch, shape) cell returns everything the
+    corresponding step function needs, as ShapeDtypeStructs."""
+    cfg = configs.get(arch)
+    sh = configs.SHAPES[shape_name]
+    if not configs.shape_applicable(cfg, shape_name):
+        raise ValueError(
+            f"{arch} x {shape_name}: skipped (full-attention arch on a "
+            "sub-quadratic-only shape; DESIGN.md §5)")
+    gb, seq = sh["global_batch"], sh["seq_len"]
+    if sh["kind"] in ("train", "prefill"):
+        return {"kind": sh["kind"], "cfg": cfg,
+                "batch": train_batch_specs(cfg, gb, seq)}
+    cache, token = decode_specs(cfg, gb, seq)
+    return {"kind": "decode", "cfg": cfg, "cache": cache, "token": token}

@@ -1,0 +1,111 @@
+"""Batched serving driver: continuous-batching-lite.
+
+Requests (prompts) are grouped into fixed-size batches; each batch is
+prefetched through ``prefill`` and decoded with the jitted single-token
+``serve_step``. The same entry points the dry-run lowers at production scale
+run here on CPU with reduced configs. Compressed (MergeMoE) checkpoints serve
+through the identical path — the router remap makes merged experts
+transparent to the decode loop.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as MD
+from repro.models.numerics import set_activation_mesh
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    arch: str = "qwen3-moe-30b-a3b"
+    reduced: bool = True
+    batch_size: int = 4
+    prompt_len: int = 32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, sc: ServeConfig, cfg=None, params=None):
+        self.sc = sc
+        self.cfg = cfg if cfg is not None else (
+            configs.get(sc.arch).reduced() if sc.reduced
+            else configs.get(sc.arch))
+        mesh = make_host_mesh()
+        set_activation_mesh(mesh)
+        self.params = params if params is not None else MD.init(
+            self.cfg, jax.random.PRNGKey(sc.seed))
+        s_max = sc.prompt_len + sc.max_new_tokens
+        self._prefill = jax.jit(ST.make_serve_prefill(self.cfg, s_max=s_max))
+        self._step = jax.jit(ST.make_serve_step(self.cfg))
+
+    def generate(self, prompts: np.ndarray,
+                 extra_batch: Optional[dict] = None) -> np.ndarray:
+        """prompts: [B, prompt_len] int32 -> [B, max_new_tokens] int32."""
+        sc = self.sc
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_batch:
+            batch.update(extra_batch)
+        if self.cfg.family == "audio" and "frames" not in batch:
+            batch["frames"] = jnp.zeros(
+                (prompts.shape[0], self.cfg.n_audio_ctx, self.cfg.d_model),
+                self.cfg.param_dtype)
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        key = jax.random.PRNGKey(sc.seed)
+        for t in range(sc.max_new_tokens):
+            if sc.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / sc.temperature)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            outs.append(np.asarray(tok))
+            logits, cache = self._step(self.params, cache,
+                                       tok.astype(jnp.int32))
+        return np.stack(outs, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    sc = ServeConfig(arch=args.arch, batch_size=args.batch_size,
+                     prompt_len=args.prompt_len,
+                     max_new_tokens=args.max_new_tokens)
+    srv = Server(sc)
+    rng = np.random.default_rng(0)
+    n_batches = -(-args.requests // sc.batch_size)
+    t0 = time.perf_counter()
+    total_tokens = 0
+    for b in range(n_batches):
+        prompts = rng.integers(0, srv.cfg.vocab_size,
+                               size=(sc.batch_size, sc.prompt_len),
+                               dtype=np.int32)
+        out = srv.generate(prompts)
+        total_tokens += out.size
+        print(f"[serve] batch {b}: generated {out.shape} tokens; "
+              f"sample: {out[0][:8].tolist()}")
+    dt = time.perf_counter() - t0
+    print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Path-rule based sharding: params / optimizer state / batches / caches.
+
+Strategy (DESIGN.md §6):
+  * batch DP over ("pod","data"); FSDP weight sharding over "data";
+    Megatron-style TP over "model" (fused head dim / FFN width);
+    expert parallelism = expert dim over "model".
+  * decode KV caches are SEQUENCE-sharded over "model" (flash-decoding
+    style) because several archs have n_kv_heads < 16.
+  * every rule is divisibility-checked against the actual leaf shape; a
+    non-divisible axis entry is dropped (replicated) rather than failing —
+    e.g. vocab=50280 can't split 16 ways, so the embed's vocab dim stays
+    local while d_model still shards.
+
+Rules are ordered; first regex match on the "/"-joined tree path wins.
+Hillclimbing performance = editing RULES (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.launch.mesh import data_axes
+
+# spec templates: "D" -> "data" (FSDP), "M" -> "model" (TP/EP), "DP" -> batch
+# axes (pod+data), None -> replicated. Templates are right-aligned against the
+# leaf's dims (leading stack dims are unsharded).
+RULES: List[Tuple[str, Tuple]] = [
+    # experts: EP over "model", FSDP over d_model. (Sharding f over "data"
+    # instead was tried and REFUTED — it swapped already-CSE'd weight
+    # gathers for larger activation reduce-scatters; §Perf iteration A5.)
+    (r"moe/(wg|wu)$",        ("M", "D", None)),     # [.., E, d@D, f]
+    (r"moe/wd$",             ("M", None, "D")),     # [.., E, f, d@D]
+    (r"moe/router$",         (None, None)),         # tiny, replicated
+    (r"moe/remap$",          (None,)),
+    (r"shared/(wg|wu)$",     ("D", "M")),
+    (r"shared/wd$",          ("M", "D")),
+    # Q/O tensor-parallel over heads; K/V REPLICATED across "model" (GQA has
+    # n_kv_heads < 16 on most archs — replicating the small KV projections
+    # avoids partial-sum all-reduces in attention; Megatron-GQA style).
+    (r"attn/wq$",            ("D", "M")),           # [.., d, H]
+    (r"attn/w[kv]$",         ("D", None)),
+    (r"attn/wo$",            ("M", "D")),           # [.., H, d]
+    (r"attn/bq$",            ("M",)),
+    (r"attn/b[kv]$",         ()),
+    (r"mlp/(wg|wu)$",        ("D", "M")),
+    (r"mlp/wd$",             ("M", "D")),
+    (r"embed/tok$",          ("M", "D")),           # [V, d]
+    (r"embed/head$",         ("D", "M")),           # [d, V]
+    (r"in_proj$",            ("D", None)),          # mamba [.., d, k]
+    (r"out_proj$",           ("M", "D")),           # mamba [.., di, d]
+    (r"conv_w$|conv_b$|A_log$|dt_bias$|norm_scale$|/D$",  ()),
+    (r"ln|scale",            ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# parallelism profile: "2d" (FSDP x TP, default) or "dp_only" (small models:
+# replicate params, batch over EVERY mesh axis — no weight gathers at all;
+# §Perf iteration C2). Selected per model size by profile_for().
+_PROFILE = {"mode": "2d"}
+
+
+def set_profile(mode: str) -> None:
+    _PROFILE["mode"] = mode
+
+
+def profile_for(cfg, mesh=None, global_batch=None) -> str:
+    """Pure DP for sub-1B models when the batch covers every rank; 2-D
+    (FSDP x TP) otherwise."""
+    if cfg.param_count() >= 1e9:
+        return "2d"
+    if mesh is not None and global_batch is not None:
+        total = int(np.prod(list(mesh.shape.values())))
+        if global_batch % total != 0:
+            return "2d"
+    return "dp_only"
+
+
+def _resolve_axis(tok, mesh) -> Optional[Any]:
+    if tok is None:
+        return None
+    names = mesh.axis_names
+    dp_only = _PROFILE["mode"] == "dp_only"
+    if tok == "D":
+        if dp_only:
+            return None
+        return "data" if "data" in names else None
+    if tok == "M":
+        if dp_only:
+            return None
+        return "model" if "model" in names else None
+    if tok == "DP":
+        ax = tuple(names) if dp_only else data_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    return tok
+
+
+def _axis_size(entry, mesh) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _fit_spec(template: Sequence, shape: Tuple[int, ...], mesh) -> P:
+    """Right-align the template with the shape; drop non-divisible axes."""
+    ndim = len(shape)
+    tpl = list(template)
+    if len(tpl) > ndim:
+        tpl = tpl[len(tpl) - ndim:]
+    tpl = [None] * (ndim - len(tpl)) + tpl
+    entries = []
+    for dim, tok in zip(shape, tpl):
+        ax = _resolve_axis(tok, mesh)
+        if ax is not None and dim % _axis_size(ax, mesh) != 0:
+            ax = None                       # replicate instead of failing
+        entries.append(ax)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def params_pspecs(shapes_tree, mesh, rules: Optional[List] = None):
+    """shapes_tree: pytree of ShapeDtypeStruct (or arrays). Returns pspecs."""
+    rules = rules if rules is not None else RULES
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for rx, tpl in rules:
+            if re.search(rx, ps):
+                return _fit_spec(tpl, leaf.shape, mesh)
+        return P()                          # default: replicate
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+# optimizer state paths end with /m /v /vr /vc /_ — the same RULES regexes
+# still match (they anchor on the param name earlier in the path, except the
+# `$`-anchored ones). Strip the trailing state key before matching.
+_STATE_KEYS = ("m", "v", "vr", "vc", "_")
+
+
+def opt_pspecs(opt_shapes_tree, mesh, rules: Optional[List] = None):
+    rules = rules if rules is not None else RULES
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        parts = ps.split("/")
+        if parts and parts[-1] in _STATE_KEYS:
+            ps = "/".join(parts[:-1])
+        for rx, tpl in rules:
+            if re.search(rx, ps):
+                return _fit_spec(tpl, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes_tree)
+
+
+# ---------------------------------------------------------------------------
+# data batches and decode caches
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_shapes, mesh):
+    dp = _resolve_axis("DP", mesh)
+
+    def one(path, leaf):
+        return _fit_spec((dp,) + (None,) * (len(leaf.shape) - 1),
+                         leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_pspecs(cache_shapes, mesh):
+    """Decode caches: batch over DP; KV sequence axis over "model"
+    (flash-decoding); SSM heads over "model"; conv channels over "model".
+    When the batch dim can't shard (e.g. long_500k B=1) the sequence axis
+    additionally takes the "data" axis."""
+    dp = _resolve_axis("DP", mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if ps.endswith("pos"):
+            return P()
+        if ps.endswith("k") or ps.endswith("v"):        # [L, B, S, kv, hd]
+            b_ok = shape[1] % _axis_size(dp, mesh) == 0
+            if b_ok:
+                return _fit_spec((None, dp, "M", None, None), shape, mesh)
+            seq = ("D", "M") if shape[2] % (
+                _axis_size("data", mesh) * _axis_size("model", mesh)) == 0 else "M"
+            tpl = (None, None, seq if isinstance(seq, str) else ("data", "model"),
+                   None, None)
+            return _fit_spec(tpl, shape, mesh)
+        if "ssm" in ps and len(shape) == 5:             # [L, B, nh, hd, state]
+            return _fit_spec((None, dp, "M", None, None), shape, mesh)
+        if "conv" in ps:                                # [L, B, w-1, C]
+            return _fit_spec((None, dp, None, "M"), shape, mesh)
+        if ps.endswith("enc"):                          # [B, na, d]
+            return _fit_spec((dp, None, "M"), shape, mesh)
+        return _fit_spec((dp,) + (None,) * (len(shape) - 1), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def logits_pspec(mesh, shape=None) -> P:
+    if shape is not None:
+        return _fit_spec(("DP", "M"), shape, mesh)
+    dp = _resolve_axis("DP", mesh)
+    return P(dp, "model")
+
+
+def named(tree_pspecs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

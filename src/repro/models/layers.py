@@ -1,0 +1,252 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention (train/prefill/decode),
+SwiGLU MLP. Pure-functional: ``*_init`` builds a param dict, ``*_apply`` runs it.
+
+Precision policy: parameters stored in ``cfg.dtype`` (default bf16); norms and
+softmax run in fp32; matmuls accumulate fp32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.numerics import ein, ein32, dot as _ndot, constrain, bf16_cotangent
+
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape [head_dim // 2], fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=F32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    angles = positions[..., :, None].astype(F32) * inv_freq  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                      # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.param_dtype
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(kq, (d, nq * hd), dt),
+        "wk": _dense_init(kk, (d, nkv * hd), dt),
+        "wv": _dense_init(kv, (d, nkv * hd), dt),
+        "wo": _dense_init(ko, (nq * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jax.Array):
+    B, S, _ = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = ein("bsd,dh->bsh", x, p["wq"])
+    k = ein("bsd,dh->bsh", x, p["wk"])
+    v = ein("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.astype(x.dtype).reshape(B, S, nq, hd)
+    k = k.astype(x.dtype).reshape(B, S, nkv, hd)
+    v = v.astype(x.dtype).reshape(B, S, nkv, hd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q:[B,Sq,nq,hd] k,v:[B,Skv,nkv,hd]; GQA expanded to flat heads so the
+    whole attention computation is head-parallel on the "model" axis (no
+    partial-sum all-reduces). fp32 softmax. The surrounding named_scope lets
+    hlo_analysis attribute these buffers for flash-kernel-adjusted traffic
+    accounting (the Pallas kernel replaces this on real TPUs)."""
+    B, Sq, nq, hd = q.shape
+    with jax.named_scope("sdpa"):
+        q = bf16_cotangent(constrain(q, "DP", None, "M", None))
+        if n_rep > 1:
+            # K/V are replicated across "model" (Megatron-GQA); the repeat is
+            # local and the head constraint slices each device's share.
+            k = jnp.repeat(k, n_rep, axis=2)
+            v = jnp.repeat(v, n_rep, axis=2)
+        k = bf16_cotangent(constrain(k, "DP", None, "M", None))
+        v = bf16_cotangent(constrain(v, "DP", None, "M", None))
+        logits = ein32("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        if mask is not None:
+            logits = jnp.where(mask, logits, jnp.finfo(F32).min)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = ein("bhqk,bkhd->bqhd", probs, v).astype(v.dtype)
+        # pin the attention OUTPUT head-sharded and cut its cotangent to
+        # bf16: the backward then reshards the small [B,S,H,hd] cotangent
+        # instead of dragging S@M sharding into the f32 [B,H,S,S] logits
+        # (which cost ~490 GiB/dev of all-to-all on kimi; §Perf A3)
+        out = bf16_cotangent(constrain(out, "DP", None, "M", None))
+    return out
+
+
+def attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, *, inv_freq,
+               positions=None, causal: bool = True,
+               kv: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross-attention).
+
+    kv: optional encoder output for cross-attention (whisper decoder); when
+    given, keys/values come from ``kv`` and no causal mask is used.
+    """
+    B, S, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if kv is None:
+        q, k, v = _qkv(cfg, p, x)
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        if inv_freq is not None:
+            q = apply_rope(q, positions, inv_freq)
+            k = apply_rope(k, positions, inv_freq)
+        mask = None
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), bool))[None, None, :, :]
+    else:
+        # cross-attention: q from x, k/v from encoder sequence (no RoPE)
+        q, _, _ = _qkv(cfg, p, x)
+        _, k, v = _qkv(cfg, p, kv)
+        mask = None
+    out = _sdpa(q, k, v, mask, n_rep)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+
+
+def attn_prefill(cfg: ModelConfig, p: dict, x: jax.Array, *, inv_freq):
+    """Causal full-sequence attention that also returns the (k, v) to seed a
+    decode cache. Returns (out [B,S,d], k [B,S,nkv,hd], v [B,S,nkv,hd])."""
+    B, S, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x)
+    positions = jnp.arange(S)[None, :]
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    mask = jnp.tril(jnp.ones((S, S), bool))[None, None, :, :]
+    out = _sdpa(q, k, v, mask, n_rep)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+    return out, k, v
+
+
+def attn_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache_k, cache_v,
+                pos: jax.Array, *, inv_freq):
+    """Single-token decode with a KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, nkv, hd]; pos: scalar int32 (current
+    length). Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    S_max = cache_k.shape[1]
+    valid = (jnp.arange(S_max) <= pos)[None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, valid, n_rep)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(d_model: int, d_ff: int, dtype, key) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(kg, (d_model, d_ff), dtype),
+        "wu": _dense_init(ku, (d_model, d_ff), dtype),
+        "wd": _dense_init(kd, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = ein("...d,df->...f", x, p["wg"])
+    u = ein("...d,df->...f", x, p["wu"])
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return ein("...f,fd->...d", h, p["wd"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(cfg: ModelConfig, key) -> dict:
+    ke, kh = jax.random.split(key)
+    dt = cfg.param_dtype
+    p = {"tok": _dense_init(ke, (cfg.vocab_size, cfg.d_model), dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(kh, (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def embed_apply(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_head(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = ein32("...d,vd->...v", x, p["tok"])
+    else:
+        logits = ein32("...d,dv->...v", x, p["head"])
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits

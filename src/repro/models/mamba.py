@@ -1,0 +1,234 @@
+"""Mamba2 (State Space Duality) block — chunked prefill + O(1)-state decode.
+
+Follows the SSD formulation (arXiv:2405.21060): within-chunk quadratic
+(attention-like) term + cross-chunk linear recurrence carried by lax.scan.
+All state math in fp32; projections in model dtype.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.numerics import ein, dot as _ndot
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+F32 = jnp.float32
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array    # [B, H, hd, d_state] fp32
+    conv: jax.Array   # [B, conv_width-1, conv_channels]
+
+
+def mamba_init(cfg: ModelConfig, key) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    conv_ch = di + 2 * gn
+    dt = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1]
+    u = jax.random.uniform(k3, (nh,), F32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": _dense_init(k1, (d, 2 * di + 2 * gn + nh), dt),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch), F32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=F32)),
+        "D": jnp.ones((nh,), F32),
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": _dense_init(k1, (di, d), dt),
+    }
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xBC: [B, S, C]; w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=F32)
+    for i in range(W):
+        out = out + pad[:, i:i + xBC.shape[1], :].astype(F32) * w[i].astype(F32)
+    return jax.nn.silu(out + b.astype(F32)).astype(xBC.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < m <= i} x[..., m]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD scan.
+
+    x:  [b, s, h, p]   (dt-weighted inputs applied inside)
+    dt: [b, s, h]      (post-softplus)
+    A:  [h]            (negative reals)
+    Bm, Cm: [b, s, g, n]; heads are grouped g -> h//g heads per group.
+    Returns (y [b, s, h, p], final_state [b, h, p, n]).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    nc = s // chunk
+    # reshape to chunks
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, g, n)
+    Cc = Cm.reshape(b, nc, chunk, g, n)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)                  # [b,nc,l,h,n]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc.astype(F32) * A                          # [b,nc,l,h], negative
+    dA_cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic) term
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 2, -1)))     # [b,nc,h,l,l]
+    att = ein("bclhn,bcmhn,bchlm->bchlm", Ch.astype(F32), Bh.astype(F32), L)
+    xdt = xc.astype(F32) * dtc[..., None].astype(F32)  # dt-weighted input
+    y_intra = ein("bchlm,bcmhp->bclhp", att, xdt)
+
+    # ---- per-chunk final states
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # [b,nc,l,h]
+    states = ein("bclhn,bclh,bclhp->bchpn",
+                        Bh.astype(F32), decay_to_end * dtc.astype(F32),
+                        xc.astype(F32))                      # [b,nc,h,p,n]
+
+    # ---- inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # [b,nc,h]
+    s0 = (jnp.zeros((b, h, p, n), F32) if init_state is None
+          else init_state.astype(F32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                     # [b,h,p,n], [b,h]
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev                       # emit state BEFORE this chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,nc,h,p,n]
+
+    # ---- inter-chunk contribution
+    in_decay = jnp.exp(dA_cum)                               # decay from chunk start
+    y_inter = ein("bclhn,bclh,bchpn->bclhp",
+                         Ch.astype(F32), in_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                init_state: SSMState | None = None,
+                return_state: bool = False):
+    """Full-sequence forward. x: [B, S, d]."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.d_state
+    B_, S, _ = x.shape
+
+    zxbcdt = ein("bsd,dk->bsk", x, p["in_proj"]).astype(x.dtype)
+    z, xin, BC, dt_raw = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * gn], axis=-1)
+    xBC = jnp.concatenate([xin, BC], axis=-1)
+    if init_state is not None:
+        full = jnp.concatenate([init_state.conv.astype(xBC.dtype), xBC], axis=1)
+        xBC = _causal_conv(full, p["conv_w"], p["conv_b"])[:, s.conv_width - 1:]
+    else:
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xin, Bm, Cm = jnp.split(xBC, [di, di + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"])          # [B,S,nh]
+    A = -jnp.exp(p["A_log"])                                         # [nh]
+    xh = xin.reshape(B_, S, nh, s.head_dim)
+    Bm = Bm.reshape(B_, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, S, s.n_groups, s.d_state)
+
+    # pad sequence to a chunk multiple
+    pad = (-S) % s.chunk_size
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    y, fin = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk_size,
+                          None if init_state is None else init_state.ssm)
+    y = y[:, :S]
+    y = y + xin.reshape(B_, S, nh, s.head_dim).astype(F32) * p["D"][:, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+
+    # gated RMSNorm + out projection
+    gated = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(gated * gated, axis=-1, keepdims=True)
+    gated = gated * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"].astype(F32)
+    out = ein("bsk,kd->bsd", gated.astype(x.dtype), p["out_proj"]).astype(x.dtype)
+    if return_state:
+        # conv tail needs raw (pre-activation) xBC channels; recompute cheaply
+        zxbcdt_tail = zxbcdt[:, -(s.conv_width - 1):]
+        tail = jnp.concatenate(
+            [zxbcdt_tail[..., di:2 * di], zxbcdt_tail[..., 2 * di:2 * di + 2 * gn]],
+            axis=-1)
+        return out, SSMState(ssm=fin, conv=tail)
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: SSMState):
+    """Single-token decode. x: [B, 1, d]; state carries ssm + conv tails."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.d_state
+
+    zxbcdt = ein("bsd,dk->bsk", x, p["in_proj"]).astype(x.dtype)
+    z, xin_raw, BC_raw, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + 2 * gn], axis=-1)
+    xBC_raw = jnp.concatenate([xin_raw, BC_raw], axis=-1)    # [B,1,C]
+
+    # conv over (state.conv ++ new step)
+    window = jnp.concatenate([state.conv.astype(xBC_raw.dtype), xBC_raw], axis=1)
+    w, b = p["conv_w"], p["conv_b"]
+    conv_out = ein("bwc,wc->bc", window.astype(F32), w.astype(F32))
+    xBC = jax.nn.silu(conv_out + b.astype(F32)).astype(x.dtype)[:, None, :]
+    new_conv = window[:, 1:]
+
+    xin, Bm, Cm = jnp.split(xBC, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(F32) + p["dt_bias"])   # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                             # [B,nh]
+
+    xh = xin.reshape(-1, nh, s.head_dim).astype(F32)                # [B,nh,hd]
+    Bh = jnp.repeat(Bm.reshape(-1, s.n_groups, s.d_state),
+                    nh // s.n_groups, axis=1).astype(F32)           # [B,nh,n]
+    Ch = jnp.repeat(Cm.reshape(-1, s.n_groups, s.d_state),
+                    nh // s.n_groups, axis=1).astype(F32)
+
+    new_ssm = (state.ssm * a[..., None, None]
+               + ein("bh,bhp,bhn->bhpn", dt, xh, Bh))
+    y = ein("bhpn,bhn->bhp", new_ssm, Ch) + xh * p["D"][:, None]
+    y = y.reshape(-1, 1, di)
+
+    gated = y * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(gated * gated, axis=-1, keepdims=True)
+    gated = gated * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"].astype(F32)
+    out = ein("bsk,kd->bsd", gated.astype(x.dtype), p["out_proj"]).astype(x.dtype)
+    return out, SSMState(ssm=new_ssm, conv=new_conv)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.d_state
+    return SSMState(
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), F32),
+        conv=jnp.zeros((batch, s.conv_width - 1, di + 2 * gn), cfg.param_dtype),
+    )

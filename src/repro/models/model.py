@@ -1,0 +1,313 @@
+"""Unified model API over all families.
+
+Pure functions:
+  init(cfg, rng)                          -> params pytree
+  forward(cfg, params, batch, capture)    -> (logits, aux_loss, captures)
+  loss(cfg, params, batch)                -> (scalar, metrics dict)
+  init_cache(cfg, batch_size, s_max)      -> decode cache pytree
+  prefill(cfg, params, batch)             -> (last-token logits, cache)
+  decode_step(cfg, params, cache, token)  -> (logits, cache)
+
+Batch keys by family:
+  dense/moe/ssm/hybrid : tokens [B, S] int32
+  vlm                  : tokens [B, S], patches [B, P, d_model]
+  audio                : frames [B, n_audio_ctx, d_model], tokens [B, S]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.numerics import ein, dot as _ndot, constrain, bf16_cotangent
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import mamba as S
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, rng) -> dict:
+    k_emb, k_stack = jax.random.split(rng)
+    params: Dict[str, Any] = {"embed": L.embed_init(cfg, k_emb)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.moe is not None and cfg.moe_merged:
+            k_a, k_b = jax.random.split(k_stack)
+            if cfg.moe_split > 0:
+                params["stack"] = T.stack_init(cfg, k_a,
+                                               n_layers=cfg.moe_split)
+            params["stack_c"] = T.stack_init(
+                cfg, k_b, n_layers=cfg.n_layers - cfg.moe_split,
+                n_real=cfg.moe_merged)
+        else:
+            params["stack"] = T.stack_init(cfg, k_stack)
+    elif cfg.family == "ssm":
+        params["ssm_ln"] = jax.vmap(
+            lambda k: L.rmsnorm_init(cfg.d_model, cfg.param_dtype))(
+                jax.random.split(k_stack, cfg.n_layers))
+        params["ssm"] = jax.vmap(lambda k: S.mamba_init(cfg, k))(
+            jax.random.split(k_stack, cfg.n_layers))
+    elif cfg.family == "hybrid":
+        params["hybrid"] = T.hybrid_init(cfg, k_stack)
+    elif cfg.family == "audio":
+        params["encdec"] = T.encdec_init(cfg, k_stack)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    params["final_ln"] = L.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# SSM stack helpers
+# ---------------------------------------------------------------------------
+
+def _ssm_stack(cfg, params, x, return_states: bool):
+    def body(h, xs):
+        ln, mp = xs
+        if return_states:
+            out, st = S.mamba_apply(cfg, mp, L.rmsnorm(ln, h, cfg.norm_eps),
+                                    return_state=True)
+            return bf16_cotangent(constrain(h + out, "DP", "M", None)), st
+        out = S.mamba_apply(cfg, mp, L.rmsnorm(ln, h, cfg.norm_eps))
+        return bf16_cotangent(constrain(h + out, "DP", "M", None)), None
+
+    body = T._maybe_remat(cfg, body)
+    return jax.lax.scan(body, x, (params["ssm_ln"], params["ssm"]))
+
+
+def _ssm_stack_decode(cfg, params, x, states: S.SSMState):
+    def body(h, xs):
+        ln, mp, st = xs
+        out, st = S.mamba_decode(cfg, mp, L.rmsnorm(ln, h, cfg.norm_eps), st)
+        return h + out, st
+
+    return jax.lax.scan(body, x, (params["ssm_ln"], params["ssm"], states))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            capture: bool = False):
+    """Returns (logits [B, S_out, V], aux_loss scalar, captures or None)."""
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    aux = jnp.zeros((), F32)
+    caps = None
+
+    if cfg.family == "audio":
+        enc_out = T.encode(cfg, params["encdec"], batch["frames"])
+        x = constrain(L.embed_apply(params["embed"], batch["tokens"]),
+                      "DP", None, None)
+        x = T.decode_stack_apply(cfg, params["encdec"], x, enc_out,
+                                 inv_freq=inv_freq)
+    else:
+        x = constrain(L.embed_apply(params["embed"], batch["tokens"]),
+                      "DP", None, None)
+        if cfg.family == "vlm" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            x = constrain(x, "DP", None, None)
+        if cfg.family in ("dense", "moe", "vlm"):
+            caps_list = []
+            if "stack" in params:
+                x, aux, caps = T.stack_apply(cfg, params["stack"], x,
+                                             inv_freq=inv_freq, capture=capture)
+                caps_list.append(caps)
+            if "stack_c" in params:
+                x, aux2, caps2 = T.stack_apply(cfg, params["stack_c"], x,
+                                               inv_freq=inv_freq,
+                                               capture=capture)
+                aux = aux + aux2
+                caps_list.append(caps2)
+            if capture and len(caps_list) > 1:
+                caps = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *caps_list)
+            elif capture:
+                caps = caps_list[0]
+        elif cfg.family == "ssm":
+            x, _ = _ssm_stack(cfg, params, x, return_states=False)
+        elif cfg.family == "hybrid":
+            x = T.hybrid_apply(cfg, params["hybrid"], x, inv_freq=inv_freq)
+        if cfg.family == "vlm" and "patches" in batch:
+            x = x[:, batch["patches"].shape[1]:]   # predictions on text only
+
+    x = bf16_cotangent(constrain(x, "DP", None, None))
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = constrain(L.lm_head(cfg, params["embed"], x), "DP", None, "M")
+    return logits, aux, caps
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict) -> Tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux, _ = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(F32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(targets, F32))
+    mask = mask.astype(F32) if mask.shape == targets.shape else jnp.ones_like(targets, F32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    aux_coef = cfg.moe.aux_loss_coef if cfg.moe is not None else 0.0
+    total = ce + aux_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, s_max: int) -> dict:
+    dt = cfg.param_dtype
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        shape = (cfg.n_layers, batch_size, s_max, cfg.n_kv_heads, cfg.hd)
+        cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                 "pos": jnp.zeros((), jnp.int32)}
+        if cfg.family == "audio":
+            cache["enc"] = jnp.zeros((batch_size, cfg.n_audio_ctx, cfg.d_model), dt)
+        return cache
+    if cfg.family == "ssm":
+        st = S.init_ssm_state(cfg, batch_size)
+        return {"ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st),
+            "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        st = S.init_ssm_state(cfg, batch_size)
+        nseg = cfg.n_layers // cfg.hybrid_attn_every
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st),
+            "k": jnp.zeros((nseg, batch_size, s_max, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((nseg, batch_size, s_max, cfg.n_kv_heads, cfg.hd), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def _pad_kv(cache: dict, s_max: int) -> dict:
+    """Grow prefilled KV caches along the sequence axis to ``s_max`` so
+    subsequent decode steps have slots to write into."""
+    def pad(a):
+        extra = s_max - a.shape[2]
+        if extra <= 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[2] = (0, extra)
+        return jnp.pad(a, widths)
+    out = dict(cache)
+    for key in ("k", "v"):
+        if key in out:
+            out[key] = pad(out[key])
+    return out
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            s_max: int | None = None):
+    """Process the prompt; returns (last-position logits [B, V], cache).
+
+    ``s_max``: total cache capacity (prompt + generation budget). Defaults to
+    the prompt length (no decode headroom)."""
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    tokens = batch["tokens"]
+    S_len = tokens.shape[1]
+
+    if cfg.family == "audio":
+        enc_out = T.encode(cfg, params["encdec"], batch["frames"])
+        x = L.embed_apply(params["embed"], tokens)
+        # prefill the decoder self-attn cache by scanning with kv emission
+        def body(h, layer_p):
+            hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            a, k, v = L.attn_prefill(cfg, layer_p["self_attn"], hn,
+                                     inv_freq=inv_freq)
+            h = h + a
+            c = L.attn_apply(cfg, layer_p["cross_attn"],
+                             L.rmsnorm(layer_p["ln_x"], h, cfg.norm_eps),
+                             inv_freq=None, kv=enc_out)
+            h = h + c
+            h = h + L.mlp_apply(layer_p["mlp"],
+                                L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps))
+            return h, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, params["encdec"]["dec"])
+        cache = {"k": ks, "v": vs, "enc": enc_out,
+                 "pos": jnp.asarray(S_len, jnp.int32)}
+    elif cfg.family in ("dense", "moe", "vlm"):
+        x = L.embed_apply(params["embed"], tokens)
+        if cfg.family == "vlm" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        ks_l, vs_l = [], []
+        for key in ("stack", "stack_c"):
+            if key in params:
+                x, ks, vs = T.stack_prefill(cfg, params[key], x,
+                                            inv_freq=inv_freq)
+                ks_l.append(ks)
+                vs_l.append(vs)
+        ks = jnp.concatenate(ks_l, axis=0) if len(ks_l) > 1 else ks_l[0]
+        vs = jnp.concatenate(vs_l, axis=0) if len(vs_l) > 1 else vs_l[0]
+        cache = {"k": ks, "v": vs, "pos": jnp.asarray(x.shape[1], jnp.int32)}
+    elif cfg.family == "ssm":
+        x = L.embed_apply(params["embed"], tokens)
+        x, states = _ssm_stack(cfg, params, x, return_states=True)
+        cache = {"ssm": states, "pos": jnp.asarray(S_len, jnp.int32)}
+    elif cfg.family == "hybrid":
+        x = L.embed_apply(params["embed"], tokens)
+        x, cache = T.hybrid_prefill(cfg, params["hybrid"], x, inv_freq=inv_freq)
+        cache["pos"] = jnp.asarray(S_len, jnp.int32)
+    else:
+        raise ValueError(cfg.family)
+
+    if s_max is not None:
+        cache = _pad_kv(cache, s_max)
+    x = L.rmsnorm(params["final_ln"], x[:, -1:], cfg.norm_eps)
+    logits = L.lm_head(cfg, params["embed"], x)[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
+    """One decode step. token: [B] int32. Returns (logits [B, V], cache)."""
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    x = L.embed_apply(params["embed"], token[:, None])
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if "stack_c" in params and "stack" in params:
+            split = cfg.moe_split
+            x, nk1, nv1 = T.stack_decode(cfg, params["stack"], x,
+                                         cache["k"][:split], cache["v"][:split],
+                                         pos, inv_freq=inv_freq)
+            x, nk2, nv2 = T.stack_decode(cfg, params["stack_c"], x,
+                                         cache["k"][split:], cache["v"][split:],
+                                         pos, inv_freq=inv_freq)
+            nk = jnp.concatenate([nk1, nk2], axis=0)
+            nv = jnp.concatenate([nv1, nv2], axis=0)
+        else:
+            stack = params.get("stack", params.get("stack_c"))
+            x, nk, nv = T.stack_decode(cfg, stack, x,
+                                       cache["k"], cache["v"], pos,
+                                       inv_freq=inv_freq)
+        new_cache = {"k": nk, "v": nv, "pos": pos + 1}
+    elif cfg.family == "audio":
+        x, nk, nv = T.decode_stack_step(cfg, params["encdec"], x, cache["enc"],
+                                        cache["k"], cache["v"], pos,
+                                        inv_freq=inv_freq)
+        new_cache = {"k": nk, "v": nv, "enc": cache["enc"], "pos": pos + 1}
+    elif cfg.family == "ssm":
+        x, states = _ssm_stack_decode(cfg, params, x, cache["ssm"])
+        new_cache = {"ssm": states, "pos": pos + 1}
+    elif cfg.family == "hybrid":
+        x, nc = T.hybrid_decode(cfg, params["hybrid"], x, cache, pos,
+                                inv_freq=inv_freq)
+        nc["pos"] = pos + 1
+        new_cache = nc
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = L.lm_head(cfg, params["embed"], x)[:, 0]
+    return logits, new_cache

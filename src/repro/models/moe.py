@@ -1,0 +1,243 @@
+"""Mixture-of-Experts layer.
+
+Two dispatch paths:
+
+* ``dense``  — GShard/GSPMD-style capacity-based one-hot dispatch. Static
+  shapes, partitions cleanly under pjit (tokens on the ``data`` axis, experts
+  on the ``model`` axis -> XLA inserts the all-to-all). Used by train/dry-run.
+* ``ragged`` — sort-by-expert grouped matmul (single-device / serving path;
+  the Pallas grouped-matmul kernel plugs in here).
+
+Compressed (merged) models keep the ORIGINAL router ``[d, N]`` and add an
+int32 ``remap`` table ``[N] -> [M]`` (the paper's matrix ``A``, stored as the
+index form); expert tables then hold ``M`` merged experts. This reproduces the
+paper's implicit-A trick (App. B) with an XLA-friendly gather.
+
+Calibration capture: ``moe_apply(..., capture=True)`` additionally returns
+the expert-input activations and per-expert usage counts that
+``repro.core`` consumes to build the merge.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.numerics import ein, ein32, dot as _ndot, constrain
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, mlp_init, mlp_apply
+
+F32 = jnp.float32
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array                       # [B, S, d]
+    aux_loss: jax.Array                # scalar load-balance loss
+    # capture (zeros-shaped when capture=False to keep pytree static)
+    expert_inputs: Optional[jax.Array]   # [B, S, d] inputs fed to experts
+    usage_counts: Optional[jax.Array]    # [N] how often each ORIGINAL expert was picked
+    topk_idx: Optional[jax.Array]        # [B, S, k] original-expert indices
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def moe_init(cfg: ModelConfig, key, n_real: int | None = None) -> dict:
+    """n_real: number of physically stored experts (M after MergeMoE
+    compression); router/remap always span the ORIGINAL n_experts."""
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    R = n_real or E
+    dt = cfg.param_dtype
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(kr, (d, E), F32),  # router kept fp32 (tiny)
+        "wg": _dense_init(kg, (R, d, f), dt),
+        "wu": _dense_init(ku, (R, d, f), dt),
+        "wd": _dense_init(kd, (R, f, d), dt),
+        # identity remap = uncompressed; [N]->[M] after merging.
+        "remap": jnp.arange(E, dtype=jnp.int32) % R,
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(d, m.n_shared_experts * f, dt, ks)
+    return p
+
+
+def n_real_experts(p: dict) -> int:
+    """Number of physically stored experts (M after compression, else N)."""
+    return p["wg"].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def _topk_iterative(probs: jax.Array, k: int):
+    """Partition-friendly top-k: k argmax/mask passes (elementwise over the
+    token dims, so GSPMD never gathers the token axis — lax.top_k lowers to a
+    variadic sort that forced [B,S,E] all-gathers; §Perf iteration A1)."""
+    E = probs.shape[-1]
+    ws, ids = [], []
+    cur = probs
+    iota = jax.lax.broadcasted_iota(jnp.int32, probs.shape, probs.ndim - 1)
+    for _ in range(k):
+        w = jnp.max(cur, axis=-1)
+        i = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        ws.append(w)
+        ids.append(i)
+        cur = jnp.where(iota == i[..., None], -jnp.inf, cur)
+    return jnp.stack(ws, axis=-1), jnp.stack(ids, axis=-1)
+
+
+def route(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Returns (topk_weights [.., k] fp32, topk_idx [.., k] int32 in ORIGINAL
+    expert space, probs [.., N])."""
+    m = cfg.moe
+    logits = ein32("...d,de->...e", x.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = _topk_iterative(probs, m.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)  # renormalize among top-k
+    return w, idx, probs
+
+
+def balance_loss(cfg: ModelConfig, probs: jax.Array, idx: jax.Array) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss over ORIGINAL experts."""
+    E = cfg.moe.n_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)                      # mean prob
+    sel = jax.nn.one_hot(idx.reshape(-1, cfg.moe.top_k), E, dtype=F32)
+    ce = jnp.mean(jnp.sum(sel, axis=1), axis=0)                      # tokens/expert
+    return E * jnp.sum(me * ce) / cfg.moe.top_k
+
+
+# ---------------------------------------------------------------------------
+# dense (capacity) dispatch — GShard style, group-local
+# ---------------------------------------------------------------------------
+
+def _capacity(m, G: int, E: int) -> int:
+    c = int(m.top_k * G * m.capacity_factor / E)
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def _dispatch_tensors(cfg: ModelConfig, w, idx, E: int, C: int):
+    """Build combine [G, E, C] fp32 and dispatch [G, E, C] bool per group.
+
+    w, idx: [G, k]. Tokens beyond capacity are dropped (standard GShard).
+    """
+    m = cfg.moe
+    G = w.shape[0]
+    counts = jnp.zeros((E,), jnp.int32)
+    combine = jnp.zeros((G, E, C), F32)
+    for j in range(m.top_k):
+        mj = jax.nn.one_hot(idx[:, j], E, dtype=jnp.int32)           # [G, E]
+        loc = jnp.cumsum(mj, axis=0) - mj + counts[None, :]          # position
+        counts = counts + jnp.sum(mj, axis=0)
+        keep = (loc < C) & (mj > 0)
+        slot = jax.nn.one_hot(jnp.where(keep, loc, C), C, dtype=F32)  # OOB -> 0
+        combine = combine + w[:, j, None, None] * mj[..., None] * slot
+    dispatch = combine > 0.0
+    return combine, dispatch
+
+
+def _moe_dense_groups(cfg: ModelConfig, p: dict, x2: jax.Array, w, idx):
+    """x2: [n_groups, G, d]; w/idx: [n_groups, G, k] (idx already remapped to
+    REAL experts). Returns [n_groups, G, d]."""
+    m = cfg.moe
+    E = n_real_experts(p)
+    G = x2.shape[1]
+    # capacity sized by REAL expert count: merged experts absorb their whole
+    # cluster's traffic, so per-expert slots scale up as N/M automatically.
+    C = _capacity(m, G, E)
+
+    combine, dispatch = jax.vmap(
+        lambda wg, ig: _dispatch_tensors(cfg, wg, ig, E, C))(w, idx)
+
+    dt = x2.dtype
+    # dispatched tokens: groups stay on the batch axes, experts go to "model"
+    # (expert parallelism; GSPMD realizes the reshard as an all-to-all)
+    xe = ein("gtec,gtd->gecd", dispatch.astype(dt), x2).astype(dt)           # [g,E,C,d]
+    xe = constrain(xe, "DP", "M", None, None)
+    h_g = ein("gecd,edf->gecf", xe, p["wg"])
+    h_u = ein("gecd,edf->gecf", xe, p["wu"])
+    h = (jax.nn.silu(h_g) * h_u).astype(dt)
+    ye = ein("gecf,efd->gecd", h, p["wd"]).astype(dt)           # [g,E,C,d]
+    ye = constrain(ye, "DP", "M", None, None)
+    y = ein("gtec,gecd->gtd", combine.astype(dt), ye).astype(dt)
+    # NOTE: deliberately unconstrained — the combine contraction is partial
+    # over the expert ("model") axis, and the caller's sequence-parallel
+    # residual constraint pulls a reduce-scatter through here. An explicit
+    # replicated-token constraint at this point forced a 2x-cost all-reduce
+    # (§Perf iteration A2).
+    return y
+
+
+# ---------------------------------------------------------------------------
+# ragged (sort-based) dispatch — serving / kernel path
+# ---------------------------------------------------------------------------
+
+def _moe_ragged(cfg: ModelConfig, p: dict, xf: jax.Array, w, idx):
+    """xf: [T, d]; w/idx: [T, k] (idx in REAL expert space). Dropless."""
+    m = cfg.moe
+    E = n_real_experts(p)
+    T, d = xf.shape
+    k = m.top_k
+    flat_idx = idx.reshape(-1)                       # [T*k]
+    order = jnp.argsort(flat_idx)
+    tok_of = order // k                              # source token per slot
+    xs = jnp.take(xf, tok_of, axis=0)                # [T*k, d] sorted by expert
+    group_sizes = jnp.bincount(flat_idx, length=E).astype(jnp.int32)
+
+    from repro.kernels import ops as kops
+    ys = kops.grouped_swiglu(xs, p["wg"], p["wu"], p["wd"], group_sizes)
+
+    wf = w.reshape(-1)[order].astype(F32)            # weight per sorted slot
+    out = jnp.zeros((T, d), F32).at[tok_of].add(ys.astype(F32) * wf[:, None])
+    return out.astype(xf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+              capture: bool = False) -> MoEOutput:
+    """x: [B, S, d] (or [B, 1, d] for decode)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    w, idx, probs = route(cfg, p, x)
+    aux = balance_loss(cfg, probs, idx)
+    ridx = jnp.take(p["remap"], idx)                 # original -> real experts
+
+    T = B * S
+    xf = x.reshape(T, d)
+    wf = w.reshape(T, m.top_k)
+    rf = ridx.reshape(T, m.top_k)
+
+    if m.dispatch == "ragged":
+        y = _moe_ragged(cfg, p, xf, wf, rf)
+    else:
+        G = min(m.group_size, T)
+        n_groups = -(-T // G)
+        pad = n_groups * G - T
+        if pad:
+            xf = jnp.pad(xf, ((0, pad), (0, 0)))
+            wf = jnp.pad(wf, ((0, pad), (0, 0)))
+            rf = jnp.pad(rf, ((0, pad), (0, 0)))
+        y = _moe_dense_groups(cfg, p,
+                              xf.reshape(n_groups, G, d),
+                              wf.reshape(n_groups, G, m.top_k),
+                              rf.reshape(n_groups, G, m.top_k))
+        y = y.reshape(n_groups * G, d)[:T]
+
+    y = y.reshape(B, S, d)
+    if m.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x)
+
+    if capture:
+        counts = jnp.sum(
+            jax.nn.one_hot(idx.reshape(-1, m.top_k), m.n_experts, dtype=F32),
+            axis=(0, 1))
+        return MoEOutput(y, aux, x, counts, idx)
+    return MoEOutput(y, aux, None, None, None)

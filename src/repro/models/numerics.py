@@ -1,0 +1,130 @@
+"""Precision helpers.
+
+TPU target semantics: bf16 operands, fp32 accumulation via
+``preferred_element_type``. This container's CPU XLA build cannot *execute*
+``BF16 x BF16 = F32`` dots, so when real values flow on CPU we upcast the
+operands instead (numerically identical or better; CPU perf is irrelevant).
+
+``REPRO_TPU_SEMANTICS=1`` forces the TPU form — used by the dry-run, which
+only lowers/compiles and never executes, so the roofline byte counts reflect
+the real bf16 program rather than fp32-upcast copies.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def tpu_semantics() -> bool:
+    if os.environ.get("REPRO_TPU_SEMANTICS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def ein(eq: str, *args):
+    """Projection einsum. TPU: bf16 operands/outputs (the MXU accumulates
+    fp32 internally; bf16 output buffers keep activation-cotangent collectives
+    and HBM traffic at half size). CPU execution: fp32 upcast (this backend
+    cannot execute bf16 dots), result cast back to the operands' dtype."""
+    if tpu_semantics():
+        return jnp.einsum(eq, *args)
+    out_dtype = jnp.result_type(*args)
+    out = jnp.einsum(eq, *[a.astype(F32) for a in args])
+    return out.astype(out_dtype)
+
+
+@jax.custom_vjp
+def bf16_cotangent(x):
+    """Identity whose BACKWARD casts the cotangent to bf16.
+
+    Placed after the LM head and at sharding boundaries so fp32 loss-side
+    gradients don't propagate fp32 activation cotangents through the whole
+    stack (halves backward collective + HBM traffic; standard
+    mixed-precision training practice)."""
+    return x
+
+
+def _bf16_ct_fwd(x):
+    return x, None
+
+
+def _bf16_ct_bwd(_, g):
+    # primal is always bf16 where this barrier is applied; the incoming
+    # cotangent may have been promoted to f32 upstream.
+    return (g.astype(jnp.bfloat16),)
+
+
+bf16_cotangent.defvjp(_bf16_ct_fwd, _bf16_ct_bwd)
+
+
+def ein32(eq: str, *args):
+    """einsum with an fp32 OUTPUT buffer — for precision-critical results
+    (attention logits pre-softmax, router logits, LM-head logits)."""
+    if tpu_semantics():
+        return jnp.einsum(eq, *args, preferred_element_type=F32)
+    return jnp.einsum(eq, *[a.astype(F32) for a in args])
+
+
+def dot(a, b):
+    if tpu_semantics():
+        return jnp.dot(a, b, preferred_element_type=F32)
+    return jnp.dot(a.astype(F32), b.astype(F32))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+# ---------------------------------------------------------------------------
+# The launcher installs the active mesh here; model code then pins activation
+# shardings at block boundaries via ``constrain`` so GSPMD never floats a
+# batch-replicated intermediate (e.g. the embedding one-hot matmul).
+_ACT = {"mesh": None, "dp": None, "m": "model"}
+
+
+def set_activation_mesh(mesh, dp=None, m="model") -> None:
+    """dp: explicit batch axes tuple (default: pod+data). m: the tensor-
+    parallel axis name, or None for pure-DP profiles (small models)."""
+    _ACT["mesh"] = mesh
+    _ACT["dp"] = dp
+    _ACT["m"] = m
+
+
+def constrain(x, *spec_entries):
+    """Apply with_sharding_constraint if a mesh is installed.
+
+    spec_entries use tokens: "DP" (pod+data batch axes), "D", "M", None.
+    Entries are right-padded with None to x.ndim; non-divisible entries are
+    dropped.
+    """
+    mesh = _ACT["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    names = mesh.axis_names
+    entries = []
+    for dim, tok in zip(x.shape, list(spec_entries) + [None] * (x.ndim - len(spec_entries))):
+        if tok == "DP":
+            ax = _ACT["dp"] or (tuple(a for a in ("pod", "data")
+                                      if a in names) or None)
+            if isinstance(ax, tuple) and len(ax) == 1:
+                ax = ax[0]
+        elif tok == "D":
+            ax = "data" if "data" in names else None
+        elif tok == "M":
+            ax = _ACT["m"] if (_ACT["m"] and _ACT["m"] in names) else None
+        else:
+            ax = tok
+        if ax is not None:
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            # uneven sharding is allowed (GSPMD pads) as long as every shard
+            # is non-empty; drop only when the dim is smaller than the axis.
+            if dim < size:
+                ax = None
+        entries.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

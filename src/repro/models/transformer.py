@@ -1,0 +1,359 @@
+"""Layer stacks: decoder-only (dense/MoE/VLM), hybrid (Mamba2 + shared attn),
+and encoder-decoder (whisper-style). All homogeneous stacks run under
+``jax.lax.scan`` over stacked layer params so HLO size / compile time stay
+bounded at 512 simulated devices; ``cfg.remat`` optionally rematerializes each
+block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.numerics import constrain, bf16_cotangent
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import mamba as S
+
+F32 = jnp.float32
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _stack_init(init_fn, n: int, key):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# decoder-only block (dense MLP or MoE)
+# ---------------------------------------------------------------------------
+
+def block_init(cfg: ModelConfig, key, n_real: int | None = None) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": L.attn_init(cfg, k1),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = M.moe_init(cfg, k2, n_real=n_real)
+    else:
+        p["mlp"] = L.mlp_init(cfg.d_model, cfg.d_ff, cfg.param_dtype, k2)
+    return p
+
+
+def block_apply(cfg: ModelConfig, p: dict, x, *, inv_freq, positions=None,
+                causal=True, capture=False):
+    """Returns (y, aux_loss, capture_tuple_or_None).
+
+    Sub-block outputs are constrained to the sequence-parallel layout BEFORE
+    the residual add so the row-parallel projections' partial sums lower to
+    reduce-scatter (not all-reduce + slice) — Megatron-SP."""
+    a = L.attn_apply(cfg, p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                     inv_freq=inv_freq, positions=positions, causal=causal)
+    h = x + constrain(a, "DP", "M", None)
+    hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.moe is not None:
+        out = M.moe_apply(cfg, p["moe"], hn, capture=capture)
+        cap = (out.expert_inputs, out.usage_counts) if capture else None
+        return h + constrain(out.y, "DP", "M", None), out.aux_loss, cap
+    return h + constrain(L.mlp_apply(p["mlp"], hn), "DP", "M", None), \
+        jnp.zeros((), F32), None
+
+
+def stack_init(cfg: ModelConfig, key, n_layers: int | None = None,
+               n_real: int | None = None) -> dict:
+    n = cfg.n_layers if n_layers is None else n_layers
+    return _stack_init(lambda k: block_init(cfg, k, n_real=n_real), n, key)
+
+
+def stack_apply(cfg: ModelConfig, stacked: dict, x, *, inv_freq,
+                capture=False):
+    """Scan the decoder-only stack. Returns (y, total_aux, captures)."""
+    def body(carry, layer_p):
+        h, aux = carry
+        y, a, cap = block_apply(cfg, layer_p, h, inv_freq=inv_freq,
+                                capture=capture)
+        y = bf16_cotangent(constrain(y, "DP", "M", None))  # Megatron-SP residual
+        return (y, aux + a), cap
+
+    body = _maybe_remat(cfg, body)
+    if cfg.scan_layers:
+        (y, aux), caps = jax.lax.scan(body, (x, jnp.zeros((), F32)), stacked)
+    else:
+        caps_list, carry = [], (x, jnp.zeros((), F32))
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a: a[i], stacked)
+            carry, cap = body(carry, layer_p)
+            caps_list.append(cap)
+        y, aux = carry
+        caps = (jax.tree.map(lambda *xs: jnp.stack(xs), *caps_list)
+                if capture and cfg.moe is not None else None)
+    return y, aux, caps
+
+
+def stack_decode(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v, pos,
+                 *, inv_freq):
+    """One-token decode through the scanned stack.
+
+    cache_k/v: [L, B, S_max, nkv, hd]. Returns (y, new_k, new_v)."""
+    def body(h, xs):
+        layer_p, ck, cv = xs
+        hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+        a, ck, cv = L.attn_decode(cfg, layer_p["attn"], hn, ck, cv, pos,
+                                  inv_freq=inv_freq)
+        h = h + a
+        hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+        if cfg.moe is not None:
+            out = M.moe_apply(cfg, layer_p["moe"], hn)
+            h = h + out.y
+        else:
+            h = h + L.mlp_apply(layer_p["mlp"], hn)
+        return h, (ck, cv)
+
+    y, (nk, nv) = jax.lax.scan(body, x, (stacked, cache_k, cache_v))
+    return y, nk, nv
+
+
+def stack_prefill(cfg: ModelConfig, stacked: dict, x, *, inv_freq):
+    """Full-sequence forward that also emits per-layer (k, v) decode caches.
+    Returns (y, cache_k [L,B,S,nkv,hd], cache_v)."""
+    def body(carry, layer_p):
+        h = carry
+        hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+        a, k, v = L.attn_prefill(cfg, layer_p["attn"], hn, inv_freq=inv_freq)
+        h = h + a
+        hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+        if cfg.moe is not None:
+            h = h + constrain(M.moe_apply(cfg, layer_p["moe"], hn).y,
+                              "DP", "M", None)
+        else:
+            h = h + constrain(L.mlp_apply(layer_p["mlp"], hn),
+                              "DP", "M", None)
+        return bf16_cotangent(constrain(h, "DP", "M", None)), (k, v)
+
+    body = _maybe_remat(cfg, body)
+    y, (ks, vs) = jax.lax.scan(body, x, stacked)
+    return y, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# hybrid stack (zamba2): mamba blocks + ONE shared attn+MLP block every k
+# ---------------------------------------------------------------------------
+
+def hybrid_init(cfg: ModelConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mamba_ln": _stack_init(
+            lambda k: L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            cfg.n_layers, k1),
+        "mamba": _stack_init(lambda k: S.mamba_init(cfg, k), cfg.n_layers, k1),
+        "shared_ln1": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "shared_attn": L.attn_init(cfg, k2),
+        "shared_ln2": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "shared_mlp": L.mlp_init(cfg.d_model, cfg.d_ff, cfg.param_dtype, k3),
+    }
+
+
+def _n_segments(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def hybrid_apply(cfg: ModelConfig, p: dict, x, *, inv_freq):
+    every = cfg.hybrid_attn_every
+    nseg = _n_segments(cfg)
+
+    def mamba_body(h, xs):
+        ln, mp = xs
+        h = h + S.mamba_apply(cfg, mp, L.rmsnorm(ln, h, cfg.norm_eps))
+        return bf16_cotangent(constrain(h, "DP", "M", None)), None
+
+    mamba_body = _maybe_remat(cfg, mamba_body)
+    seg_params = jax.tree.map(
+        lambda a: a.reshape((nseg, every) + a.shape[1:]), (p["mamba_ln"], p["mamba"]))
+
+    for s_i in range(nseg):
+        xs = jax.tree.map(lambda a: a[s_i], seg_params)
+        x, _ = jax.lax.scan(mamba_body, x, xs)
+        # shared transformer block (weights shared across segments)
+        h = x + L.attn_apply(cfg, p["shared_attn"],
+                             L.rmsnorm(p["shared_ln1"], x, cfg.norm_eps),
+                             inv_freq=inv_freq)
+        x = h + L.mlp_apply(p["shared_mlp"],
+                            L.rmsnorm(p["shared_ln2"], h, cfg.norm_eps))
+    return x
+
+
+def hybrid_prefill(cfg: ModelConfig, p: dict, x, *, inv_freq):
+    """Full-sequence forward emitting the decode cache (per-layer SSM states +
+    per-segment shared-attn KV)."""
+    every = cfg.hybrid_attn_every
+    nseg = _n_segments(cfg)
+
+    def mamba_body(h, xs):
+        ln, mp = xs
+        out, st = S.mamba_apply(cfg, mp, L.rmsnorm(ln, h, cfg.norm_eps),
+                                return_state=True)
+        return constrain(h + out, "DP", "M", None), st
+
+    seg_params = jax.tree.map(
+        lambda a: a.reshape((nseg, every) + a.shape[1:]),
+        (p["mamba_ln"], p["mamba"]))
+
+    ssm_states, ks, vs = [], [], []
+    for s_i in range(nseg):
+        xs = jax.tree.map(lambda a: a[s_i], seg_params)
+        x, sts = jax.lax.scan(mamba_body, x, xs)
+        ssm_states.append(sts)
+        hn = L.rmsnorm(p["shared_ln1"], x, cfg.norm_eps)
+        a, k, v = L.attn_prefill(cfg, p["shared_attn"], hn, inv_freq=inv_freq)
+        x = x + a
+        x = x + L.mlp_apply(p["shared_mlp"],
+                            L.rmsnorm(p["shared_ln2"], x, cfg.norm_eps))
+        ks.append(k)
+        vs.append(v)
+    cache = {
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *ssm_states),
+        "k": jnp.stack(ks),
+        "v": jnp.stack(vs),
+    }
+    return x, cache
+
+
+def hybrid_decode(cfg: ModelConfig, p: dict, x, cache, pos, *, inv_freq):
+    """cache: {"ssm": SSMState stacked [L,...], "k"/"v": [nseg, B, S, nkv, hd]}"""
+    every = cfg.hybrid_attn_every
+    nseg = _n_segments(cfg)
+    new_ssm, new_k, new_v = [], [], []
+    for s_i in range(nseg):
+        for j in range(every):
+            li = s_i * every + j
+            ln = jax.tree.map(lambda a: a[li], p["mamba_ln"])
+            mp = jax.tree.map(lambda a: a[li], p["mamba"])
+            st = jax.tree.map(lambda a: a[li], cache["ssm"])
+            out, st = S.mamba_decode(cfg, mp, L.rmsnorm(ln, x, cfg.norm_eps), st)
+            x = x + out
+            new_ssm.append(st)
+        hn = L.rmsnorm(p["shared_ln1"], x, cfg.norm_eps)
+        a, ck, cv = L.attn_decode(cfg, p["shared_attn"], hn,
+                                  cache["k"][s_i], cache["v"][s_i], pos,
+                                  inv_freq=inv_freq)
+        x = x + a
+        x = x + L.mlp_apply(p["shared_mlp"],
+                            L.rmsnorm(p["shared_ln2"], x, cfg.norm_eps))
+        new_k.append(ck)
+        new_v.append(cv)
+    new_cache = {
+        "ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm),
+        "k": jnp.stack(new_k),
+        "v": jnp.stack(new_v),
+    }
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper-style)
+# ---------------------------------------------------------------------------
+
+def encdec_init(cfg: ModelConfig, key) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+
+    def enc_block(k):
+        ka, kb = jax.random.split(k)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": L.attn_init(cfg, ka),
+            "ln2": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mlp": L.mlp_init(cfg.d_model, cfg.d_ff, cfg.param_dtype, kb),
+        }
+
+    def dec_block(k):
+        ka, kb, kc = jax.random.split(k, 3)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "self_attn": L.attn_init(cfg, ka),
+            "ln_x": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "cross_attn": L.attn_init(cfg, kb),
+            "ln2": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mlp": L.mlp_init(cfg.d_model, cfg.d_ff, cfg.param_dtype, kc),
+        }
+
+    return {
+        "enc": _stack_init(enc_block, cfg.n_layers, k1),
+        "enc_ln": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "dec": _stack_init(dec_block, cfg.n_layers, k2),
+    }
+
+
+def _sinusoid(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=F32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=F32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(cfg: ModelConfig, p: dict, frames: jax.Array) -> jax.Array:
+    """frames: [B, n_audio_ctx, d] precomputed frame embeddings (conv stub)."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(h, layer_p):
+        a = L.attn_apply(cfg, layer_p["attn"],
+                         L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                         inv_freq=None, causal=False)
+        h = h + a
+        h = h + L.mlp_apply(layer_p["mlp"],
+                            L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps))
+        return bf16_cotangent(constrain(h, "DP", "M", None)), None
+
+    body = _maybe_remat(cfg, body)
+    x, _ = jax.lax.scan(body, x, p["enc"])
+    return L.rmsnorm(p["enc_ln"], x, cfg.norm_eps)
+
+
+def decode_stack_apply(cfg: ModelConfig, p: dict, x, enc_out, *, inv_freq):
+    def body(h, layer_p):
+        a = L.attn_apply(cfg, layer_p["self_attn"],
+                         L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                         inv_freq=inv_freq, causal=True)
+        h = h + a
+        c = L.attn_apply(cfg, layer_p["cross_attn"],
+                         L.rmsnorm(layer_p["ln_x"], h, cfg.norm_eps),
+                         inv_freq=None, kv=enc_out)
+        h = h + c
+        h = h + L.mlp_apply(layer_p["mlp"],
+                            L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps))
+        return bf16_cotangent(constrain(h, "DP", "M", None)), None
+
+    body = _maybe_remat(cfg, body)
+    y, _ = jax.lax.scan(body, x, p["dec"])
+    return y
+
+
+def decode_stack_step(cfg: ModelConfig, p: dict, x, enc_out, cache_k, cache_v,
+                      pos, *, inv_freq):
+    def body(h, xs):
+        layer_p, ck, cv = xs
+        hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+        a, ck, cv = L.attn_decode(cfg, layer_p["self_attn"], hn, ck, cv, pos,
+                                  inv_freq=inv_freq)
+        h = h + a
+        c = L.attn_apply(cfg, layer_p["cross_attn"],
+                         L.rmsnorm(layer_p["ln_x"], h, cfg.norm_eps),
+                         inv_freq=None, kv=enc_out)
+        h = h + c
+        h = h + L.mlp_apply(layer_p["mlp"],
+                            L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps))
+        return h, (ck, cv)
+
+    y, (nk, nv) = jax.lax.scan(body, x, (p["dec"], cache_k, cache_v))
+    return y, nk, nv

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, adafactor, sgd, apply_updates, global_norm,
+    cosine_schedule, make_optimizer, default_optimizer_for)

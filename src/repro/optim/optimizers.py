@@ -1,0 +1,192 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+* ``adamw``     — default below ~100B params. States m, v mirror params.
+* ``adafactor`` — factored second moment for the ≥100B configs (qwen1.5-110b,
+  kimi-k2): states are O(sum of dims), not O(params), which is what makes
+  trillion-parameter training fit the production mesh (DESIGN.md §6).
+* global-norm clipping + cosine schedule built in via ``make_optimizer``.
+
+State pytrees mirror the param tree structure (each param leaf maps to a dict
+of state leaves), so the sharding rules for params transfer mechanically —
+see launch/sharding.py::opt_state_pspecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _diffable(p) -> bool:
+    return jnp.issubdtype(jnp.asarray(p).dtype, jnp.floating)
+
+
+def _is_float0(g) -> bool:
+    return getattr(g, "dtype", None) == jax.dtypes.float0
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]  # (grads, state, params, step) -> (new_params, new_state)
+    state_factored: bool = False
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32)))
+              for x in jax.tree.leaves(tree) if not _is_float0(x)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x if _is_float0(x) else x * scale, grads)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(F32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def apply_updates(params, updates):
+    def one(p, u):
+        if u is None or _is_float0(u) or not _diffable(p):
+            return p    # non-differentiable leaves (e.g. MoE remap tables)
+        return (p.astype(F32) + u).astype(p.dtype)
+    return jax.tree.map(one, params, updates)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr=1e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm=1.0, schedule=None) -> Optimizer:
+    lr_fn = schedule or (lambda step: jnp.asarray(lr, F32))
+
+    def init(params):
+        def one(p):
+            if not _diffable(p):
+                return {"na": jnp.zeros((), F32)}
+            return {"m": jnp.zeros(p.shape, F32),
+                    "v": jnp.zeros(p.shape, F32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        grads = _clip(grads, max_grad_norm)
+        t = step.astype(F32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, s, p):
+            if _is_float0(g) or not _diffable(p):
+                return jnp.zeros((), F32), s
+            g = g.astype(F32)
+            m = b1 * s["m"] + (1 - b1) * g
+            v = b2 * s["v"] + (1 - b2) * g * g
+            u = -lr_t * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                         + weight_decay * p.astype(F32))
+            return u, {"m": m, "v": v}
+
+        flat = jax.tree.map(upd, grads, state, params,
+                            is_leaf=lambda x: isinstance(x, dict) and ("m" in x or "na" in x))
+        updates = jax.tree.map(lambda t2: t2[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t2: t2[1], flat,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    return Optimizer(init, update, state_factored=False)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              max_grad_norm=1.0, schedule=None) -> Optimizer:
+    lr_fn = schedule or (lambda step: jnp.asarray(lr, F32))
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def one(p):
+            if not _diffable(p):
+                return {"na": jnp.zeros((), F32)}
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], F32),          # row
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros(p.shape, F32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        grads = _clip(grads, max_grad_norm)
+        t = step.astype(F32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            if _is_float0(g) or not _diffable(p):
+                return jnp.zeros((), F32), s
+            g = g.astype(F32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (Adafactor's RMS-based trust ratio)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, new_s
+
+        flat = jax.tree.map(upd, grads, state, params,
+                            is_leaf=lambda x: isinstance(x, dict) and
+                            ("v" in x or "vr" in x or "na" in x))
+        updates = jax.tree.map(lambda t2: t2[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t2: t2[1], flat,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    return Optimizer(init, update, state_factored=True)
+
+
+def sgd(lr=1e-2, max_grad_norm=0.0) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: {"_": jnp.zeros((), F32)}, params)
+
+    def update(grads, state, params, step):
+        grads = _clip(grads, max_grad_norm)
+        return jax.tree.map(lambda g: -lr * g.astype(F32), grads), state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name](**kw)
+
+
+def default_optimizer_for(param_count: int) -> str:
+    """≥100B params -> factored states (DESIGN.md §6 memory plan)."""
+    return "adafactor" if param_count >= 100e9 else "adamw"

@@ -1,0 +1,10 @@
+"""Tests run with the DEFAULT single CPU device (the dry-run's 512-device
+XLA flag must never leak here)."""
+import os
+
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""), "tests must not inherit the dry-run device flag"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,49 @@
+"""Compressed-variant configs at FULL scale (abstract shapes only — this is
+what the --compressed dry-run lowers)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core.errors import TechniqueInapplicable
+from repro.models import model as MD
+
+
+def test_kimi_compressed_param_shapes():
+    cfg = configs.get("kimi-k2-1t-a32b").compressed(192, 0)
+    specs = jax.eval_shape(lambda: MD.init(cfg, jax.random.PRNGKey(0)))
+    moe = specs["stack_c"]["moe"]
+    assert moe["wg"].shape == (61, 192, 7168, 2048)
+    assert moe["remap"].shape == (61, 384)          # router space unchanged
+    assert moe["router"].shape == (61, 7168, 384)
+    assert "stack" not in specs                     # split=0: all compressed
+
+
+def test_qwen3_paper_split_shapes():
+    """Paper App. C.2: layers 28-47 merged 128 -> 64."""
+    cfg = configs.get("qwen3-moe-30b-a3b").compressed(64, 28)
+    specs = jax.eval_shape(lambda: MD.init(cfg, jax.random.PRNGKey(0)))
+    assert specs["stack"]["moe"]["wg"].shape == (28, 128, 2048, 768)
+    assert specs["stack_c"]["moe"]["wg"].shape == (20, 64, 2048, 768)
+
+
+def test_compressed_bytes_reduction():
+    full = configs.get("kimi-k2-1t-a32b")
+    comp = full.compressed(192, 0)
+
+    def nbytes(cfg):
+        specs = jax.eval_shape(lambda: MD.init(cfg, jax.random.PRNGKey(0)))
+        return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(specs))
+
+    ratio = nbytes(full) / nbytes(comp)
+    assert 1.8 < ratio < 2.1        # experts dominate a 1T MoE
+
+
+def test_compressed_on_dense_raises():
+    with pytest.raises(TechniqueInapplicable):
+        configs.get("yi-34b").compressed(4)
+
+
+def test_default_split_is_suffix():
+    cfg = configs.get("qwen3-moe-30b-a3b").compressed(64)
+    assert cfg.moe_split == int(48 * 0.6)

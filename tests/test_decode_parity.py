@@ -1,0 +1,69 @@
+"""Prefill + single-token decode must reproduce the full forward pass —
+for every architecture family (KV cache, SSM state, hybrid, enc-dec)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as MD
+
+B, S = 2, 16
+
+
+def _cfg(arch):
+    cfg = configs.get(arch).reduced()
+    if cfg.moe is not None:
+        # headroom so capacity dropping can't cause (expected) mismatches
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=4.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = _cfg(arch)
+    params = MD.init(cfg, jax.random.PRNGKey(1))
+    rng = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.n_audio_ctx, cfg.d_model)).astype(cfg.param_dtype)
+
+    full, _, _ = MD.forward(cfg, params, batch)
+
+    pre = dict(batch)
+    pre["tokens"] = tokens[:, :S - 2]
+    plogits, cache = MD.prefill(cfg, params, pre, s_max=S + 2)
+    np.testing.assert_allclose(
+        np.asarray(plogits, np.float32),
+        np.asarray(full[:, S - 3], np.float32), atol=0.08, rtol=0.05)
+
+    # two decode steps
+    for t in (S - 2, S - 1):
+        dlogits, cache = MD.decode_step(cfg, params, cache, tokens[:, t])
+        np.testing.assert_allclose(
+            np.asarray(dlogits, np.float32),
+            np.asarray(full[:, t], np.float32), atol=0.08, rtol=0.05)
+
+
+def test_cache_pos_advances():
+    cfg = _cfg("granite-8b")
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, 4), 0,
+                                cfg.vocab_size)
+    _, cache = MD.prefill(cfg, params, {"tokens": tokens}, s_max=8)
+    assert int(cache["pos"]) == 4
+    _, cache = MD.decode_step(cfg, params, cache, tokens[:, 0])
+    assert int(cache["pos"]) == 5
+
+
+def test_init_cache_shapes():
+    cfg = _cfg("zamba2-2.7b")
+    cache = MD.init_cache(cfg, batch_size=3, s_max=64)
+    nseg = cfg.n_layers // cfg.hybrid_attn_every
+    assert cache["k"].shape == (nseg, 3, 64, cfg.n_kv_heads, cfg.hd)
+    assert cache["ssm"].ssm.shape[0] == cfg.n_layers

@@ -1,0 +1,74 @@
+"""Fault-tolerance substrate: gradient compression, straggler policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import (ef_compressed, quantize, dequantize,
+                               StragglerMonitor)
+from repro.optim import sgd, adamw, apply_updates
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((64, 64)) * 3.0, jnp.float32)
+    q, scale = quantize(g, jax.random.PRNGKey(0))
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize(q, scale) - g))
+    assert err.max() <= float(scale) * 1.01   # within one quantization step
+
+
+def test_ef_compression_converges_like_uncompressed():
+    """Error feedback: the quantization bias cancels over steps."""
+    target = jnp.asarray([1.0, -2.0, 0.5, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    def run(opt, steps=300):
+        params = {"w": jnp.zeros(4)}
+        state = opt.init(params)
+        for i in range(steps):
+            g = jax.grad(loss)(params)
+            u, state = opt.update(g, state, params, jnp.asarray(i))
+            params = apply_updates(params, u)
+        return float(loss(params))
+
+    base = run(sgd(lr=0.1))
+    comp = run(ef_compressed(sgd(lr=0.1)))
+    assert comp < 1e-3 and base < 1e-6
+    # and with adamw
+    comp2 = run(ef_compressed(adamw(lr=3e-2)), steps=400)
+    assert comp2 < 1e-2
+
+
+def test_ef_residual_state_present():
+    opt = ef_compressed(sgd(lr=0.1))
+    params = {"w": jnp.zeros((3, 3))}
+    st = opt.init(params)
+    assert "ef" in st and st["ef"]["w"].shape == (3, 3)
+
+
+def test_straggler_monitor_flags_and_restart():
+    mon = StragglerMonitor(window=20, threshold=2.0, patience=3, warmup=3)
+    for _ in range(10):
+        rep = mon.observe(0.1)
+        assert not rep.is_straggler
+    r = mon.observe(0.5)
+    assert r.is_straggler and not r.should_restart
+    mon.observe(0.5)
+    r = mon.observe(0.5)
+    assert r.should_restart
+    # recovery resets the counter
+    r = mon.observe(0.1)
+    assert r.consecutive == 0 and not r.should_restart
+
+
+def test_straggler_median_not_poisoned():
+    mon = StragglerMonitor(window=10, threshold=2.0, patience=100, warmup=3)
+    for _ in range(5):
+        mon.observe(0.1)
+    for _ in range(5):
+        mon.observe(10.0)   # all flagged; median must stay ~0.1
+    r = mon.observe(0.1)
+    assert not r.is_straggler

@@ -1,0 +1,183 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles in
+repro.kernels.ref — shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels import swiglu as K_swiglu
+from repro.kernels import flash_attention as K_fa
+from repro.kernels import grouped_mlp as K_gm
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+def _randn(shape, dtype, scale=0.5):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused SwiGLU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,d,f,bt,bf", [
+    (32, 16, 32, 8, 8),
+    (64, 32, 48, 16, 16),
+    (128, 64, 64, 128, 64),   # single block each way
+    (48, 24, 96, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swiglu_shapes(T, d, f, bt, bf, dtype):
+    x = _randn((T, d), dtype)
+    wg, wu = _randn((d, f), dtype, 0.2), _randn((d, f), dtype, 0.2)
+    wd = _randn((f, d), dtype, 0.2)
+    y = K_swiglu.swiglu_mlp(x, wg, wu, wd, block_t=bt, block_f=bf,
+                            interpret=True)
+    yr = ref.swiglu_mlp(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.sampled_from([16, 40, 64]), d=st.sampled_from([8, 24]),
+       f=st.sampled_from([16, 48]), bt=st.sampled_from([8, 16]))
+def test_swiglu_property(T, d, f, bt):
+    x = _randn((T, d), jnp.float32)
+    wg, wu = _randn((d, f), jnp.float32, 0.2), _randn((d, f), jnp.float32, 0.2)
+    wd = _randn((f, d), jnp.float32, 0.2)
+    y = K_swiglu.swiglu_mlp(x, wg, wu, wd, block_t=bt, block_f=16,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(
+        ref.swiglu_mlp(x, wg, wu, wd)), atol=1e-4, rtol=1e-4)
+
+
+def test_swiglu_zero_weights_give_zero():
+    x = _randn((16, 8), jnp.float32)
+    z = jnp.zeros((8, 16), jnp.float32)
+    zd = jnp.zeros((16, 8), jnp.float32)
+    y = K_swiglu.swiglu_mlp(x, z, z, zd, block_t=8, block_f=8, interpret=True)
+    assert float(jnp.abs(y).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,hd,bq,bk", [
+    (1, 1, 32, 8, 8, 8),
+    (2, 3, 64, 16, 16, 16),
+    (1, 2, 128, 32, 64, 32),
+    (2, 1, 96, 16, 32, 16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, S, hd, bq, bk, causal, dtype):
+    q, k, v = (_randn((B, H, S, hd), dtype) for _ in range(3))
+    o = K_fa.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                             interpret=True)
+    orf = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **_tol(dtype))
+
+
+def test_flash_cross_attention_rect():
+    """Sq != Skv (non-causal cross attention)."""
+    q = _randn((1, 2, 32, 16), jnp.float32)
+    k = _randn((1, 2, 64, 16), jnp.float32)
+    v = _randn((1, 2, 64, 16), jnp.float32)
+    o = K_fa.flash_attention(q, k, v, causal=False, block_q=16, block_k=16,
+                             interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(ref.flash_attention(q, k, v, causal=False)),
+        atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.sampled_from([16, 48, 80]), hd=st.sampled_from([8, 16]),
+       causal=st.booleans())
+def test_flash_property(S, hd, causal):
+    q, k, v = (_randn((1, 2, S, hd), jnp.float32) for _ in range(3))
+    o = K_fa.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16,
+                             interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(ref.flash_attention(q, k, v, causal=causal)),
+        atol=1e-4, rtol=1e-4)
+
+
+def test_flash_softmax_invariance():
+    """Attention output is invariant to adding a constant to all logits —
+    equivalently to scaling q by 0: output becomes mean of v rows (causal
+    prefix mean). Checks the online-softmax normalizer."""
+    B, H, S, hd = 1, 1, 32, 8
+    q = jnp.zeros((B, H, S, hd), jnp.float32)
+    k = _randn((B, H, S, hd), jnp.float32)
+    v = _randn((B, H, S, hd), jnp.float32)
+    o = K_fa.flash_attention(q, k, v, causal=True, block_q=8, block_k=8,
+                             interpret=True)
+    expect = jnp.cumsum(v[0, 0], axis=0) / jnp.arange(1, S + 1)[:, None]
+    np.testing.assert_allclose(np.asarray(o[0, 0]), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped (MoE) SwiGLU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes", [
+    [10, 0, 37, 17],        # empty group
+    [64],                   # single expert
+    [1, 1, 1, 1, 60],       # tiny + dominant groups
+    [16, 16, 16, 16],       # block-aligned
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_swiglu(sizes, dtype):
+    d, f = 24, 32
+    E = len(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    T = int(gs.sum())
+    x = _randn((T, d), dtype)
+    wg, wu = _randn((E, d, f), dtype, 0.2), _randn((E, d, f), dtype, 0.2)
+    wd = _randn((E, f, d), dtype, 0.2)
+    y = K_gm.grouped_swiglu(x, wg, wu, wd, gs, block_t=16, block_f=16,
+                            interpret=True)
+    yr = ref.grouped_swiglu(x, wg, wu, wd, gs)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40), min_size=2,
+                max_size=5).filter(lambda s: sum(s) > 0))
+def test_grouped_property(sizes):
+    d, f = 16, 16
+    E = len(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    T = int(gs.sum())
+    x = _randn((T, d), jnp.float32)
+    wg, wu = _randn((E, d, f), jnp.float32, 0.2), _randn((E, d, f), jnp.float32, 0.2)
+    wd = _randn((E, f, d), jnp.float32, 0.2)
+    y = K_gm.grouped_swiglu(x, wg, wu, wd, gs, block_t=8, block_f=16,
+                            interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.grouped_swiglu(x, wg, wu, wd, gs)),
+        atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_matches_single_expert_swiglu():
+    """One expert == plain fused SwiGLU."""
+    d, f, T = 16, 32, 48
+    x = _randn((T, d), jnp.float32)
+    wg, wu = _randn((1, d, f), jnp.float32, 0.2), _randn((1, d, f), jnp.float32, 0.2)
+    wd = _randn((1, f, d), jnp.float32, 0.2)
+    y = K_gm.grouped_swiglu(x, wg, wu, wd, jnp.asarray([T], jnp.int32),
+                            block_t=16, block_f=16, interpret=True)
+    y2 = ref.swiglu_mlp(x, wg[0], wu[0], wd[0])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               atol=1e-5, rtol=1e-5)

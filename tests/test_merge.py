@@ -1,0 +1,159 @@
+"""MergeMoE core: merge math, baselines, end-to-end compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import clustering as CL
+from repro.core import compress as CMP
+from repro.core import merge as MG
+from repro.core.errors import TechniqueInapplicable
+from repro.models import model as MD
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    moe = params["stack"]["moe"]
+    wg = np.asarray(moe["wg"][0], np.float32)
+    wu = np.asarray(moe["wu"][0], np.float32)
+    wd = np.asarray(moe["wd"][0], np.float32)
+    X = np.random.default_rng(0).standard_normal(
+        (512, cfg.d_model)).astype(np.float32)
+    counts = np.random.default_rng(1).random(cfg.moe.n_experts) * 100
+    return cfg, params, wg, wu, wd, X, counts
+
+
+def _cluster_err(res, wg, wu, wd, X):
+    errs = []
+    for c in range(res.wg.shape[0]):
+        members = np.where(res.assign == c)[0]
+        Z = sum(res.weights[j] * MG.expert_forward(
+            X.astype(np.float64), wg[j].astype(np.float64),
+            wu[j].astype(np.float64), wd[j].astype(np.float64))
+            for j in members)
+        Y = MG.expert_forward(X.astype(np.float64), res.wg[c], res.wu[c],
+                              res.wd[c])
+        errs.append(np.linalg.norm(Y - Z) / (np.linalg.norm(Z) + 1e-12))
+    return float(np.mean(errs))
+
+
+def test_identity_merge_is_exact(setup):
+    cfg, _, wg, wu, wd, X, counts = setup
+    N = cfg.moe.n_experts
+    res = MG.merge_mergemoe(wg, wu, wd, counts, X, N)
+    np.testing.assert_allclose(res.wg, wg, atol=1e-4)
+    np.testing.assert_allclose(res.wd, wd, atol=1e-4)
+    assert (res.remap == np.arange(N)).all()
+
+
+def test_literal_t1_equals_simplified(setup):
+    """Paper's T1 = Q P† construction == direct lstsq(P, Z) (DESIGN.md §1)."""
+    _, _, wg, wu, wd, X, counts = setup
+    r1 = MG.merge_mergemoe(wg, wu, wd, counts, X, 4, literal_t1=False)
+    r2 = MG.merge_mergemoe(wg, wu, wd, counts, X, 4, literal_t1=True)
+    np.testing.assert_allclose(r1.wd, r2.wd, atol=1e-6, rtol=1e-6)
+
+
+def test_mergemoe_beats_msmoe_in_sample(setup):
+    """Least-squares optimality: on the calibration inputs, MergeMoE's
+    output error is <= M-SMoE's (same clustering, same targets)."""
+    _, _, wg, wu, wd, X, counts = setup
+    e_ours = _cluster_err(MG.merge_layer("mergemoe", wg, wu, wd, counts, X, 4),
+                          wg, wu, wd, X)
+    e_msmoe = _cluster_err(MG.merge_layer("msmoe", wg, wu, wd, counts, X, 4),
+                           wg, wu, wd, X)
+    assert e_ours < e_msmoe
+
+
+@pytest.mark.parametrize("method", list(MG.METHODS))
+def test_all_methods_produce_valid_tables(setup, method):
+    cfg, _, wg, wu, wd, X, counts = setup
+    M = 4
+    res = MG.merge_layer(method, wg, wu, wd, counts, X, M)
+    N = cfg.moe.n_experts
+    assert res.wg.shape == (M,) + wg.shape[1:]
+    assert res.remap.shape == (N,) and res.remap.max() < M
+    assert np.isfinite(res.wd).all()
+    # weights sum to 1 within each cluster
+    for c in range(M):
+        s = res.weights[res.assign == c].sum()
+        np.testing.assert_allclose(s, 1.0, atol=1e-5)
+
+
+def test_clustering_centers_are_top_usage(setup):
+    _, _, wg, wu, wd, X, counts = setup
+    M = 4
+    assign = CL.cluster_experts(wg, wu, counts, M)
+    centers = np.argsort(-counts)[:M]
+    for rank, c in enumerate(centers):
+        assert assign[c] == rank
+
+
+def test_summation_and_mixing_matrices(setup):
+    _, _, wg, wu, _, _, counts = setup
+    N = wg.shape[0]
+    M = 4
+    assign = CL.cluster_experts(wg, wu, counts, M)
+    A = CL.summation_matrix(assign, M)
+    B = CL.mixing_matrix(assign, counts, M)
+    assert A.shape == (M, N) and (A.sum(axis=0) == 1).all()
+    np.testing.assert_allclose((A @ B).diagonal(), np.ones(M), atol=1e-6)
+
+
+def test_compress_model_end_to_end(setup):
+    cfg, params, *_ = setup
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 64),
+                                             0, cfg.vocab_size)}
+               for i in range(2)]
+    new_cfg, new_params, info = CMP.compress_model(
+        cfg, params, method="mergemoe", merged_experts=4, split=1,
+        batches=batches)
+    assert info["compression_ratio"] > 1.05
+    assert new_cfg.moe_merged == 4 and new_cfg.moe_split == 1
+    l0, _ = MD.loss(cfg, params, batches[0])
+    l1, _ = MD.loss(new_cfg, new_params, batches[0])
+    assert np.isfinite(float(l1))
+    assert abs(float(l1) - float(l0)) < 1.5
+    # compressed suffix holds M real experts; prefix untouched
+    assert new_params["stack_c"]["moe"]["wg"].shape[1] == 4
+    np.testing.assert_array_equal(
+        np.asarray(new_params["stack"]["moe"]["wg"]),
+        np.asarray(params["stack"]["moe"]["wg"][:1]))
+
+
+def test_compressed_model_serves(setup):
+    cfg, params, *_ = setup
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(9), (2, 32),
+                                             0, cfg.vocab_size)}]
+    new_cfg, new_params, _ = CMP.compress_model(
+        cfg, params, method="mergemoe", merged_experts=4, split=1,
+        batches=batches)
+    tokens = batches[0]["tokens"]
+    _, cache = MD.prefill(new_cfg, new_params, {"tokens": tokens}, s_max=40)
+    logits, cache = MD.decode_step(new_cfg, new_params, cache, tokens[:, 0])
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_inapplicable_raises():
+    cfg = configs.get("granite-8b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(TechniqueInapplicable):
+        CMP.compress_model(cfg, params, method="mergemoe", merged_experts=4,
+                           batches=[])
+
+
+def test_sample_threshold_strictness(setup):
+    """Paper Fig. 4: below the critical sample count the solve is
+    under-determined — strict mode refuses."""
+    cfg, params, *_ = setup
+    from repro.core.errors import CalibrationError
+    tiny = [{"tokens": jax.random.randint(jax.random.PRNGKey(0), (1, 8),
+                                          0, cfg.vocab_size)}]
+    with pytest.raises(CalibrationError):
+        CMP.compress_model(cfg, params, method="mergemoe", merged_experts=4,
+                           split=1, batches=tiny, strict_samples=True)

@@ -1,0 +1,81 @@
+"""Optimizers: convergence, clipping, factored states, int-param handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, adafactor, sgd, apply_updates, global_norm,
+                         cosine_schedule, default_optimizer_for)
+
+
+def _quadratic_target():
+    target = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]]),
+              "b": jnp.asarray([0.3, -0.7])}
+
+    def loss(p):
+        return sum(jnp.sum((p[k] - target[k]) ** 2) for k in p)
+    return target, loss
+
+
+@pytest.mark.parametrize("make,steps,lr,tol", [
+    (adamw, 400, 3e-2, 1e-2), (adafactor, 800, 5e-2, 6e-2),
+    (sgd, 200, 2e-1, 1e-2)])
+def test_converges_on_quadratic(make, steps, lr, tol):
+    target, loss = _quadratic_target()
+    params = {"w": jnp.zeros((2, 2)), "b": jnp.zeros(2)}
+    opt = make(lr=lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, i):
+        g = jax.grad(loss)(params)
+        u, state = opt.update(g, state, params, i)
+        return apply_updates(params, u), state
+
+    for i in range(steps):
+        params, state = step(params, state, jnp.asarray(i))
+    assert float(loss(params)) < tol
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros(32)}
+    st = adafactor().init(params)
+    assert st["w"]["vr"].shape == (64,)
+    assert st["w"]["vc"].shape == (32,)
+    assert st["b"]["v"].shape == (32,)
+    n_state = sum(x.size for x in jax.tree.leaves(st))
+    assert n_state < params["w"].size  # sub-linear
+
+
+def test_int_params_skipped():
+    params = {"w": jnp.zeros((4, 4)), "remap": jnp.arange(4, dtype=jnp.int32)}
+    opt = adamw(lr=0.1)
+    state = opt.init(params)
+    grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2), allow_int=True)(params)
+    u, state = opt.update(grads, state, params, jnp.asarray(0))
+    p2 = apply_updates(params, u)
+    np.testing.assert_array_equal(np.asarray(p2["remap"]),
+                                  np.arange(4, dtype=np.int32))
+    assert p2["remap"].dtype == jnp.int32
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    opt = sgd(lr=1.0, max_grad_norm=1.0)
+    state = opt.init(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    u, _ = opt.update(huge, state, params, jnp.asarray(0))
+    assert float(global_norm(u)) <= 1.0 + 1e-5
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(lr(jnp.asarray(100))) < float(lr(jnp.asarray(50)))
+
+
+def test_default_optimizer_thresholds():
+    assert default_optimizer_for(8e9) == "adamw"
+    assert default_optimizer_for(110e9) == "adafactor"
+    assert default_optimizer_for(1e12) == "adafactor"

@@ -1,0 +1,102 @@
+"""Sharding rules: divisibility handling, path matching, cache/batch specs.
+Uses AbstractMesh — no devices needed for spec derivation."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.launch import sharding as SH
+
+SDS = jax.ShapeDtypeStruct
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_param_rules_basic():
+    shapes = {"stack": {
+        "attn": {"wq": SDS((36, 4096, 4096), jnp.bfloat16),
+                 "wk": SDS((36, 4096, 1024), jnp.bfloat16),
+                 "wo": SDS((36, 4096, 4096), jnp.bfloat16)},
+        "mlp": {"wg": SDS((36, 4096, 14336), jnp.bfloat16),
+                "wd": SDS((36, 14336, 4096), jnp.bfloat16)},
+        "ln1": {"scale": SDS((4096,), jnp.bfloat16)},
+    }}
+    specs = SH.params_pspecs(shapes, MESH)
+    st = specs["stack"]
+    assert st["attn"]["wq"] == P(None, "data", "model")
+    assert st["attn"]["wk"] == P(None, "data")       # KV replicated on model
+    assert st["attn"]["wo"] == P(None, "model", "data")
+    assert st["mlp"]["wg"] == P(None, "data", "model")
+    assert st["ln1"]["scale"] == P()
+
+
+def test_moe_expert_parallel_rules():
+    shapes = {"stack": {"moe": {
+        "wg": SDS((61, 384, 7168, 2048), jnp.bfloat16),
+        "wd": SDS((61, 384, 2048, 7168), jnp.bfloat16),
+        "router": SDS((61, 7168, 384), jnp.float32),
+        "remap": SDS((61, 384), jnp.int32)}}}
+    specs = SH.params_pspecs(shapes, MESH)["stack"]["moe"]
+    assert specs["wg"] == P(None, "model", "data")
+    assert specs["wd"] == P(None, "model", None, "data")
+    assert specs["router"] == P()
+    assert specs["remap"] == P()
+
+
+def test_non_divisible_axis_dropped():
+    # vocab 50280 is not divisible by 16 -> "model" entry must be dropped
+    shapes = {"embed": {"tok": SDS((50280, 1024), jnp.bfloat16)}}
+    spec = SH.params_pspecs(shapes, MESH)["embed"]["tok"]
+    assert spec == P(None, "data")
+
+
+def test_opt_state_inherits_param_rules():
+    shapes = {"stack": {"mlp": {"wg": {
+        "m": SDS((36, 4096, 14336), jnp.float32),
+        "v": SDS((36, 4096, 14336), jnp.float32)}}}}
+    specs = SH.opt_pspecs(shapes, MESH)
+    assert specs["stack"]["mlp"]["wg"]["m"] == P(None, "data", "model")
+
+
+def test_adafactor_factored_state_truncates():
+    shapes = {"stack": {"mlp": {"wg": {
+        "vr": SDS((36, 4096), jnp.float32),          # param minus last dim
+        "vc": SDS((36, 14336), jnp.float32)}}}}
+    specs = SH.opt_pspecs(shapes, MESH)
+    # template right-aligned: [36, 4096] -> ("data","model"); 36 is not
+    # divisible by 16 so the "data" entry is dropped, "model" kept on 4096
+    assert specs["stack"]["mlp"]["wg"]["vr"] == P(None, "model")
+    assert specs["stack"]["mlp"]["wg"]["vc"] == P(None, "model")
+
+
+def test_batch_specs_pod_axis():
+    b = {"tokens": SDS((256, 4096), jnp.int32)}
+    spec = SH.batch_pspecs(b, MESH3)["tokens"]
+    assert spec == P(("pod", "data"))
+    one = {"tokens": SDS((1, 4096), jnp.int32)}      # long_500k: B=1
+    assert SH.batch_pspecs(one, MESH)["tokens"] == P()
+
+
+def test_cache_specs_sequence_sharded():
+    cache = {"k": SDS((36, 128, 32768, 8, 128), jnp.bfloat16),
+             "v": SDS((36, 128, 32768, 8, 128), jnp.bfloat16),
+             "pos": SDS((), jnp.int32)}
+    specs = SH.cache_pspecs(cache, MESH)
+    assert specs["k"] == P(None, "data", "model")
+    assert specs["pos"] == P()
+    # B=1: batch unshardable -> sequence takes BOTH axes
+    cache1 = {"k": SDS((9, 1, 524288, 32, 80), jnp.bfloat16)}
+    assert SH.cache_pspecs(cache1, MESH)["k"] == P(None, None,
+                                                   ("data", "model"))
+
+
+def test_logits_pspec_shape_aware():
+    assert SH.logits_pspec(MESH, (256, 64000)) == P("data", "model")
+    assert SH.logits_pspec(MESH, (1, 50280)) == P()
+
+
+def test_constrain_noop_without_mesh():
+    from repro.models.numerics import constrain, set_activation_mesh
+    set_activation_mesh(None)
+    x = jnp.ones((4, 4))
+    assert constrain(x, "DP", "M") is x

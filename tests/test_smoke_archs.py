@@ -1,0 +1,107 @@
+"""Assignment smoke tests: every architecture instantiates a REDUCED config
+of the same family and runs one forward + one train step on CPU, asserting
+output shapes and finiteness. Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as MD
+from repro.launch import steps as ST
+from repro.optim import make_optimizer
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=0):
+    rng = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones(
+            (B, cfg.vlm_num_patches, cfg.d_model), cfg.param_dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.n_audio_ctx, cfg.d_model)).astype(cfg.param_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get(arch).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    logits, aux, _ = MD.forward(cfg, params, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = configs.get(arch).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", lr=1e-3)
+    opt_state = opt.init(params)
+    step = ST.make_train_step(cfg, opt)
+    p2, o2, loss, metrics = jax.jit(step)(params, opt_state, _batch(cfg),
+                                          jnp.asarray(0, jnp.int32))
+    assert np.isfinite(float(loss))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, p2)
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must carry the exact assignment table values."""
+    cfg = configs.get(arch)
+    expected = {
+        "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+        "qwen1_5_110b": (80, 8192, 64, 8, 49152, 152064),
+        "granite_8b": (36, 4096, 32, 8, 14336, 49152),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 0, 163840),
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 0, 151936),
+        "phi_3_vision_4_2b": (32, 3072, 32, 32, 8192, 32064),
+        "zamba2_2_7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2_370m": (48, 1024, 16, 16, 0, 50280),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+    }[configs.canonical(arch)]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_configs_match_assignment():
+    k = configs.get("kimi-k2-1t-a32b")
+    assert (k.moe.n_experts, k.moe.top_k, k.moe.d_ff_expert) == (384, 8, 2048)
+    q = configs.get("qwen3-moe-30b-a3b")
+    assert (q.moe.n_experts, q.moe.top_k, q.moe.d_ff_expert) == (128, 8, 768)
+    z = configs.get("zamba2-2.7b")
+    assert z.ssm.d_state == 64
+    m = configs.get("mamba2-370m")
+    assert m.ssm.d_state == 128
+
+
+def test_param_counts_plausible():
+    """Param accounting lands in the advertised size class."""
+    expect = {
+        "yi-34b": 34e9, "qwen1.5-110b": 110e9, "granite-8b": 8e9,
+        "phi3-medium-14b": 14e9, "kimi-k2-1t-a32b": 1.0e12,
+        "qwen3-moe-30b-a3b": 30e9, "phi-3-vision-4.2b": 4.2e9,
+        "zamba2-2.7b": 2.7e9, "mamba2-370m": 0.37e9,
+    }
+    for arch, n in expect.items():
+        got = configs.get(arch).param_count()
+        assert 0.6 * n < got < 1.45 * n, (arch, got, n)
+
+
+def test_long_context_applicability():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        ok = configs.shape_applicable(cfg, "long_500k")
+        assert ok == (cfg.family in ("ssm", "hybrid"))

@@ -1,0 +1,71 @@
+"""Numerical verification of Theorem 1 (Appendix A) with hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as CL
+from repro.core import theory as TH
+
+
+def _random_instance(rng, N, M, K):
+    assign = rng.integers(0, M, size=N)
+    # every cluster non-empty
+    assign[:M] = np.arange(M)
+    f = rng.random(N) * 10 + 0.1
+    Y0 = rng.standard_normal((K, N))
+    W = Y0.T @ Y0
+    A = CL.summation_matrix(assign.astype(np.int32), M)
+    return assign, f, Y0, W, A
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), N=st.integers(4, 12),
+       M=st.integers(2, 4), K=st.integers(2, 8))
+def test_theorem1_frequency_weights_minimize(seed, N, M, K):
+    """The frequency-weighted B is a minimum: any perturbation of the
+    within-cluster weights does not decrease the objective."""
+    rng = np.random.default_rng(seed)
+    assign, f, Y0, W, A = _random_instance(rng, N, M, K)
+    B_opt = TH.optimal_B(assign.astype(np.int32), f, M)
+    j_opt = TH.objective(B_opt, A, W, f)
+    for _ in range(8):
+        delta = rng.standard_normal(B_opt.shape) * 0.1
+        delta[B_opt == 0] = 0.0                       # keep support pattern
+        B_pert = B_opt + delta
+        j_pert = TH.objective(B_pert, A, W, f)
+        assert j_pert >= j_opt - 1e-9 * max(1.0, abs(j_opt))
+
+
+def test_objective_zero_when_identity():
+    """M == N with identity clustering -> B A = I -> zero error."""
+    N = 6
+    assign = np.arange(N, dtype=np.int32)
+    f = np.ones(N)
+    Y0 = np.random.default_rng(0).standard_normal((4, N))
+    W = Y0.T @ Y0
+    A = CL.summation_matrix(assign, N)
+    B = TH.optimal_B(assign, f, N)
+    assert abs(TH.objective(B, A, W, f)) < 1e-9
+
+
+def test_quasi_frobenius():
+    Y = np.asarray([[3.0, 0.0], [4.0, 2.0]])
+    np.testing.assert_allclose(TH.quasi_frobenius(Y), [25.0, 4.0])
+
+
+def test_output_error_decreases_with_more_clusters():
+    rng = np.random.default_rng(3)
+    N, K = 8, 5
+    Y = rng.standard_normal((K, N))
+    r = np.abs(rng.standard_normal(N))
+    f = np.abs(rng.standard_normal(N)) + 0.1
+    errs = []
+    for M in (2, 4, 8):
+        feats_g = rng.standard_normal((N, 16))
+        assign = CL.cluster_experts(
+            feats_g.reshape(N, 4, 4), feats_g.reshape(N, 4, 4), f, M)
+        A = CL.summation_matrix(assign, M)
+        B = CL.mixing_matrix(assign, f, M)
+        errs.append(TH.output_error(Y, B, A, r))
+    assert errs[-1] < 1e-9                  # M == N exact
+    assert errs[0] >= errs[1] - 1e-9        # coarser is worse (or equal)
