@@ -1,0 +1,141 @@
+"""Continuous-batching throughput: uncompressed vs MergeMoE (M = N/2).
+
+Serves an identical Poisson-ish request trace through the continuous-batching
+engine twice — once with the original checkpoint, once with the same weights
+MergeMoE-compressed to half the experts (router + remap unchanged math,
+merged expert tables) — and reports tokens/sec plus per-request latency.
+Both runs decode through the ragged dispatch path, so on TPU the comparison
+is grouped-kernel vs grouped-kernel with fewer, fuller expert groups; on CPU
+(this container) the jnp oracle stands in at identical shapes.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import compress as CMP
+from repro.models import model as MD
+from repro.serving import Engine, EngineConfig, poisson_trace
+
+
+def run_trace(cfg, params, *, label, requests, prompt_lens, arrivals,
+              max_new_tokens, n_slots, s_max, buckets, repeats=3):
+    eng = Engine(EngineConfig(n_slots=n_slots, s_max=s_max,
+                              prefill_buckets=buckets), cfg=cfg, params=params)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(l), dtype=np.int32)
+               for l in prompt_lens]
+
+    # warmup: compile the decode step and every prefill bucket specialization
+    # on throwaway requests before the timed trace
+    eng.submit(prompts[0], max_new_tokens=2)
+    for l in sorted(set(eng.bucket_for(len(p)) for p in prompts)):
+        eng.submit(np.zeros(min(l, s_max - 4), np.int32), max_new_tokens=1)
+    eng.run()
+
+    # trace tok/s is host-loop noisy at smoke scale -> best of ``repeats``
+    best_dt, done = None, None
+    for _ in range(repeats):
+        # shift arrivals past the current step clock so the trace stays
+        # staggered and latency = finish - arrival holds without an offset
+        base = float(eng.steps)
+        for i in range(requests):
+            eng.submit(prompts[i], max_new_tokens=max_new_tokens,
+                       arrival_time=base + float(arrivals[i]))
+        t0 = time.perf_counter()
+        d = eng.run()
+        dt = time.perf_counter() - t0
+        if best_dt is None or dt < best_dt:
+            best_dt, done = dt, d
+
+    toks = sum(len(r.out_tokens) for r in done)
+    lat = [r.t_finished - r.arrival_time for r in done]
+    steady = eng.bench_decode(iters=50)
+    rec = {
+        "label": label,
+        "experts": (cfg.moe_merged or cfg.moe.n_experts
+                    ) if cfg.moe else 0,
+        "dispatch": cfg.moe.dispatch if cfg.moe else "dense-mlp",
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(best_dt, 3),
+        "tok_per_s": round(toks / best_dt, 1),
+        "steady_decode_tok_per_s": round(steady, 1),
+        "mean_latency_steps": round(float(np.mean(lat)), 2),
+        "p95_latency_steps": round(float(np.percentile(lat, 95)), 2),
+    }
+    print(f"[{label:>12}] {rec['tok_per_s']:8.1f} tok/s trace  "
+          f"{rec['steady_decode_tok_per_s']:8.1f} tok/s steady-decode  "
+          f"({rec['tokens']} tokens, {rec['experts']} experts, "
+          f"mean latency {rec['mean_latency_steps']} steps)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate (requests per decode step)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
+    params = MD.init(cfg, jax.random.PRNGKey(args.seed))
+
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    M = cfg.moe.n_experts // 2
+    ncfg, nparams, info = CMP.compress_model(
+        cfg, params, method="mergemoe", merged_experts=M, split=0,
+        batches=calib)
+
+    rng = np.random.default_rng(args.seed + 1)
+    lens = rng.choice([8, 16, 24, 32], size=args.requests)
+    lens = np.minimum(lens, args.s_max - args.max_new_tokens - 1)
+    arrivals = poisson_trace(args.requests, rate=args.rate,
+                             seed=args.seed + 2)
+    buckets = (8, 16, 24, 32)
+    common = dict(requests=args.requests, prompt_lens=lens, arrivals=arrivals,
+                  max_new_tokens=args.max_new_tokens, n_slots=args.n_slots,
+                  s_max=args.s_max, buckets=buckets)
+
+    print(f"== serve_bench: {args.requests} requests, Poisson rate "
+          f"{args.rate}/step, {args.n_slots} slots ==")
+    full = run_trace(cfg, params, label="uncompressed", **common)
+    comp = run_trace(ncfg, nparams, label=f"mergemoe-M{M}", **common)
+    summary = {
+        "full": full, "compressed": comp,
+        "compression_ratio": round(info["compression_ratio"], 3),
+        "speedup_trace": round(comp["tok_per_s"] / full["tok_per_s"], 3),
+        "speedup_steady": round(comp["steady_decode_tok_per_s"]
+                                / full["steady_decode_tok_per_s"], 3),
+    }
+    print(f"== trace speedup {summary['speedup_trace']}x, steady-decode "
+          f"speedup {summary['speedup_steady']}x at "
+          f"{summary['compression_ratio']}x fewer expert bytes ==\n"
+          f"   (CPU runs the jnp oracle at identical shapes — the "
+          f"fewer-fuller-blocks win is a TPU grouped-kernel effect)")
+    if args.json:
+        print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

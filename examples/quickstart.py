@@ -3,7 +3,9 @@
 1. train a tiny Qwen3-style MoE for a few dozen steps,
 2. compress it with MergeMoE (experts 8 -> 4 in the suffix layers),
 3. compare held-out loss against the M-SMoE / Average / ZipIt baselines,
-4. serve the compressed model with batched greedy decoding.
+4. serve the compressed model through the continuous-batching engine
+   (request-level admission over the ragged grouped-kernel MoE path; see
+   README "Serving engine").
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,8 +19,8 @@ import numpy as np
 
 from repro.core import compress as CMP
 from repro.launch.train import TrainConfig, train
-from repro.launch.serve import ServeConfig, Server
 from repro.models import model as MD
+from repro.serving import Engine, EngineConfig
 
 
 def main():
@@ -52,13 +54,15 @@ def main():
 
     print("\n== 4. serve the MergeMoE-compressed model ==")
     ncfg, nparams = compressed["mergemoe"]
-    srv = Server(ServeConfig(batch_size=2, prompt_len=16, max_new_tokens=12),
+    eng = Engine(EngineConfig(n_slots=2, s_max=48, prefill_buckets=(16,)),
                  cfg=ncfg, params=nparams)
-    prompts = np.random.default_rng(0).integers(
-        0, ncfg.vocab_size, size=(2, 16), dtype=np.int32)
-    outs = srv.generate(prompts)
-    for i, o in enumerate(outs):
-        print(f"  request {i}: generated {o.tolist()}")
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(rng.integers(0, ncfg.vocab_size, size=16, dtype=np.int32),
+                   max_new_tokens=12)
+    for r in eng.run():
+        print(f"  request {r.uid}: generated {r.out_tokens} "
+              f"[{r.finish_reason}]")
     print("\nquickstart OK")
 
 

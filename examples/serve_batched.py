@@ -1,7 +1,11 @@
-"""End-to-end serving driver: batched requests through prefill + jitted
-single-token decode, full-vs-compressed throughput comparison.
+"""End-to-end serving example: request-level continuous batching.
 
-    PYTHONPATH=src python examples/serve_batched.py --requests 8
+Submits a staggered trace of variable-length requests to the
+continuous-batching engine, then serves the SAME trace with the model
+MergeMoE-compressed to half the experts — both through the ragged
+grouped-kernel MoE path — and compares throughput.
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 12
 """
 import argparse
 import sys
@@ -10,59 +14,72 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+import dataclasses
+
 import jax
 import numpy as np
 
 from repro.core import compress as CMP
-from repro.launch.serve import ServeConfig, Server
 from repro.models import model as MD
+from repro.serving import Engine, EngineConfig, poisson_trace
 from repro import configs
 
 
-def throughput(srv, requests, sc):
+def serve_trace(cfg, params, requests, n_slots=4, s_max=64,
+                max_new_tokens=12, rate=0.5):
+    buckets = (8, 16, 32)
+    eng = Engine(EngineConfig(n_slots=n_slots, s_max=s_max,
+                              prefill_buckets=buckets),
+                 cfg=cfg, params=params)
     rng = np.random.default_rng(0)
-    n_batches = -(-requests // sc.batch_size)
-    # warmup (compile)
-    srv.generate(rng.integers(0, srv.cfg.vocab_size,
-                              size=(sc.batch_size, sc.prompt_len),
-                              dtype=np.int32))
+    arrivals = poisson_trace(requests, rate=rate, seed=1)
+    # warmup (compile each prefill bucket + the decode step)
+    for b in buckets:
+        eng.submit(np.zeros(b, np.int32), max_new_tokens=2)
+    eng.run()
+
+    base = float(eng.steps)   # keep the trace staggered past the warmup clock
+    for i in range(requests):
+        n = int(rng.choice(buckets))
+        eng.submit(rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32),
+                   max_new_tokens=max_new_tokens,
+                   arrival_time=base + float(arrivals[i]))
     t0 = time.perf_counter()
-    tokens = 0
-    for _ in range(n_batches):
-        prompts = rng.integers(0, srv.cfg.vocab_size,
-                               size=(sc.batch_size, sc.prompt_len),
-                               dtype=np.int32)
-        tokens += srv.generate(prompts).size
+    done = eng.run()
     dt = time.perf_counter() - t0
-    return tokens / dt
+    tokens = sum(len(r.out_tokens) for r in done)
+    return tokens / dt, done
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--n-slots", type=int, default=4)
     args = ap.parse_args()
 
-    sc = ServeConfig(arch="qwen3-moe-30b-a3b", batch_size=args.batch_size,
-                     prompt_len=32, max_new_tokens=16)
-    cfg = configs.get(sc.arch).reduced()
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
     params = MD.init(cfg, jax.random.PRNGKey(0))
 
-    full = Server(sc, cfg=cfg, params=params)
-    tput_full = throughput(full, args.requests, sc)
+    tput_full, done = serve_trace(cfg, params, args.requests,
+                                  n_slots=args.n_slots)
     print(f"[full      ] {tput_full:8.1f} tok/s "
-          f"({cfg.moe.n_experts} experts)")
+          f"({cfg.moe.n_experts} experts, {len(done)} requests)")
 
     calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
                                            0, cfg.vocab_size)}]
     ncfg, nparams, info = CMP.compress_model(
-        cfg, params, method="mergemoe", merged_experts=4, split=0,
-        batches=calib)
-    comp = Server(sc, cfg=ncfg, params=nparams)
-    tput_comp = throughput(comp, args.requests, sc)
+        cfg, params, method="mergemoe",
+        merged_experts=cfg.moe.n_experts // 2, split=0, batches=calib)
+    tput_comp, done = serve_trace(ncfg, nparams, args.requests,
+                                  n_slots=args.n_slots)
     print(f"[mergemoe  ] {tput_comp:8.1f} tok/s "
           f"({info['merged_experts']} experts, "
-          f"{info['compression_ratio']:.2f}x smaller)")
+          f"{info['compression_ratio']:.2f}x smaller, "
+          f"{len(done)} requests)")
+    r = done[0]
+    print(f"sample request {r.uid}: prompt {r.n_prompt} tokens -> "
+          f"{r.out_tokens[:8]} ... [{r.finish_reason}]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point.
+#
+#   scripts/test.sh              # fast suite (slow-marked cases deselected)
+#   scripts/test.sh -m slow      # only the slow smoke cases
+#   scripts/test.sh tests/test_kernels.py -k grouped
+#
+# Extra arguments are passed through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

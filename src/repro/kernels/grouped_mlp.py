@@ -62,6 +62,14 @@ def grouped_swiglu(x, wg, wu, wd, group_sizes, block_t: int = 128,
 
     # ---- pad each expert segment to a multiple of bt (static worst case:
     # T + E*(bt-1) rows), build block -> expert map + row scatter indices.
+    # Zero-sized groups (routine after aggressive merging: the remap empties
+    # every absorbed expert's bucket) make `starts`/`padded_starts` contain
+    # duplicate entries, which a searchsorted-based mapping must special-case;
+    # instead both the row->expert and block->expert tables are built with
+    # ``jnp.repeat(..., total_repeat_length=...)``, which emits each expert id
+    # exactly size/blocks-per-expert times and is duplicate-proof by
+    # construction (trailing padding repeats the last id onto all-zero rows,
+    # whose output is discarded).
     starts = jnp.cumsum(group_sizes) - group_sizes            # [E]
     padded_sizes = ((group_sizes + bt - 1) // bt) * bt
     padded_starts = jnp.cumsum(padded_sizes) - padded_sizes
@@ -70,17 +78,16 @@ def grouped_swiglu(x, wg, wu, wd, group_sizes, block_t: int = 128,
     nb = Tp // bt
 
     # destination row for each source row (stable within its expert segment)
-    eid = jnp.searchsorted(starts, jnp.arange(T), side="right") - 1
-    eid = jnp.clip(eid, 0, E - 1)
+    eid = jnp.repeat(jnp.arange(E, dtype=jnp.int32), group_sizes,
+                     total_repeat_length=T)
     dest = padded_starts[eid] + (jnp.arange(T) - starts[eid])
     xp = jnp.zeros((Tp, d), x.dtype).at[dest].set(x)
 
-    # block -> expert table (blocks beyond the last padded segment run
-    # expert E-1 on zero rows — harmless, output discarded)
-    block_starts = jnp.arange(nb) * bt
-    block_expert = jnp.clip(
-        jnp.searchsorted(padded_starts, block_starts, side="right") - 1,
-        0, E - 1).astype(jnp.int32)
+    # block -> expert table (blocks beyond the last padded segment rerun the
+    # last non-empty expert on zero rows — harmless, output discarded)
+    block_expert = jnp.repeat(jnp.arange(E, dtype=jnp.int32),
+                              padded_sizes // bt,
+                              total_repeat_length=nb)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -284,19 +284,30 @@ def analyze_module(hlo: str) -> ModuleAnalysis:
                 n_out = 1
                 for d in dims_out:
                     n_out *= d
-                lhs_m = re.search(r"dot\(%([\w\.\-]+)", ins.line)
                 cdim_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
                                    ins.line)
+                # lhs dims: compiled modules print typed operands
+                # (``dot(f32[64,128]{1,0} %Arg_0.1, ...)``) — read the shape
+                # straight off the line; hand-written/abbreviated HLO
+                # (``dot(%a, %b)``) falls back to the symbol table.
+                lhs_dims = None
+                typed_m = re.search(r"dot\(([a-z0-9]+)\[([\d,]*)\]", ins.line)
+                if typed_m:
+                    lhs_dims = [int(d) for d in typed_m.group(2).split(",")
+                                if d.strip()]
+                else:
+                    lhs_m = re.search(r"dot\(%([\w\.\-]+)", ins.line)
+                    if lhs_m and lhs_m.group(1) in sym:
+                        lhs_ins = next((i for i in comp.instrs
+                                        if i.name == lhs_m.group(1)), None)
+                        if lhs_ins is not None:
+                            lhs_dims = _shape_dims(lhs_ins.type_str)
                 contract = 1
-                if lhs_m and cdim_m and lhs_m.group(1) in sym:
-                    lhs_ins = next((i for i in comp.instrs
-                                    if i.name == lhs_m.group(1)), None)
-                    if lhs_ins is not None and cdim_m.group(1).strip():
-                        lhs_dims = _shape_dims(lhs_ins.type_str)
-                        for ci in cdim_m.group(1).split(","):
-                            ci = int(ci)
-                            if ci < len(lhs_dims):
-                                contract *= lhs_dims[ci]
+                if lhs_dims is not None and cdim_m and cdim_m.group(1).strip():
+                    for ci in cdim_m.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            contract *= lhs_dims[ci]
                 out.dot_flops += 2.0 * n_out * contract * m
                 out.dot_count += 1
             is_coll = next((k for k in _COLL_KINDS

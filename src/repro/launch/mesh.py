@@ -19,6 +19,27 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_abstract_mesh(axis_sizes, axis_names):
+    """Version-compat AbstractMesh constructor.
+
+    JAX <= 0.4.x takes ``AbstractMesh(shape_tuple=(("data", 16), ...))``;
+    newer releases take ``AbstractMesh(axis_sizes, axis_names)``. Spec
+    derivation (sharding rules, dry-run lowering) only needs shape + names,
+    so either form is equivalent.
+    """
+    import inspect
+    from jax.sharding import AbstractMesh
+
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    axis_names = tuple(axis_names)
+    if len(axis_sizes) != len(axis_names):
+        raise ValueError(f"{len(axis_sizes)} sizes vs {len(axis_names)} names")
+    params = list(inspect.signature(AbstractMesh.__init__).parameters)
+    if "shape_tuple" in params:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    return AbstractMesh(axis_sizes, axis_names)
+
+
 def make_host_mesh(shape=None, axes=("data", "model")):
     """Mesh over whatever devices exist (tests / local runs)."""
     n = jax.device_count()

@@ -1,11 +1,16 @@
-"""Batched serving driver: continuous-batching-lite.
+"""Serving driver: continuous batching over the slotted ragged-MoE path.
 
-Requests (prompts) are grouped into fixed-size batches; each batch is
-prefetched through ``prefill`` and decoded with the jitted single-token
-``serve_step``. The same entry points the dry-run lowers at production scale
-run here on CPU with reduced configs. Compressed (MergeMoE) checkpoints serve
-through the identical path — the router remap makes merged experts
-transparent to the decode loop.
+The production entry point is :class:`repro.serving.Engine` — request-level
+admission/eviction over a persistent slot cache, decode through the ragged
+dispatch + grouped SwiGLU kernel (see ``repro/serving/engine.py`` for the
+scheduler semantics).
+
+:class:`FixedBatchServer` (the former continuous-batching-lite ``Server``) is
+kept as the decode-parity reference: it groups requests into fixed-size
+batches with one scalar cache position, which is exactly the token-for-token
+baseline the engine is tested against (tests/test_serving_engine.py).
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 16 --n-slots 4
 """
 from __future__ import annotations
 
@@ -19,11 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch import sharding as SH
 from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.models.numerics import set_activation_mesh
+from repro.serving import Engine, EngineConfig, Request, poisson_trace
 
 
 @dataclasses.dataclass
@@ -37,7 +42,16 @@ class ServeConfig:
     seed: int = 0
 
 
-class Server:
+class FixedBatchServer:
+    """Fixed-batch reference loop (the seed repo's ``Server``).
+
+    All requests in a batch share one prompt length and one scalar cache
+    position; a batch must fully finish before the next one starts. Kept as
+    the numerical baseline for the continuous-batching parity tests and for
+    the quickstart example — new serving code should use
+    :class:`repro.serving.Engine`.
+    """
+
     def __init__(self, sc: ServeConfig, cfg=None, params=None):
         self.sc = sc
         self.cfg = cfg if cfg is not None else (
@@ -77,34 +91,43 @@ class Server:
         return np.stack(outs, axis=1)
 
 
+# Back-compat alias (quickstart / system tests predate the engine).
+Server = FixedBatchServer
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
-    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=128)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate, requests per decode step")
     args = ap.parse_args()
 
-    sc = ServeConfig(arch=args.arch, batch_size=args.batch_size,
-                     prompt_len=args.prompt_len,
-                     max_new_tokens=args.max_new_tokens)
-    srv = Server(sc)
+    ec = EngineConfig(arch=args.arch, n_slots=args.n_slots, s_max=args.s_max,
+                      prefill_buckets=(args.prompt_len,))
+    eng = Engine(ec)
     rng = np.random.default_rng(0)
-    n_batches = -(-args.requests // sc.batch_size)
+    arrivals = poisson_trace(args.requests, rate=args.rate, seed=1)
+    for i in range(args.requests):
+        eng.submit(rng.integers(0, eng.cfg.vocab_size, size=args.prompt_len,
+                                dtype=np.int32),
+                   max_new_tokens=args.max_new_tokens,
+                   arrival_time=float(arrivals[i]))
     t0 = time.perf_counter()
-    total_tokens = 0
-    for b in range(n_batches):
-        prompts = rng.integers(0, srv.cfg.vocab_size,
-                               size=(sc.batch_size, sc.prompt_len),
-                               dtype=np.int32)
-        out = srv.generate(prompts)
-        total_tokens += out.size
-        print(f"[serve] batch {b}: generated {out.shape} tokens; "
-              f"sample: {out[0][:8].tolist()}")
+    done = eng.run()
     dt = time.perf_counter() - t0
-    print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s on CPU)")
+    total = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {len(done)} requests, {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, {eng.ec.n_slots} slots, "
+          f"dispatch={eng.cfg.moe.dispatch if eng.cfg.moe else 'dense-mlp'})")
+    for r in done[:4]:
+        print(f"  req {r.uid}: arrived@{r.arrival_time:.1f} "
+              f"admitted@{r.t_admitted:.0f} done@{r.t_finished:.0f} "
+              f"[{r.finish_reason}] first tokens {r.out_tokens[:6]}")
 
 
 if __name__ == "__main__":

@@ -92,3 +92,35 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     def serve_step(params, cache, token):
         return MD.decode_step(cfg, params, cache, token)
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching (slotted) serving
+# ---------------------------------------------------------------------------
+
+def make_slot_prefill(cfg: ModelConfig) -> Callable:
+    """prefill_slots(params, tokens [B, S_bucket], lengths [B]) ->
+    (logits [B, V], k [L, B, S_bucket, nkv, hd], v). One jit specialization
+    per prompt bucket length."""
+    def slot_prefill(params, tokens, lengths):
+        return MD.prefill_slots(cfg, params, tokens, lengths)
+    return slot_prefill
+
+
+def make_slot_insert(cfg: ModelConfig) -> Callable:
+    """slot_insert(cache, slot, k_new, v_new, length) -> cache. ``slot`` and
+    ``length`` are traced, so admission compiles once per bucket length."""
+    def slot_insert(cache, slot, k_new, v_new, length):
+        return MD.insert_slot(cache, slot, k_new, v_new, length)
+    return slot_insert
+
+
+def make_slot_decode(cfg: ModelConfig) -> Callable:
+    """slot_decode(params, cache, token [B], active [B]) ->
+    (logits [B, V], greedy [B] int32, cache). The greedy argmax is computed
+    on-device so a temperature-0 engine never transfers the logits."""
+    def slot_decode(params, cache, token, active):
+        logits, cache = MD.decode_step_slots(cfg, params, cache, token, active)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, greedy, cache
+    return slot_decode

@@ -204,6 +204,38 @@ def attn_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache_k, cache_v,
     return out, cache_k, cache_v
 
 
+def attn_decode_slots(cfg: ModelConfig, p: dict, x: jax.Array, cache_k,
+                      cache_v, pos: jax.Array, *, inv_freq):
+    """Single-token decode with PER-SLOT positions (continuous batching).
+
+    Unlike :func:`attn_decode` (one scalar ``pos`` for the whole batch), every
+    batch row is an independent serving slot at its own sequence length:
+    ``pos[b]`` is the position the new token of slot ``b`` is written to, and
+    the causal mask is per-slot. Rows past ``pos[b]`` may hold stale KV from
+    an evicted request — they are masked here and each row is rewritten the
+    step it becomes current, so stale entries are never attended.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, nkv, hd]; pos: [B] int32.
+    Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x)
+    positions = pos[:, None]                              # [B, 1]
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    b_iota = jnp.arange(B)
+    cache_k = cache_k.at[b_iota, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b_iota, pos].set(v[:, 0].astype(cache_v.dtype))
+    S_max = cache_k.shape[1]
+    valid = (jnp.arange(S_max)[None, :] <= pos[:, None])[:, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, valid, n_rep)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+    return out, cache_k, cache_v
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -269,6 +269,112 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict,
     return logits, cache
 
 
+# ---------------------------------------------------------------------------
+# slotted serving: continuous batching over a persistent slot cache
+# ---------------------------------------------------------------------------
+
+def init_slot_cache(cfg: ModelConfig, n_slots: int, s_max: int) -> dict:
+    """Persistent KV cache for the continuous-batching engine.
+
+    One row per serving slot; ``pos`` is a PER-SLOT length vector (unlike the
+    scalar in :func:`init_cache`) so requests of different lengths coexist and
+    slots survive request turnover."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"slotted serving is token-only (dense/moe), not {cfg.family}")
+    dt = cfg.param_dtype
+    shape = (cfg.n_layers, n_slots, s_max, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((n_slots,), jnp.int32)}
+
+
+def prefill_slots(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  lengths: jax.Array):
+    """Prefill right-padded prompts for slot insertion.
+
+    tokens: [B, S_bucket] int32 prompts padded to a shared bucket length;
+    lengths: [B] int32 true prompt lengths. Returns (logits [B, V] taken at
+    each row's LAST REAL position, k [L, B, S_bucket, nkv, hd], v).
+
+    Padding rows beyond ``lengths[b]`` produce garbage KV, which is harmless:
+    causality keeps them out of every real position's context, and the decode
+    mask (``<= pos``) hides them until they are overwritten in place.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"slot prefill is token-only (dense/moe), not {cfg.family}")
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    x = L.embed_apply(params["embed"], tokens)
+    ks_l, vs_l = [], []
+    for key in ("stack", "stack_c"):
+        if key in params:
+            x, ks, vs = T.stack_prefill(cfg, params[key], x, inv_freq=inv_freq)
+            ks_l.append(ks)
+            vs_l.append(vs)
+    ks = jnp.concatenate(ks_l, axis=0) if len(ks_l) > 1 else ks_l[0]
+    vs = jnp.concatenate(vs_l, axis=0) if len(vs_l) > 1 else vs_l[0]
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    last = x[jnp.arange(x.shape[0]), lengths - 1]          # [B, d]
+    logits = L.lm_head(cfg, params["embed"], last[:, None])[:, 0]
+    return logits, ks, vs
+
+
+def insert_slot(cache: dict, slot: jax.Array, k_new: jax.Array,
+                v_new: jax.Array, length: jax.Array) -> dict:
+    """Write one prefilled request into slot ``slot`` of the engine cache.
+
+    k_new/v_new: [L, 1, S_bucket, nkv, hd] from :func:`prefill_slots`;
+    ``slot``/``length`` are traced int32 scalars so admission never
+    recompiles per slot. Rows [S_bucket, s_max) keep whatever the previous
+    occupant left — masked until overwritten."""
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0, 0))
+    pos = cache["pos"].at[slot].set(length)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def decode_step_slots(cfg: ModelConfig, params: dict, cache: dict,
+                      token: jax.Array, active: jax.Array):
+    """One decode step across all serving slots.
+
+    token: [B] int32 (last sampled token per slot, anything for idle slots);
+    active: [B] bool. Idle slots compute alongside (their flops are the price
+    of static shapes) but their ``pos`` does not advance, so they never
+    corrupt state another request will read. Returns (logits [B, V], cache).
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"slotted decode is token-only (dense/moe), not {cfg.family}")
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    x = L.embed_apply(params["embed"], token[:, None])
+    pos = cache["pos"]
+
+    if "stack_c" in params and "stack" in params:
+        split = cfg.moe_split
+        x, nk1, nv1 = T.stack_decode_slots(cfg, params["stack"], x,
+                                           cache["k"][:split],
+                                           cache["v"][:split],
+                                           pos, inv_freq=inv_freq)
+        x, nk2, nv2 = T.stack_decode_slots(cfg, params["stack_c"], x,
+                                           cache["k"][split:],
+                                           cache["v"][split:],
+                                           pos, inv_freq=inv_freq)
+        nk = jnp.concatenate([nk1, nk2], axis=0)
+        nv = jnp.concatenate([nv1, nv2], axis=0)
+    else:
+        stack = params.get("stack", params.get("stack_c"))
+        x, nk, nv = T.stack_decode_slots(cfg, stack, x,
+                                         cache["k"], cache["v"], pos,
+                                         inv_freq=inv_freq)
+    new_cache = {"k": nk, "v": nv,
+                 "pos": jnp.where(active, pos + 1, pos)}
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = L.lm_head(cfg, params["embed"], x)[:, 0]
+    return logits, new_cache
+
+
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
     """One decode step. token: [B] int32. Returns (logits [B, V], cache)."""
     inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)

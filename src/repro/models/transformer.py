@@ -125,6 +125,32 @@ def stack_decode(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v, pos,
     return y, nk, nv
 
 
+def stack_decode_slots(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v,
+                       pos, *, inv_freq):
+    """One-token decode with per-slot positions (continuous batching).
+
+    cache_k/v: [L, B, S_max, nkv, hd]; pos: [B] int32 per-slot lengths.
+    The MoE sub-block goes through ``moe_apply`` unchanged, so under
+    ``dispatch='ragged'`` every decode step runs the grouped kernel over the
+    B slot tokens. Returns (y, new_k, new_v)."""
+    def body(h, xs):
+        layer_p, ck, cv = xs
+        hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+        a, ck, cv = L.attn_decode_slots(cfg, layer_p["attn"], hn, ck, cv, pos,
+                                        inv_freq=inv_freq)
+        h = h + a
+        hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+        if cfg.moe is not None:
+            out = M.moe_apply(cfg, layer_p["moe"], hn)
+            h = h + out.y
+        else:
+            h = h + L.mlp_apply(layer_p["mlp"], hn)
+        return h, (ck, cv)
+
+    y, (nk, nv) = jax.lax.scan(body, x, (stacked, cache_k, cache_v))
+    return y, nk, nv
+
+
 def stack_prefill(cfg: ModelConfig, stacked: dict, x, *, inv_freq):
     """Full-sequence forward that also emits per-layer (k, v) decode caches.
     Returns (y, cache_k [L,B,S,nkv,hd], cache_v)."""

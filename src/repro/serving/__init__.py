@@ -1,0 +1,7 @@
+"""Request-level serving: continuous batching over the slotted KV cache."""
+from repro.serving.engine import (  # noqa: F401
+    Engine,
+    EngineConfig,
+    Request,
+    poisson_trace,
+)

@@ -1,0 +1,116 @@
+"""Compatibility shim for ``hypothesis``.
+
+The tier-1 suite must collect and run on bare containers where hypothesis is
+not installed. When the real package is present we re-export it unchanged;
+otherwise a tiny deterministic re-implementation of the subset used by the
+tests (``given``, ``settings``, ``st.integers / sampled_from / booleans /
+lists`` + ``.filter``) runs each property over seeded pseudo-random examples.
+
+Usage in test modules (instead of ``from hypothesis import ...``):
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+    _MAX_REJECTS = 1000
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+        def filter(self, pred):
+            return _Filtered(self, pred)
+
+    class _Filtered(_Strategy):
+        def __init__(self, base, pred):
+            self.base, self.pred = base, pred
+
+        def example(self, rng):
+            for _ in range(_MAX_REJECTS):
+                v = self.base.example(rng)
+                if self.pred(v):
+                    return v
+            raise RuntimeError("filter rejected too many examples")
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=2 ** 31 - 1):
+            self.lo, self.hi = min_value, max_value
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return rng.choice(self.elements)
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size, self.max_size = min_size, max_size
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elements.example(rng) for _ in range(n)]
+
+    class _St:
+        """Namespace mirroring ``hypothesis.strategies``."""
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Lists(elements, min_size, max_size)
+
+    st = _St()
+
+    def given(*arg_strategies, **kw_strategies):
+        """Deterministic fallback: run the test body over N seeded examples."""
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+            # hide the strategy-filled parameters from pytest's fixture
+            # resolution (functools.wraps exposes them via __wrapped__)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels import swiglu as K_swiglu
@@ -168,6 +168,36 @@ def test_grouped_property(sizes):
     np.testing.assert_allclose(
         np.asarray(y), np.asarray(ref.grouped_swiglu(x, wg, wu, wd, gs)),
         atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("sizes", [
+    [0, 10],                # empty FIRST group (duplicate start at 0)
+    [10, 0],                # empty LAST group
+    [0, 0, 16],             # consecutive leading empties
+    [5, 0, 0, 0],           # consecutive trailing empties
+    [3, 0, 0, 3],           # empty run in the middle
+    [0, 0, 0, 0, 64],       # all-but-one empty
+    [40, 0, 24, 0, 16, 0, 8, 0],   # post-merge pattern: remap emptied every
+                                   # absorbed expert's bucket (M = N/2)
+    [0, 0, 0, 0],           # fully empty (T == 0)
+])
+def test_grouped_swiglu_zero_groups_regression(sizes):
+    """Zero-sized expert groups — exactly the layout after aggressive
+    MergeMoE merging — must neither skip nor misattribute blocks. Guards the
+    block->expert mapping against duplicate entries in ``padded_starts``."""
+    d, f = 24, 32
+    E = len(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    T = int(gs.sum())
+    x = _randn((T, d), jnp.float32)
+    wg, wu = _randn((E, d, f), jnp.float32, 0.2), _randn((E, d, f), jnp.float32, 0.2)
+    wd = _randn((E, f, d), jnp.float32, 0.2)
+    y = K_gm.grouped_swiglu(x, wg, wu, wd, gs, block_t=16, block_f=16,
+                            interpret=True)
+    assert y.shape == (T, d)
+    yr = ref.grouped_swiglu(x, wg, wu, wd, gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
 
 
 def test_grouped_matches_single_expert_swiglu():

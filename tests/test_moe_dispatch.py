@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.models import moe as MoE
@@ -107,8 +107,11 @@ def test_compressed_psum_multidevice():
         assert err < 0.05, err
         print("OK", err)
     """)
+    # JAX_PLATFORMS=cpu: without it, a container with libtpu installed spends
+    # ~8 min retrying GCP metadata probes before falling back to CPU.
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                       "HOME": "/root"}, cwd="/root/repo",
+                                       "HOME": "/root",
+                                       "JAX_PLATFORMS": "cpu"}, cwd="/root/repo",
                        timeout=300)
     assert "OK" in r.stdout, r.stdout + r.stderr

@@ -3,13 +3,14 @@ Uses AbstractMesh — no devices needed for spec derivation."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch import sharding as SH
+from repro.launch.mesh import make_abstract_mesh
 
 SDS = jax.ShapeDtypeStruct
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_param_rules_basic():

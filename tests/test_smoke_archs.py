@@ -37,6 +37,7 @@ def test_forward_shapes_and_finite(arch):
     assert np.isfinite(float(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)
 def test_one_train_step(arch):
     cfg = configs.get(arch).reduced()

@@ -1,7 +1,7 @@
 """Numerical verification of Theorem 1 (Appendix A) with hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import clustering as CL
 from repro.core import theory as TH
