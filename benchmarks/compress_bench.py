@@ -1,0 +1,110 @@
+"""Uniform vs budget-planned per-layer compression at MATCHED ratios.
+
+For each uniform budget M in the sweep, the budget planner is asked to hit
+the same live-byte compression ratio but may spread the expert budget
+unevenly across the suffix layers (squeezing low-routing-entropy layers
+harder, per the calibration stats). Both plans execute against the SAME
+calibration stream and the same held-out eval batches; the report seeds the
+perf trajectory for per-layer allocation:
+
+    PYTHONPATH=src python benchmarks/compress_bench.py --layers 4
+
+Writes ``BENCH_compress.json``: per matched ratio, the loss delta, live /
+padded bytes, and merge wall-time of each strategy. (At smoke scale a
+random-init model routes near-uniformly, so the planner may legitimately
+reproduce the uniform allocation; on trained checkpoints with skewed routing
+the per-layer budgets diverge — ``test_planner_respects_importance_stats``
+pins that behavior.)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro import configs
+from repro.core import calibration as CAL
+from repro.core import compress as CMP
+from repro.core import plan as PLAN
+from repro.launch.compress import eval_loss, make_batches
+from repro.models import model as MD
+
+
+def _record(cfg, params, plan, stream, evalb, base_loss, label):
+    ncfg, nparams, info = CMP.compress_with_plan(cfg, params, plan,
+                                                 stream=stream)
+    loss = eval_loss(ncfg, nparams, evalb)
+    rec = {
+        "label": label,
+        "merged_per_layer": list(plan.merged_per_layer),
+        "compression_ratio": round(info["compression_ratio"], 4),
+        "bytes_compressed": info["bytes_compressed"],
+        "bytes_padded": info["bytes_padded"],
+        "t_merge_s": round(info["t_merge_s"], 3),
+        "loss": round(loss, 4),
+        "loss_delta": round(loss - base_loss, 4),
+    }
+    print(f"  [{label:>8}] M={rec['merged_per_layer']} "
+          f"ratio={rec['compression_ratio']:.3f} "
+          f"Δloss={rec['loss_delta']:+.4f} merge={rec['t_merge_s']}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="stack depth (reduced config is rebuilt at this "
+                         "depth so per-layer allocation has room to differ)")
+    ap.add_argument("--split", type=int, default=1)
+    ap.add_argument("--uniform-m", type=int, nargs="+", default=[6, 4, 2])
+    ap.add_argument("--calib-batches", type=int, default=2)
+    ap.add_argument("--eval-batches", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(Path(__file__).with_name(
+        "BENCH_compress.json")))
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).reduced().replace(n_layers=args.layers)
+    params = MD.init(cfg, jax.random.PRNGKey(args.seed))
+    calib = make_batches(cfg, args.calib_batches, seed=args.seed + 100)
+    evalb = make_batches(cfg, args.eval_batches, seed=args.seed + 200)
+
+    stream = CAL.CalibrationStream(cfg, params, seed=args.seed).consume(calib)
+    base_loss = eval_loss(cfg, params, evalb)
+    print(f"== compress_bench: {cfg.name} L={args.layers} "
+          f"split={args.split} base loss {base_loss:.4f} ==")
+
+    rows = []
+    for m in args.uniform_m:
+        uni = PLAN.uniform(cfg, merged_experts=m, split=args.split)
+        # matched live-byte target under the planner's own byte model
+        target = PLAN.plan_live_ratio(cfg, uni)
+        print(f"-- matched ratio {target:.3f} (uniform M={m}) --")
+        u = _record(cfg, params, uni, stream, evalb, base_loss, "uniform")
+        planned = PLAN.for_target_ratio(cfg, target_ratio=target,
+                                        stats=stream.stats(),
+                                        split=args.split)
+        p = _record(cfg, params, planned, stream, evalb, base_loss, "planned")
+        rows.append({"uniform_m": m, "target_ratio": round(target, 4),
+                     "uniform": u, "planned": p})
+
+    out = {
+        "arch": args.arch, "n_layers": args.layers, "split": args.split,
+        "n_experts": cfg.moe.n_experts,
+        "calib_tokens": stream.n_tokens,
+        "loss_full": round(base_loss, 4),
+        "sweep": rows,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

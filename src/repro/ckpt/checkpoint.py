@@ -119,6 +119,98 @@ def load(directory, step: Optional[int] = None, shardings=None,
     return tree, meta.get("extras", {})
 
 
+# ---------------------------------------------------------------------------
+# compressed artifacts: plan + report + config ride in meta.json extras
+# ---------------------------------------------------------------------------
+
+_EXPERT_TABLES = ("wg", "wu", "wd")
+
+
+def _pack_ragged_suffix(cfg, params):
+    """Store heterogeneous suffix expert tables UNPADDED: the stacked
+    ``[L_c, M_max, ...]`` leaf becomes one per-layer leaf sliced to that
+    layer's live count, so the artifact's bytes match the plan's budget
+    rather than the in-memory max-M padding."""
+    if cfg.moe_merged_layers is None:
+        return params
+    live = cfg.live_experts_per_suffix_layer()
+    moe = dict(params["stack_c"]["moe"])
+    for key in _EXPERT_TABLES:
+        stacked = moe[key]
+        moe[key] = {f"layer_{i:03d}": stacked[i, :live[i]]
+                    for i in range(stacked.shape[0])}
+    return {**params, "stack_c": {**params["stack_c"], "moe": moe}}
+
+
+def _unpack_ragged_suffix(cfg, tree):
+    """Inverse of :func:`_pack_ragged_suffix`: zero-pad each layer back to
+    ``cfg.moe_merged`` rows and restack (exactly reproducing the in-memory
+    padded tables — the pad rows were zeros by construction)."""
+    if cfg.moe_merged_layers is None:
+        return tree
+    import jax.numpy as jnp
+    M = cfg.moe_merged
+    moe = dict(tree["stack_c"]["moe"])
+    for key in _EXPERT_TABLES:
+        layers = moe[key]
+        out = []
+        for i in range(len(layers)):
+            a = layers[f"layer_{i:03d}"]
+            pad = M - a.shape[0]
+            if pad:
+                a = jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+            out.append(a)
+        moe[key] = jnp.stack(out)
+    return {**tree, "stack_c": {**tree["stack_c"], "moe": moe}}
+
+
+def save_compressed(directory, cfg, params, plan=None, report=None,
+                    step: int = 0, keep: int = 0) -> Path:
+    """Persist a MergeMoE-compressed model as a loadable artifact.
+
+    The parameter tree is written through :func:`save`; the ``ModelConfig``,
+    the executed :class:`~repro.core.plan.CompressionPlan` and the
+    compression report travel in ``meta.json`` extras, so
+    :func:`load_compressed` (and ``Engine.from_checkpoint``) can rebuild the
+    model with zero out-of-band information. ``keep=0`` disables GC —
+    artifacts are not a rolling train-checkpoint window."""
+    if not cfg.moe_merged:
+        raise ValueError(
+            f"{cfg.name} is not compressed; save_compressed stores MergeMoE "
+            "artifacts — use save() for training checkpoints")
+    plan_dict = None
+    if plan is not None:
+        plan_dict = plan if isinstance(plan, dict) else plan.to_json_dict()
+    extras = {"compressed": {
+        "format": 1,
+        "config": cfg.to_json_dict(),
+        "plan": plan_dict,
+        "report": report or {},
+    }}
+    return save(directory, step, _pack_ragged_suffix(cfg, params),
+                extras=extras, keep=keep)
+
+
+def load_compressed(directory, step: Optional[int] = None):
+    """Restore (cfg, params, artifact) from a :func:`save_compressed`
+    directory. ``artifact`` is the extras dict ({"config", "plan",
+    "report"}); params come back padded/stacked, ready for the forward.
+
+    No ``shardings`` passthrough: the on-disk tree of a heterogeneous
+    artifact is the packed per-layer layout, which cannot pair with
+    shardings built for the padded/stacked model tree — re-shard the
+    returned params with ``jax.device_put`` instead."""
+    from repro.models.config import config_from_dict
+    tree, extras = load(directory, step)
+    art = extras.get("compressed")
+    if art is None:
+        raise ValueError(
+            f"{directory} holds a plain checkpoint, not a compressed "
+            "artifact (no 'compressed' extras); use load()")
+    cfg = config_from_dict(art["config"])
+    return cfg, _unpack_ragged_suffix(cfg, tree), art
+
+
 class CheckpointManager:
     """Keep-N manager with optional ASYNC saves (device_get on the caller
     thread — cheap snapshot — then file I/O on a worker thread, so the train

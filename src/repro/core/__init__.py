@@ -1,5 +1,10 @@
 from repro.core.errors import TechniqueInapplicable, CalibrationError  # noqa: F401
-from repro.core.compress import compress_model  # noqa: F401
+from repro.core.compress import (  # noqa: F401
+    compress_model, compress_with_plan, MIN_SAMPLE_WARN)
+from repro.core.calibration import CalibrationStream, collect  # noqa: F401
 from repro.core.merge import merge_layer, MergeResult, METHODS  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    CompressionPlan, LayerSpec, MergeStrategy, register_method,
+    get_strategy, available_methods, uniform, suffix, for_target_ratio)
 from repro.core.clustering import (  # noqa: F401
     cluster_experts, merge_weights, summation_matrix, mixing_matrix)

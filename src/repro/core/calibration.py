@@ -1,16 +1,27 @@
-"""Calibration-activation capture (JAX replacement for the paper's Torch
-hooks, App. B).
+"""Calibration capture (JAX replacement for the paper's Torch hooks, App. B).
 
-``collect(cfg, params, batches)`` runs the ORIGINAL model with
-``capture=True`` and returns, per MoE layer, the expert-input activations X̂
-and the expert usage counts f. Because JAX forwards are pure, a single-shot
-capture is exactly equivalent to the paper's back-to-front layer traversal
-(merging layer ℓ never perturbs activations at layers ≤ ℓ) — see DESIGN.md §3.
+Two surfaces over the same capture forward:
+
+* :class:`CalibrationStream` — a STREAMING accumulator. Feed it batches one
+  at a time (``update``); it keeps, per MoE layer, a bounded token reservoir
+  of expert-input activations X̂ and the running usage counts f. Host memory
+  is ``O(L * max_tokens * d)`` no matter how many batches are streamed
+  (Algorithm-R reservoir sampling once the cap is hit, with ONE shared
+  replacement schedule across layers so every layer keeps the same token
+  positions — deterministic under ``seed``). The plan executor consumes it
+  layer by layer.
+* :func:`collect` — the legacy one-shot API, now a thin wrapper that streams
+  every batch through a ``CalibrationStream`` and returns the familiar
+  ``{layer: LayerCalibration}`` dict.
+
+Because JAX forwards are pure, a single-shot capture is exactly equivalent to
+the paper's back-to-front layer traversal (merging layer ℓ never perturbs
+activations at layers ≤ ℓ) — see DESIGN.md §3.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import jax
 import numpy as np
@@ -25,28 +36,143 @@ class LayerCalibration:
     counts: np.ndarray   # [N] usage frequencies
 
 
-def collect(cfg: ModelConfig, params: dict, batches: Iterable[dict],
-            max_tokens_per_layer: int | None = None
-            ) -> Dict[int, LayerCalibration]:
-    """Returns {layer_index: LayerCalibration} for every MoE layer."""
-    assert cfg.moe is not None, "calibration capture requires an MoE model"
-    fwd = jax.jit(lambda p, b: MD.forward(cfg, p, b, capture=True)[2])
+class CalibrationStream:
+    """Streaming per-layer activation reservoir + running expert counts.
 
-    xs: List[np.ndarray] = []
-    counts: np.ndarray | None = None
-    for batch in batches:
-        cap = fwd(params, batch)
-        expert_inputs, cnts = cap                     # [L,B,S,d], [L,N]
-        xi = np.asarray(expert_inputs, np.float32)
+    ``max_tokens_per_layer=None`` keeps every streamed token (the legacy
+    ``collect`` behavior — unbounded); an integer cap bounds host memory.
+    Beyond the cap, ``policy`` picks what survives:
+
+    * ``"reservoir"`` (default) — Algorithm-R uniform sample over every
+      streamed token (seeded, deterministic);
+    * ``"head"`` — keep the FIRST cap tokens and drop the rest, exactly the
+      legacy concatenate-then-truncate capture (counts keep accumulating
+      over the whole stream either way).
+
+    Tokens below the cap are kept in stream order under both policies, so
+    with a cap ≥ the total token count the stream is bit-identical to the
+    legacy capture.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 max_tokens_per_layer: Optional[int] = None, seed: int = 0,
+                 policy: str = "reservoir"):
+        if cfg.moe is None:
+            raise ValueError("calibration capture requires an MoE model")
+        if policy not in ("reservoir", "head"):
+            raise ValueError(f"unknown calibration policy {policy!r}")
+        self.cfg = cfg
+        self.cap = max_tokens_per_layer
+        self.policy = policy
+        self._fwd = jax.jit(
+            lambda p, b: MD.forward(cfg, p, b, capture=True)[2])
+        self._params = params
+        self._rng = np.random.default_rng(seed)
+        self._x: Optional[np.ndarray] = None      # [L, cap_or_T, d]
+        # uncapped mode defers concatenation: chunks pile up here and are
+        # joined once on first read (streaming B batches stays O(B), not
+        # O(B^2) in host copies)
+        self._chunks: List[np.ndarray] = []
+        self._counts: Optional[np.ndarray] = None  # [L, N]
+        self.tokens_seen = 0
+        self.batches_seen = 0
+
+    # ---- feeding ----------------------------------------------------------
+    def update(self, batch: dict) -> None:
+        """Run one capture forward and fold the batch into the reservoir."""
+        expert_inputs, cnts = self._fwd(self._params, batch)
+        xi = np.asarray(expert_inputs, np.float32)       # [L, B, S, d]
         L = xi.shape[0]
-        xs.append(xi.reshape(L, -1, xi.shape[-1]))    # [L, B*S, d]
-        c = np.asarray(cnts, np.float32)
-        counts = c if counts is None else counts + c
+        xi = xi.reshape(L, -1, xi.shape[-1])             # [L, B*S, d]
+        c = np.asarray(cnts, np.float32)                 # [L, N]
+        self._counts = c if self._counts is None else self._counts + c
+        self._fold(xi)
+        self.tokens_seen += xi.shape[1]
+        self.batches_seen += 1
 
-    x_all = np.concatenate(xs, axis=1)                # [L, T, d]
-    if max_tokens_per_layer is not None:
-        x_all = x_all[:, :max_tokens_per_layer]
-    return {
-        l: LayerCalibration(x=x_all[l], counts=counts[l])
-        for l in range(x_all.shape[0])
-    }
+    def consume(self, batches: Iterable[dict]) -> "CalibrationStream":
+        for b in batches:
+            self.update(b)
+        return self
+
+    def _fold(self, xi: np.ndarray) -> None:
+        """Reservoir update. xi: [L, B*S, d]. The keep/replace decisions are
+        drawn once per TOKEN and shared across layers, so layer ℓ's reservoir
+        always holds the same token positions as layer ℓ' — the cross-layer
+        alignment the budget planner's stats rely on."""
+        if self.cap is None:
+            self._chunks.append(xi.copy())
+            return
+        if self._x is None:
+            self._x = np.empty((xi.shape[0], 0, xi.shape[-1]), np.float32)
+        fill = min(self.cap - self._x.shape[1], xi.shape[1])
+        if fill > 0:
+            self._x = np.concatenate([self._x, xi[:, :fill]], axis=1)
+        if self.policy == "head":
+            return                            # legacy truncation: drop rest
+        n_over = xi.shape[1] - fill
+        if n_over <= 0:
+            return
+        # Algorithm R over the overflow, vectorized: the token with 0-based
+        # global index g replaces a uniformly random reservoir row with prob
+        # cap/(g+1). One uniform draw per token, scaled to its own [0, g+1)
+        # range; duplicate targets resolve last-write-wins (NumPy fancy
+        # assignment keeps the final occurrence), matching the sequential
+        # later-token-overwrites semantics.
+        g = self.tokens_seen + fill + np.arange(n_over)
+        js = (self._rng.random(n_over) * (g + 1)).astype(np.int64)
+        keep = np.flatnonzero(js < self.cap)
+        if keep.size:
+            self._x[:, js[keep]] = xi[:, fill + keep]
+
+    def _materialize(self) -> np.ndarray:
+        if self._chunks:
+            parts = ([self._x] if self._x is not None else []) + self._chunks
+            self._x = (parts[0] if len(parts) == 1
+                       else np.concatenate(parts, axis=1))
+            self._chunks = []
+        if self._x is None:
+            raise ValueError("CalibrationStream has seen no batches")
+        return self._x
+
+    # ---- consuming --------------------------------------------------------
+    @property
+    def n_tokens(self) -> int:
+        """Tokens currently held per layer (≤ cap)."""
+        held = 0 if self._x is None else int(self._x.shape[1])
+        return held + sum(c.shape[1] for c in self._chunks)
+
+    def layer(self, l: int) -> LayerCalibration:
+        """Calibration view for ONE layer (the plan executor's access path)."""
+        x = self._materialize()
+        return LayerCalibration(x=x[l], counts=self._counts[l])
+
+    def counts(self, l: int) -> np.ndarray:
+        if self._counts is None:
+            raise ValueError("CalibrationStream has seen no batches")
+        return self._counts[l]
+
+    def stats(self) -> Dict[int, np.ndarray]:
+        """{layer: usage counts} — the budget planner's input."""
+        if self._counts is None:
+            return {}
+        return {l: self._counts[l] for l in range(self._counts.shape[0])}
+
+    def as_dict(self) -> Dict[int, LayerCalibration]:
+        """Legacy ``collect``-shaped view (per-layer materialization)."""
+        x = self._materialize()
+        return {l: self.layer(l) for l in range(x.shape[0])}
+
+
+def collect(cfg: ModelConfig, params: dict, batches: Iterable[dict],
+            max_tokens_per_layer: int | None = None, seed: int = 0
+            ) -> Dict[int, LayerCalibration]:
+    """Returns {layer_index: LayerCalibration} for every MoE layer
+    (compatibility wrapper over :class:`CalibrationStream`; ``policy='head'``
+    reproduces the historical concatenate-then-truncate capture exactly)."""
+    assert cfg.moe is not None, "calibration capture requires an MoE model"
+    stream = CalibrationStream(cfg, params,
+                               max_tokens_per_layer=max_tokens_per_layer,
+                               seed=seed, policy="head")
+    stream.consume(batches)
+    return stream.as_dict()

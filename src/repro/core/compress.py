@@ -1,12 +1,21 @@
-"""End-to-end MergeMoE compression pipeline.
+"""End-to-end MergeMoE compression pipeline, driven by a CompressionPlan.
 
-``compress_model(cfg, params, method, merged_experts, split, batches)``:
-  1. capture calibration activations + usage counts from the ORIGINAL model,
-  2. merge every MoE layer in [split, n_layers) independently (the paper's
+``compress_with_plan(cfg, params, plan, batches=...)``:
+  1. stream calibration batches through the ORIGINAL model
+     (:class:`repro.core.calibration.CalibrationStream` — bounded host
+     memory, running counts),
+  2. execute the plan layer by layer: each :class:`LayerSpec` picks a
+     registered merge strategy and a per-layer budget M_ℓ (the paper's
      back-to-front traversal is equivalent under pure-functional capture —
      DESIGN.md §3),
-  3. return (compressed_cfg, compressed_params) with the suffix stack's expert
-     tables replaced by M merged experts + the [N]->[M] remap (matrix A).
+  3. return (compressed_cfg, compressed_params, report) with the suffix
+     stack's expert tables replaced by the merged experts (padded to the
+     plan's max M for scan homogeneity — DESIGN.md §5) + the [N]->[M] remap
+     (matrix A) and the per-layer live-expert counts.
+
+``compress_model(cfg, params, method=..., merged_experts=..., split=...)``
+survives as a compatibility shim that builds a uniform plan — bit-for-bit
+identical to the historical single-method pipeline.
 
 Works on any MoE config; raises TechniqueInapplicable for expert-free
 architectures (DESIGN.md §4).
@@ -14,14 +23,15 @@ architectures (DESIGN.md §4).
 from __future__ import annotations
 
 import time
-from typing import Dict, Iterable, List, Tuple
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import calibration as CAL
-from repro.core import merge as MG
+from repro.core import plan as PLAN
 from repro.core.errors import TechniqueInapplicable, CalibrationError
 from repro.models.config import ModelConfig
 
@@ -34,60 +44,105 @@ def _slice_layers(tree, sel):
     return jax.tree.map(lambda a: a[sel], tree)
 
 
-def compress_model(cfg: ModelConfig, params: dict, *, method: str = "mergemoe",
-                   merged_experts: int, split: int | None = None,
-                   batches: Iterable[dict], max_tokens: int | None = None,
-                   strict_samples: bool = False,
-                   ) -> Tuple[ModelConfig, dict, Dict]:
-    if cfg.moe is None:
-        raise TechniqueInapplicable(
-            f"{cfg.name} ({cfg.family}) has no routed experts (DESIGN.md §4).")
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _pad_rows(a: np.ndarray, M_max: int) -> np.ndarray:
+    """Zero-pad the expert (first) axis of a merged table to M_max."""
+    if a.shape[0] == M_max:
+        return a
+    widths = [(0, M_max - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, widths)
+
+
+def compress_with_plan(cfg: ModelConfig, params: dict,
+                       plan: PLAN.CompressionPlan, *,
+                       batches: Optional[Iterable[dict]] = None,
+                       stream: Optional[CAL.CalibrationStream] = None,
+                       max_tokens: Optional[int] = None,
+                       strict_samples: bool = False, seed: int = 0,
+                       calib_policy: str = "reservoir",
+                       ) -> Tuple[ModelConfig, dict, Dict]:
+    """Execute ``plan`` against ``params``. Calibration comes from ``stream``
+    (a pre-fed :class:`CalibrationStream`, reusable across planning and
+    merging) or is collected here from ``batches`` (``calib_policy`` picks
+    what survives a ``max_tokens`` cap: a uniform reservoir sample, or
+    ``"head"`` — the legacy first-``max_tokens`` truncation)."""
+    plan.validate(cfg)
     if cfg.moe_merged:
         raise ValueError("model is already compressed")
 
-    new_cfg = cfg.compressed(merged_experts, split)
-    split = new_cfg.moe_split
-    L, N, M = cfg.n_layers, cfg.moe.n_experts, merged_experts
+    new_cfg = plan.apply_to(cfg)
+    split = plan.split
+    L, N = cfg.n_layers, cfg.moe.n_experts
+    M_max = plan.max_merged
 
     t0 = time.perf_counter()
-    calib = CAL.collect(cfg, params, batches, max_tokens_per_layer=max_tokens)
+    if stream is None:
+        stream = CAL.CalibrationStream(cfg, params,
+                                       max_tokens_per_layer=max_tokens,
+                                       seed=seed, policy=calib_policy)
+    if batches is not None:
+        stream.consume(batches)
     t_calib = time.perf_counter() - t0
 
-    n_samples = calib[split].x.shape[0]
-    if n_samples < MIN_SAMPLE_WARN and strict_samples:
-        raise CalibrationError(
-            f"{n_samples} calibration tokens < critical threshold "
-            f"{MIN_SAMPLE_WARN} (paper Fig. 4)")
+    n_samples = stream.n_tokens
+    if n_samples < MIN_SAMPLE_WARN:
+        if strict_samples:
+            raise CalibrationError(
+                f"{n_samples} calibration tokens < critical threshold "
+                f"{MIN_SAMPLE_WARN} (paper Fig. 4)")
+        warnings.warn(
+            f"only {n_samples} calibration tokens (< {MIN_SAMPLE_WARN}, "
+            "paper Fig. 4): the least-squares merge may be under-determined",
+            stacklevel=2)
 
     stack = params["stack"]
     moe_p = stack["moe"]
-    router_all = np.asarray(moe_p["router"], np.float32)      # [L, d, N]
+    needs_router = "router" in plan.requirements()
+    router_all = (np.asarray(moe_p["router"], np.float32)
+                  if needs_router else None)          # [L, d, N]
 
     t0 = time.perf_counter()
-    merged: List[MG.MergeResult] = []
-    for l in range(split, L):
-        res = MG.merge_layer(
-            method,
+    merged: List = []
+    per_layer: List[Dict] = []
+    for spec in plan.specs:
+        l = spec.layer
+        strategy = PLAN.get_strategy(spec.method)
+        calib = stream.layer(l)
+        res = strategy.merge(
             np.asarray(moe_p["wg"][l], np.float32),
             np.asarray(moe_p["wu"][l], np.float32),
             np.asarray(moe_p["wd"][l], np.float32),
-            calib[l].counts,
-            calib[l].x,
-            M,
-            router=router_all[l] if method == "msmoe" else None,
+            calib.counts if "counts" in strategy.requires else None,
+            calib.x if "x" in strategy.requires else None,
+            spec.merged_experts,
+            router=router_all[l] if "router" in strategy.requires else None,
         )
         merged.append(res)
+        resid = res.info.get("resid")
+        per_layer.append({
+            "layer": l, "method": spec.method,
+            "merged_experts": spec.merged_experts,
+            "resid": (None if resid is None
+                      else [float(r) for r in np.asarray(resid)]),
+        })
     t_merge = time.perf_counter() - t0
 
-    # ---- assemble the compressed parameter tree
+    # ---- assemble the compressed parameter tree (padded to max M)
     dt = cfg.param_dtype
     suffix = _slice_layers(stack, slice(split, L))
     suffix_moe = dict(suffix["moe"])
-    suffix_moe["wg"] = jnp.asarray(np.stack([r.wg for r in merged]), dt)
-    suffix_moe["wu"] = jnp.asarray(np.stack([r.wu for r in merged]), dt)
-    suffix_moe["wd"] = jnp.asarray(np.stack([r.wd for r in merged]), dt)
+    suffix_moe["wg"] = jnp.asarray(
+        np.stack([_pad_rows(r.wg, M_max) for r in merged]), dt)
+    suffix_moe["wu"] = jnp.asarray(
+        np.stack([_pad_rows(r.wu, M_max) for r in merged]), dt)
+    suffix_moe["wd"] = jnp.asarray(
+        np.stack([_pad_rows(r.wd, M_max) for r in merged]), dt)
     suffix_moe["remap"] = jnp.asarray(np.stack([r.remap for r in merged]),
                                       jnp.int32)
+    suffix_moe["live"] = jnp.asarray(plan.merged_per_layer, jnp.int32)
     suffix = dict(suffix)
     suffix["moe"] = suffix_moe
 
@@ -96,20 +151,49 @@ def compress_model(cfg: ModelConfig, params: dict, *, method: str = "mergemoe",
         new_params["stack"] = _slice_layers(stack, slice(0, split))
     new_params["stack_c"] = suffix
 
-    orig = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
-    comp = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(new_params))
+    orig = _tree_bytes(params)
+    padded = _tree_bytes(new_params)
+    # live bytes: what a ragged artifact stores — pad rows excluded (same
+    # per-expert byte model the budget planner optimizes)
+    pad_bytes = sum((M_max - m) * PLAN.expert_bytes(cfg)
+                    for m in plan.merged_per_layer)
+    comp = padded - pad_bytes
+    methods = sorted(set(plan.methods))
     info = {
-        "method": method,
-        "layers_merged": list(range(split, L)),
+        "method": methods[0] if len(methods) == 1 else "mixed",
+        "plan": plan.to_json_dict(),
+        "layers_merged": list(plan.layers),
+        "merged_per_layer": list(plan.merged_per_layer),
+        "per_layer": per_layer,
         "n_experts": N,
-        "merged_experts": M,
+        "merged_experts": M_max,
         "calib_tokens": int(n_samples),
+        "calib_warning": bool(n_samples < MIN_SAMPLE_WARN),
         "t_calibrate_s": t_calib,
         "t_merge_s": t_merge,
         "bytes_original": int(orig),
         "bytes_compressed": int(comp),
+        "bytes_padded": int(padded),
         "compression_ratio": float(orig) / float(comp),
-        "resid": [r.info.get("resid") for r in merged
-                  if r.info.get("resid") is not None],
+        "resid": [e["resid"] for e in per_layer if e["resid"] is not None],
     }
     return new_cfg, new_params, info
+
+
+def compress_model(cfg: ModelConfig, params: dict, *, method: str = "mergemoe",
+                   merged_experts: int, split: int | None = None,
+                   batches: Iterable[dict], max_tokens: int | None = None,
+                   strict_samples: bool = False, seed: int = 0,
+                   ) -> Tuple[ModelConfig, dict, Dict]:
+    """Legacy single-method surface: builds a uniform plan and executes it."""
+    if cfg.moe is None:
+        raise TechniqueInapplicable(
+            f"{cfg.name} ({cfg.family}) has no routed experts (DESIGN.md §4).")
+    plan = PLAN.uniform(cfg, method=method, merged_experts=merged_experts,
+                        split=split)
+    # calib_policy="head": a max_tokens cap truncates to the FIRST tokens,
+    # exactly as the historical pipeline did
+    return compress_with_plan(cfg, params, plan, batches=batches,
+                              max_tokens=max_tokens,
+                              strict_samples=strict_samples, seed=seed,
+                              calib_policy="head")

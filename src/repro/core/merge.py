@@ -208,6 +208,9 @@ def merge_zipit(wg, wu, wd, counts, X, M) -> MergeResult:
                        assign, w, info={"method": "zipit"})
 
 
+# Compatibility view of the registry in repro.core.plan (the canonical home
+# of strategy registration); kept so ``for method in MG.METHODS`` call sites
+# and the CLI keep working.
 METHODS = {
     "mergemoe": merge_mergemoe,
     "msmoe": merge_msmoe,
@@ -218,8 +221,8 @@ METHODS = {
 
 def merge_layer(method: str, wg, wu, wd, counts, X, M, *,
                 router=None, **kw) -> MergeResult:
-    if method == "msmoe":
-        return merge_msmoe(wg, wu, wd, counts, X, M, router=router)
-    if method == "mergemoe":
-        return merge_mergemoe(wg, wu, wd, counts, X, M, **kw)
-    return METHODS[method](wg, wu, wd, counts, X, M)
+    """Single-layer merge through the strategy registry. Prefer building a
+    :class:`repro.core.plan.CompressionPlan` for whole-model compression."""
+    from repro.core import plan as PLAN   # local: plan imports this module
+    return PLAN.get_strategy(method).merge(wg, wu, wd, counts, X, M,
+                                           router=router, **kw)

@@ -1,10 +1,20 @@
-"""MergeMoE compression driver: train-or-load -> calibrate -> merge -> eval.
+"""MergeMoE compression driver: train-or-load -> calibrate -> plan -> merge
+-> eval -> (optionally) persist a loadable artifact.
 
+    # legacy uniform surface
     PYTHONPATH=src python -m repro.launch.compress --arch qwen3-moe-30b-a3b \
         --method mergemoe --merged-experts 4 --eval-batches 4
 
+    # declarative plan from disk
+    PYTHONPATH=src python -m repro.launch.compress --plan plan.json
+
+    # budget-driven: allocate per-layer M from calibration stats
+    PYTHONPATH=src python -m repro.launch.compress --target-ratio 1.4 \
+        --save-dir /tmp/qwen3_c      # artifact for Engine.from_checkpoint
+
 Reports the paper's headline quantities: bytes before/after, per-method
-held-out loss, merge wall-time (Fig. 3 analogue).
+held-out loss, merge wall-time (Fig. 3 analogue), plus the executed per-layer
+plan and eval wall-time.
 """
 from __future__ import annotations
 
@@ -13,17 +23,24 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import calibration as CAL
 from repro.core import compress as CMP
+from repro.core import plan as PLAN
 from repro.models import model as MD
+
+# ONE jitted loss fn for every evaluation in this process: the config rides
+# as a static argument, so calling it with the base and the compressed model
+# reuses the same callable (each distinct cfg traces once, instead of the old
+# eval_loss re-jitting from scratch on every call).
+_EVAL_LOSS = jax.jit(lambda cfg, p, b: MD.loss(cfg, p, b)[0],
+                     static_argnums=0)
 
 
 def eval_loss(cfg, params, batches) -> float:
-    fn = jax.jit(lambda p, b: MD.loss(cfg, p, b)[0])
-    losses = [float(fn(params, b)) for b in batches]
+    losses = [float(_EVAL_LOSS(cfg, params, b)) for b in batches]
     return float(np.mean(losses))
 
 
@@ -36,52 +53,110 @@ def make_batches(cfg, n, batch=4, seq=64, seed=0):
     return out
 
 
-def run(arch: str, method: str, merged_experts: int, split=None,
-        calib_batches: int = 2, eval_batches: int = 4, params=None,
-        cfg=None, seed: int = 0):
+def build_plan(cfg, *, plan_path=None, target_ratio=None, method="mergemoe",
+               merged_experts=4, split=None, stream=None):
+    """Resolve the CLI's three plan sources, most declarative first."""
+    if plan_path:
+        return PLAN.CompressionPlan.load(plan_path).validate(cfg)
+    if target_ratio:
+        stats = stream.stats() if stream is not None else None
+        return PLAN.for_target_ratio(cfg, target_ratio=target_ratio,
+                                     stats=stats, method=method, split=split)
+    return PLAN.uniform(cfg, method=method, merged_experts=merged_experts,
+                        split=split)
+
+
+def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
+        split=None, calib_batches: int = 2, eval_batches: int = 4,
+        params=None, cfg=None, seed: int = 0, plan=None, plan_path=None,
+        target_ratio=None, max_calib_tokens=None, save_dir=None):
     cfg = cfg if cfg is not None else configs.get(arch).reduced()
     if params is None:
         params = MD.init(cfg, jax.random.PRNGKey(seed))
     calib = make_batches(cfg, calib_batches, seed=seed + 100)
     evalb = make_batches(cfg, eval_batches, seed=seed + 200)
 
-    base_loss = eval_loss(cfg, params, evalb)
     t0 = time.perf_counter()
-    new_cfg, new_params, info = CMP.compress_model(
-        cfg, params, method=method, merged_experts=merged_experts,
-        split=split, batches=calib)
+    base_loss = eval_loss(cfg, params, evalb)
+    t_eval_base = time.perf_counter() - t0
+
+    # calibrate ONCE: the same stream feeds the budget planner's stats and
+    # the per-layer merges
+    stream = CAL.CalibrationStream(cfg, params,
+                                   max_tokens_per_layer=max_calib_tokens,
+                                   seed=seed).consume(calib)
+    if plan is None:
+        plan = build_plan(cfg, plan_path=plan_path, target_ratio=target_ratio,
+                          method=method, merged_experts=merged_experts,
+                          split=split, stream=stream)
+
+    t0 = time.perf_counter()
+    new_cfg, new_params, info = CMP.compress_with_plan(
+        cfg, params, plan, stream=stream)
     t_total = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
     comp_loss = eval_loss(new_cfg, new_params, evalb)
+    t_eval_comp = time.perf_counter() - t0
+
+    if save_dir:
+        from repro.ckpt import checkpoint as CKPT
+        CKPT.save_compressed(save_dir, new_cfg, new_params, plan=plan,
+                             report=info)
+
     report = {
-        "arch": arch, "method": method,
+        "arch": arch, "method": info["method"],
+        "plan": info["plan"],
         "n_experts": info["n_experts"],
         "merged_experts": info["merged_experts"],
+        "merged_per_layer": info["merged_per_layer"],
         "layers_merged": info["layers_merged"],
+        "calib_tokens": info["calib_tokens"],
         "bytes_original": info["bytes_original"],
         "bytes_compressed": info["bytes_compressed"],
         "compression_ratio": round(info["compression_ratio"], 4),
         "t_merge_s": round(info["t_merge_s"], 3),
         "t_total_s": round(t_total, 3),
+        "t_eval_base_s": round(t_eval_base, 3),
+        "t_eval_compressed_s": round(t_eval_comp, 3),
+        "t_eval_s": round(t_eval_base + t_eval_comp, 3),
         "loss_full": round(base_loss, 4),
         "loss_compressed": round(comp_loss, 4),
         "loss_delta": round(comp_loss - base_loss, 4),
     }
+    if save_dir:
+        report["artifact"] = str(save_dir)
     return new_cfg, new_params, report
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="execute a CompressionPlan from disk "
+                         "(overrides --method/--merged-experts/--split)")
+    ap.add_argument("--target-ratio", type=float, default=None,
+                    help="budget-driven planning: allocate per-layer M from "
+                         "calibration stats to hit this compression ratio")
     ap.add_argument("--method", default="mergemoe",
-                    choices=["mergemoe", "msmoe", "average", "zipit"])
+                    choices=PLAN.available_methods())
     ap.add_argument("--merged-experts", type=int, default=4)
     ap.add_argument("--split", type=int, default=None)
     ap.add_argument("--calib-batches", type=int, default=2)
+    ap.add_argument("--max-calib-tokens", type=int, default=None,
+                    help="calibration reservoir cap per layer (bounds host "
+                         "memory; default keeps every token)")
     ap.add_argument("--eval-batches", type=int, default=4)
+    ap.add_argument("--save-dir", default=None,
+                    help="persist the compressed artifact "
+                         "(Engine.from_checkpoint loads it)")
     args = ap.parse_args()
     _, _, report = run(args.arch, args.method, args.merged_experts,
                        split=args.split, calib_batches=args.calib_batches,
-                       eval_batches=args.eval_batches)
+                       eval_batches=args.eval_batches, plan_path=args.plan,
+                       target_ratio=args.target_ratio,
+                       max_calib_tokens=args.max_calib_tokens,
+                       save_dir=args.save_dir)
     print(json.dumps(report, indent=1))
 
 

@@ -37,6 +37,7 @@ RULES: List[Tuple[str, Tuple]] = [
     (r"moe/wd$",             ("M", None, "D")),     # [.., E, f, d@D]
     (r"moe/router$",         (None, None)),         # tiny, replicated
     (r"moe/remap$",          (None,)),
+    (r"moe/live$",           ()),                    # per-layer scalar
     (r"shared/(wg|wu)$",     ("D", "M")),
     (r"shared/wd$",          ("M", "D")),
     # Q/O tensor-parallel over heads; K/V REPLICATED across "model" (GQA has

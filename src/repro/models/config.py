@@ -66,10 +66,15 @@ class ModelConfig:
 
     moe: Optional[MoEConfig] = None
     # MergeMoE compression state: layers [moe_split, n_layers) hold
-    # ``moe_merged`` REAL experts (plus the original router + remap table).
-    # moe_merged == 0 means uncompressed.
+    # ``moe_merged`` REAL expert slots (plus the original router + remap
+    # table). moe_merged == 0 means uncompressed. Heterogeneous per-layer
+    # budgets set ``moe_merged_layers`` (one live count per suffix layer);
+    # the stored tables stay padded to ``moe_merged`` = max so the suffix
+    # stack scans homogeneously, and the remap/router-logit mask keeps the
+    # pad rows unreachable (DESIGN.md §5).
     moe_split: int = 0
     moe_merged: int = 0
+    moe_merged_layers: Optional[Tuple[int, ...]] = None
     ssm: Optional[SSMConfig] = None
     # hybrid (zamba2): one *shared* attention+MLP block applied every k SSM blocks
     hybrid_attn_every: int = 0
@@ -119,7 +124,46 @@ class ModelConfig:
                 "MergeMoE expert merging does not apply (DESIGN.md §4).")
         if split is None:
             split = int(self.n_layers * 0.6)
-        return self.replace(moe_split=split, moe_merged=merged_experts)
+        return self.replace(moe_split=split, moe_merged=merged_experts,
+                            moe_merged_layers=None)
+
+    def compressed_per_layer(self, merged_per_layer: Tuple[int, ...],
+                             split: int) -> "ModelConfig":
+        """Config view after a heterogeneous plan: suffix layer ``split + i``
+        keeps ``merged_per_layer[i]`` LIVE experts; physical tables are
+        padded to the max so the stack scans homogeneously (DESIGN.md §5)."""
+        if self.moe is None:
+            from repro.core.errors import TechniqueInapplicable
+            raise TechniqueInapplicable(
+                f"{self.name} ({self.family}) has no routed experts; "
+                "MergeMoE expert merging does not apply (DESIGN.md §4).")
+        merged = tuple(int(m) for m in merged_per_layer)
+        if len(merged) != self.n_layers - split:
+            raise ValueError(
+                f"need one merged-expert count per layer in "
+                f"[{split}, {self.n_layers}); got {len(merged)}")
+        if any(not 1 <= m <= self.moe.n_experts for m in merged):
+            raise ValueError(
+                f"per-layer merged counts {merged} outside "
+                f"[1, {self.moe.n_experts}]")
+        uniform = len(set(merged)) == 1
+        return self.replace(moe_split=split, moe_merged=max(merged),
+                            moe_merged_layers=None if uniform else merged)
+
+    def live_experts_per_suffix_layer(self) -> Tuple[int, ...]:
+        """Live (routable) expert count for each compressed suffix layer."""
+        if not self.moe_merged:
+            raise ValueError("model is not compressed")
+        if self.moe_merged_layers is not None:
+            return self.moe_merged_layers
+        return (self.moe_merged,) * (self.n_layers - self.moe_split)
+
+    # ---- (de)serialization for compressed artifacts ------------------------
+    def to_json_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.moe_merged_layers is not None:
+            d["moe_merged_layers"] = list(self.moe_merged_layers)
+        return d
 
     # ---- parameter accounting (for roofline MODEL_FLOPS) ------------------
     def attn_params_per_layer(self) -> int:
@@ -210,3 +254,16 @@ class ModelConfig:
         if self.vlm_num_patches:
             kw["vlm_num_patches"] = 4
         return self.replace(**kw)
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    """Inverse of :meth:`ModelConfig.to_json_dict` (JSON-safe types back to
+    the frozen dataclasses; lists back to tuples)."""
+    d = dict(d)
+    if d.get("moe") is not None:
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("ssm") is not None:
+        d["ssm"] = SSMConfig(**d["ssm"])
+    if d.get("moe_merged_layers") is not None:
+        d["moe_merged_layers"] = tuple(int(m) for m in d["moe_merged_layers"])
+    return ModelConfig(**d)

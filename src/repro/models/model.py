@@ -46,6 +46,17 @@ def init(cfg: ModelConfig, rng) -> dict:
             params["stack_c"] = T.stack_init(
                 cfg, k_b, n_layers=cfg.n_layers - cfg.moe_split,
                 n_real=cfg.moe_merged)
+            if cfg.moe_merged_layers is not None:
+                # heterogeneous per-layer M: tables stay padded to the max,
+                # but each layer's remap may only address its LIVE rows and
+                # ``live`` arms the router-logit mask (DESIGN.md §5)
+                live = jnp.asarray(cfg.moe_merged_layers, jnp.int32)
+                E = cfg.moe.n_experts
+                moe_c = dict(params["stack_c"]["moe"])
+                moe_c["live"] = live
+                moe_c["remap"] = (jnp.arange(E, dtype=jnp.int32)[None, :]
+                                  % live[:, None])
+                params["stack_c"] = dict(params["stack_c"], moe=moe_c)
         else:
             params["stack"] = T.stack_init(cfg, k_stack)
     elif cfg.family == "ssm":

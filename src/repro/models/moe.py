@@ -47,7 +47,13 @@ class MoEOutput(NamedTuple):
 
 def moe_init(cfg: ModelConfig, key, n_real: int | None = None) -> dict:
     """n_real: number of physically stored experts (M after MergeMoE
-    compression); router/remap always span the ORIGINAL n_experts."""
+    compression); router/remap always span the ORIGINAL n_experts.
+
+    ``live`` counts the routable rows of the expert tables. Heterogeneous
+    plans pad every suffix layer's tables to the plan's max M, and
+    ``live`` < n_real marks the pad rows; :func:`route` masks the router
+    logits of any original expert whose remap lands on a pad row, so the
+    zero-filled padding is unreachable (DESIGN.md §5)."""
     m = cfg.moe
     d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
     R = n_real or E
@@ -60,6 +66,7 @@ def moe_init(cfg: ModelConfig, key, n_real: int | None = None) -> dict:
         "wd": _dense_init(kd, (R, f, d), dt),
         # identity remap = uncompressed; [N]->[M] after merging.
         "remap": jnp.arange(E, dtype=jnp.int32) % R,
+        "live": jnp.asarray(R, jnp.int32),
     }
     if m.n_shared_experts:
         p["shared"] = mlp_init(d, m.n_shared_experts * f, dt, ks)
@@ -97,6 +104,14 @@ def route(cfg: ModelConfig, p: dict, x: jax.Array):
     expert space, probs [.., N])."""
     m = cfg.moe
     logits = ein32("...d,de->...e", x.astype(F32), p["router"])
+    if "live" in p:
+        # Router-logit masking: an original expert whose remap target is a
+        # pad row (>= live, possible only in heterogeneous-M suffix layers)
+        # can never win top-k. No-op for valid remaps — every entry already
+        # points below ``live`` — so masked and unmasked routing agree
+        # exactly; the mask guarantees the zero-padded tables stay
+        # unreachable even under a corrupted remap (DESIGN.md §5).
+        logits = jnp.where(p["remap"] >= p["live"], -jnp.inf, logits)
     probs = jax.nn.softmax(logits, axis=-1)
     w, idx = _topk_iterative(probs, m.top_k)
     w = w / jnp.sum(w, axis=-1, keepdims=True)  # renormalize among top-k
@@ -119,6 +134,28 @@ def balance_loss(cfg: ModelConfig, probs: jax.Array, idx: jax.Array) -> jax.Arra
 def _capacity(m, G: int, E: int) -> int:
     c = int(m.top_k * G * m.capacity_factor / E)
     return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def capacity_experts(cfg: ModelConfig, p: dict) -> int:
+    """Expert count used to SIZE dense-dispatch capacity (shapes are static,
+    so this must come from the config, not the traced ``live`` leaf).
+
+    For a heterogeneous compressed suffix the tables are padded to max-M but
+    a layer may route all its traffic onto as few as min(live) rows; sizing
+    capacity by the padded width would under-provision those layers and drop
+    tokens an unpadded model would keep. Sizing by the SMALLEST live count
+    gives every suffix layer at least the per-expert slots its own unpadded
+    model would compute (DESIGN.md §5).
+
+    Suffix tables are identified by their width (``moe_merged``). When a
+    plan's max M equals the original N the prefix stack matches too and is
+    conservatively sized by min(live) as well — over-provisioned capacity is
+    wasted slots, never extra drops."""
+    E = n_real_experts(p)
+    if (cfg.moe_merged_layers is not None
+            and E == cfg.moe_merged):        # suffix-width expert tables
+        return min(cfg.moe_merged_layers)
+    return E
 
 
 def _dispatch_tensors(cfg: ModelConfig, w, idx, E: int, C: int):
@@ -147,9 +184,10 @@ def _moe_dense_groups(cfg: ModelConfig, p: dict, x2: jax.Array, w, idx):
     m = cfg.moe
     E = n_real_experts(p)
     G = x2.shape[1]
-    # capacity sized by REAL expert count: merged experts absorb their whole
-    # cluster's traffic, so per-expert slots scale up as N/M automatically.
-    C = _capacity(m, G, E)
+    # capacity sized by the LIVE expert count (== E except in heterogeneous
+    # suffixes): merged experts absorb their whole cluster's traffic, so
+    # per-expert slots scale up as N/M automatically.
+    C = _capacity(m, G, capacity_experts(cfg, p))
 
     combine, dispatch = jax.vmap(
         lambda wg, ig: _dispatch_tensors(cfg, wg, ig, E, C))(w, idx)

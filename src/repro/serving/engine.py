@@ -120,8 +120,28 @@ class Engine:
         self._step_count = 0
         self._t0: Optional[float] = None
         self._rng = np.random.default_rng(ec.seed)
+        # plan/report extras when booted via from_checkpoint
+        self.artifact: Optional[dict] = None
 
     # ------------------------------------------------------------------ API
+
+    @classmethod
+    def from_checkpoint(cls, directory, ec: Optional[EngineConfig] = None,
+                        step: int | None = None) -> "Engine":
+        """Boot an engine directly from a ``save_compressed`` artifact.
+
+        The artifact's own ModelConfig (including per-layer merged-expert
+        counts) and parameters are used verbatim; ``ec`` only controls
+        serving knobs (slots, buckets, dispatch — ragged by default). The
+        executed plan and compression report are exposed as
+        ``engine.artifact``."""
+        from repro.ckpt import checkpoint as CKPT
+        cfg, params, artifact = CKPT.load_compressed(directory, step=step)
+        if ec is None:
+            ec = EngineConfig(arch=cfg.name, reduced=False)
+        eng = cls(ec, cfg=cfg, params=params)
+        eng.artifact = artifact
+        return eng
 
     @property
     def n_active(self) -> int:

@@ -1,0 +1,151 @@
+"""Compressed artifacts: save_compressed/load_compressed roundtrip fidelity
+(bf16 <-> f32 npy, int32 remap, plan/report extras) and the acceptance path —
+a heterogeneous plan compresses, checkpoints, reloads via
+``Engine.from_checkpoint`` and decodes token-for-token identically to the
+in-memory compressed model.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.ckpt import checkpoint as CKPT
+from repro.core import compress as CMP
+from repro.core import plan as PLAN
+from repro.models import model as MD
+from repro.models.config import config_from_dict
+from repro.serving import Engine, EngineConfig
+
+ARCH = "qwen3-moe-30b-a3b"
+
+
+@pytest.fixture(scope="module")
+def compressed():
+    """Heterogeneous plan over the ragged serving path: different M per
+    layer, mixed methods (msmoe exercises the router requirement)."""
+    cfg = configs.get(ARCH).reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    plan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "mergemoe", 4),
+        PLAN.LayerSpec(1, "msmoe", 2),
+    ))
+    ncfg, nparams, info = CMP.compress_with_plan(cfg, params, plan,
+                                                 batches=calib)
+    return ncfg, nparams, plan, info
+
+
+def test_config_json_roundtrip(compressed):
+    ncfg, *_ = compressed
+    again = config_from_dict(json.loads(json.dumps(ncfg.to_json_dict())))
+    assert again == ncfg
+    assert again.moe_merged_layers == (4, 2)
+    assert isinstance(again.moe, type(ncfg.moe))
+
+
+def test_roundtrip_dtypes_and_values(tmp_path, compressed):
+    ncfg, nparams, plan, info = compressed
+    CKPT.save_compressed(tmp_path, ncfg, nparams, plan=plan, report=info)
+    cfg2, params2, art = CKPT.load_compressed(tmp_path)
+    assert cfg2 == ncfg
+    moe = params2["stack_c"]["moe"]
+    # bf16 tables survive the f32 npy detour bitwise (bf16 -> f32 is exact)
+    assert moe["wg"].dtype == jnp.bfloat16 == nparams["stack_c"]["moe"]["wg"].dtype
+    # int32 remap preserved exactly
+    assert moe["remap"].dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(moe["remap"]),
+        np.asarray(nparams["stack_c"]["moe"]["remap"]))
+    # every leaf identical (incl. re-padded expert tables and live counts)
+    la, lb = jax.tree.leaves(nparams), jax.tree.leaves(params2)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_extras_survive_roundtrip(tmp_path, compressed):
+    ncfg, nparams, plan, info = compressed
+    CKPT.save_compressed(tmp_path, ncfg, nparams, plan=plan, report=info)
+    _, _, art = CKPT.load_compressed(tmp_path)
+    assert PLAN.CompressionPlan.from_json_dict(art["plan"]) == plan
+    assert art["report"]["merged_per_layer"] == [4, 2]
+    assert art["report"]["compression_ratio"] == pytest.approx(
+        info["compression_ratio"])
+
+
+def test_artifact_stores_ragged_tables(tmp_path, compressed):
+    """Heterogeneous artifacts persist each suffix layer's tables UNPADDED:
+    artifact bytes reflect the plan's live budget, not max-M padding."""
+    ncfg, nparams, plan, info = compressed
+    d = CKPT.save_compressed(tmp_path, ncfg, nparams, plan=plan)
+    meta = json.loads((d / "meta.json").read_text())
+    shapes = [tuple(l["shape"]) for l in meta["leaves"]]
+    f = ncfg.moe.d_ff_expert
+    assert (4, ncfg.d_model, f) in shapes            # layer 0 live rows
+    assert (2, ncfg.d_model, f) in shapes            # layer 1 live rows
+    assert (2, 4, ncfg.d_model, f) not in shapes     # no padded stack on disk
+    disk = sum(np.prod(s) for s in shapes if s)
+    assert disk * 2 < info["bytes_padded"]           # strictly below padded
+
+
+def test_uniform_plan_artifact_keeps_stacked_layout(tmp_path):
+    """Uniform plans have no pad rows — the artifact keeps the plain stacked
+    leaves and loads back unchanged."""
+    cfg = configs.get(ARCH).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64),
+                                           0, cfg.vocab_size)}]
+    ncfg, nparams, info = CMP.compress_model(
+        cfg, params, method="mergemoe", merged_experts=4, split=1,
+        batches=calib)
+    CKPT.save_compressed(tmp_path, ncfg, nparams, report=info)
+    cfg2, params2, art = CKPT.load_compressed(tmp_path)
+    assert cfg2 == ncfg and art["plan"] is None
+    np.testing.assert_array_equal(
+        np.asarray(params2["stack_c"]["moe"]["wg"], np.float32),
+        np.asarray(nparams["stack_c"]["moe"]["wg"], np.float32))
+
+
+def test_save_compressed_rejects_uncompressed(tmp_path):
+    cfg = configs.get(ARCH).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="not compressed"):
+        CKPT.save_compressed(tmp_path, cfg, params)
+
+
+def test_load_compressed_rejects_plain_checkpoint(tmp_path):
+    CKPT.save(tmp_path, 0, {"w": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="plain checkpoint"):
+        CKPT.load_compressed(tmp_path)
+
+
+def test_engine_from_checkpoint_token_parity(tmp_path, compressed):
+    """Acceptance: the reloaded artifact decodes token-for-token identically
+    to the in-memory compressed model, through the continuous-batching
+    engine's ragged/grouped-kernel path."""
+    ncfg, nparams, plan, info = compressed
+    CKPT.save_compressed(tmp_path, ncfg, nparams, plan=plan, report=info)
+
+    prompts = np.random.default_rng(0).integers(
+        0, ncfg.vocab_size, size=(3, 12), dtype=np.int32)
+    ec = EngineConfig(arch=ARCH, n_slots=2, s_max=48, prefill_buckets=(16,))
+
+    def generate(eng):
+        reqs = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        eng.run()
+        return [r.out_tokens for r in reqs]
+
+    mem = generate(Engine(ec, cfg=ncfg, params=nparams))
+    eng2 = Engine.from_checkpoint(tmp_path, ec=ec)
+    assert eng2.cfg == ncfg
+    assert eng2.artifact["report"]["merged_per_layer"] == [4, 2]
+    loaded = generate(eng2)
+    assert loaded == mem

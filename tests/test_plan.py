@@ -1,0 +1,327 @@
+"""CompressionPlan API: builders, strategy registry, streaming calibration,
+uniform-plan == legacy-shim bit-for-bit regression, heterogeneous execution.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import calibration as CAL
+from repro.core import compress as CMP
+from repro.core import merge as MG
+from repro.core import plan as PLAN
+from repro.core.errors import TechniqueInapplicable
+from repro.models import model as MD
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 64),
+                                             0, cfg.vocab_size)}
+               for i in range(2)]
+    return cfg, params, batches
+
+
+# ---------------------------------------------------------------------------
+# builders + (de)serialization
+# ---------------------------------------------------------------------------
+
+def test_uniform_builder_matches_legacy_surface(setup):
+    cfg, _, _ = setup
+    plan = PLAN.uniform(cfg, method="mergemoe", merged_experts=4, split=1)
+    assert plan.split == 1
+    assert plan.layers == tuple(range(1, cfg.n_layers))
+    assert plan.merged_per_layer == (4,) * (cfg.n_layers - 1)
+    assert plan.is_uniform
+
+
+def test_default_split_is_paper_suffix(setup):
+    cfg, _, _ = setup
+    plan = PLAN.uniform(cfg, merged_experts=4)
+    assert plan.split == int(cfg.n_layers * 0.6)
+
+
+def test_suffix_builder():
+    cfg = configs.get("qwen3-moe-30b-a3b")          # 48 layers, full scale
+    plan = PLAN.suffix(cfg, merged_experts=64, frac=0.4)
+    assert plan.split == 48 - 19                    # round(48*0.4) == 19
+    assert len(plan.specs) == 19
+
+
+def test_plan_json_roundtrip(setup):
+    cfg, _, _ = setup
+    plan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "mergemoe", 4),
+        PLAN.LayerSpec(1, "msmoe", 2),
+    ))
+    again = PLAN.CompressionPlan.from_json(plan.to_json())
+    assert again == plan
+    assert json.loads(plan.to_json())["version"] == PLAN.PLAN_FORMAT_VERSION
+
+
+def test_plan_validation_rejects_bad_shapes(setup):
+    cfg, _, _ = setup
+    with pytest.raises(ValueError):                 # hole in the suffix
+        PLAN.CompressionPlan(
+            (PLAN.LayerSpec(0, "mergemoe", 4),)).validate(cfg)
+    with pytest.raises(ValueError):                 # M out of range
+        PLAN.CompressionPlan(
+            (PLAN.LayerSpec(1, "mergemoe", 99),)).validate(cfg)
+    with pytest.raises(KeyError):                   # unknown method
+        PLAN.CompressionPlan(
+            (PLAN.LayerSpec(1, "nope", 4),)).validate(cfg)
+    with pytest.raises(TechniqueInapplicable):      # expert-free arch
+        PLAN.uniform(configs.get("yi-34b"), merged_experts=4)
+
+
+# ---------------------------------------------------------------------------
+# strategy registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_legacy_methods():
+    assert set(MG.METHODS) <= set(PLAN.available_methods())
+    assert PLAN.get_strategy("mergemoe").requires == ("x", "counts")
+    assert PLAN.get_strategy("msmoe").requires == ("counts", "router")
+
+
+def test_custom_strategy_registers_and_merges(setup):
+    cfg, params, batches = setup
+
+    @PLAN.register_method("keep-top")
+    class KeepTop(PLAN.MergeStrategy):
+        """Toy strategy: keep the M most-used experts, remap the rest."""
+        requires = ("counts",)
+
+        def merge(self, wg, wu, wd, counts, X, M, *, router=None, **kw):
+            N = wg.shape[0]
+            keep = np.sort(np.argsort(-np.asarray(counts))[:M])
+            remap = np.array([int(np.argmin(np.abs(keep - e)))
+                              for e in range(N)], np.int32)
+            w = np.ones(N, np.float32)
+            return MG.MergeResult(wg[keep], wu[keep], wd[keep], remap,
+                                  remap.copy(), w, info={"method": "keep-top"})
+
+    try:
+        assert "keep-top" in PLAN.available_methods()
+        plan = PLAN.uniform(cfg, method="keep-top", merged_experts=4, split=1)
+        ncfg, nparams, info = CMP.compress_with_plan(
+            cfg, params, plan, batches=batches)
+        assert nparams["stack_c"]["moe"]["wg"].shape[1] == 4
+        l, _ = MD.loss(ncfg, nparams, batches[0])
+        assert np.isfinite(float(l))
+    finally:
+        PLAN._REGISTRY.pop("keep-top", None)
+
+
+# ---------------------------------------------------------------------------
+# streaming calibration
+# ---------------------------------------------------------------------------
+
+def test_stream_matches_legacy_collect(setup):
+    cfg, params, batches = setup
+    legacy = CAL.collect(cfg, params, batches)
+    stream = CAL.CalibrationStream(cfg, params).consume(batches)
+    for l in range(cfg.n_layers):
+        np.testing.assert_array_equal(stream.layer(l).x, legacy[l].x)
+        np.testing.assert_array_equal(stream.layer(l).counts,
+                                      legacy[l].counts)
+
+
+def test_stream_bounds_host_memory(setup):
+    cfg, params, batches = setup
+    cap = 100
+    stream = CAL.CalibrationStream(cfg, params, max_tokens_per_layer=cap,
+                                   seed=3).consume(batches)
+    assert stream.n_tokens == cap
+    assert stream._x.shape == (cfg.n_layers, cap, cfg.d_model)
+    assert stream.tokens_seen == 2 * 2 * 64          # counts keep streaming
+    assert stream.counts(0).sum() > 0
+
+
+def test_head_policy_is_legacy_truncation(setup):
+    """policy='head' + cap == the historical concatenate-then-truncate
+    capture (the semantics compress_model(max_tokens=...) shims to)."""
+    cfg, params, batches = setup
+    full = CAL.collect(cfg, params, batches)
+    head = CAL.CalibrationStream(cfg, params, max_tokens_per_layer=50,
+                                 policy="head").consume(batches)
+    assert head.n_tokens == 50
+    for l in range(cfg.n_layers):
+        np.testing.assert_array_equal(head.layer(l).x, full[l].x[:50])
+        np.testing.assert_array_equal(head.layer(l).counts, full[l].counts)
+
+
+def test_stream_reservoir_deterministic_and_layer_aligned(setup):
+    cfg, params, batches = setup
+    a = CAL.CalibrationStream(cfg, params, max_tokens_per_layer=64,
+                              seed=5).consume(batches)
+    b = CAL.CalibrationStream(cfg, params, max_tokens_per_layer=64,
+                              seed=5).consume(batches)
+    np.testing.assert_array_equal(a._x, b._x)
+    # shared replacement schedule: every layer holds the SAME token slots,
+    # so a token kept at layer 0 is kept at layer 1 too
+    legacy = CAL.collect(cfg, params, batches)
+    full = np.stack([legacy[l].x for l in range(cfg.n_layers)])  # [L, T, d]
+    # find each reservoir row of layer 0 in the full stream ...
+    for j in [0, 17, 63]:
+        t = np.flatnonzero((full[0] == a._x[0, j]).all(axis=1))[0]
+        # ... the same position must be stored for the other layer
+        np.testing.assert_array_equal(a._x[1, j], full[1, t])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: uniform plan == legacy shim, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_uniform_plan_reproduces_legacy_compress_model(setup):
+    cfg, params, batches = setup
+    ncfg, nparams, ninfo = CMP.compress_model(
+        cfg, params, method="mergemoe", merged_experts=4, split=1,
+        batches=batches)
+    plan = PLAN.uniform(cfg, method="mergemoe", merged_experts=4, split=1)
+    pcfg, pparams, pinfo = CMP.compress_with_plan(
+        cfg, params, plan, batches=batches)
+    assert pcfg == ncfg
+    na, pa = jax.tree.leaves(nparams), jax.tree.leaves(pparams)
+    assert len(na) == len(pa)
+    for a, b in zip(na, pa):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ninfo["merged_per_layer"] == pinfo["merged_per_layer"]
+    assert ninfo["bytes_compressed"] == pinfo["bytes_compressed"]
+
+
+def test_small_sample_warns_and_reports(setup):
+    cfg, params, _ = setup
+    tiny = [{"tokens": jax.random.randint(jax.random.PRNGKey(0), (1, 8),
+                                          0, cfg.vocab_size)}]
+    with pytest.warns(UserWarning, match="calibration tokens"):
+        _, _, info = CMP.compress_model(
+            cfg, params, method="average", merged_experts=4, split=1,
+            batches=tiny)
+    assert info["calib_tokens"] == 8
+    assert info["calib_warning"] is True
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous execution
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_plan_mixed_methods(setup):
+    cfg, params, batches = setup
+    plan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "mergemoe", 4),
+        PLAN.LayerSpec(1, "msmoe", 2),
+    ))
+    ncfg, nparams, info = CMP.compress_with_plan(
+        cfg, params, plan, batches=batches)
+    assert ncfg.moe_merged == 4
+    assert ncfg.moe_merged_layers == (4, 2)
+    assert info["method"] == "mixed"
+    moe = nparams["stack_c"]["moe"]
+    assert moe["wg"].shape[1] == 4                  # padded to max M
+    np.testing.assert_array_equal(np.asarray(moe["live"]), [4, 2])
+    # remap only ever addresses live rows; layer-1 pad rows are all zero
+    remap = np.asarray(moe["remap"])
+    assert (remap[0] < 4).all() and (remap[1] < 2).all()
+    assert not np.asarray(moe["wg"][1, 2:], np.float32).any()
+    l, _ = MD.loss(ncfg, nparams, batches[0])
+    assert np.isfinite(float(l))
+
+
+def test_router_logit_mask_is_noop_for_valid_remap(setup):
+    """Masked routing == unmasked routing whenever remap is valid (the mask
+    only guards pad rows, DESIGN.md §5)."""
+    cfg, params, batches = setup
+    plan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "mergemoe", 4),
+        PLAN.LayerSpec(1, "average", 2),
+    ))
+    ncfg, nparams, _ = CMP.compress_with_plan(cfg, params, plan,
+                                              batches=batches)
+    logits_masked, _, _ = MD.forward(ncfg, nparams, batches[0])
+    stripped = jax.tree.map(lambda x: x, nparams)
+    stripped["stack_c"] = dict(stripped["stack_c"])
+    stripped["stack_c"]["moe"] = {
+        k: v for k, v in stripped["stack_c"]["moe"].items() if k != "live"}
+    logits_plain, _, _ = MD.forward(ncfg, stripped, batches[0])
+    np.testing.assert_array_equal(np.asarray(logits_masked),
+                                  np.asarray(logits_plain))
+
+
+def test_dense_capacity_sized_by_smallest_live_count(setup):
+    """Dense dispatch must not under-provision a hetero layer whose traffic
+    concentrates on few live rows: capacity is sized by min(live), not by
+    the padded table width (DESIGN.md §5)."""
+    from repro.models import moe as MOE
+    cfg, params, batches = setup
+    plan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "mergemoe", 6),
+        PLAN.LayerSpec(1, "average", 2),
+    ))
+    ncfg, nparams, _ = CMP.compress_with_plan(cfg, params, plan,
+                                              batches=batches)
+    layer0 = jax.tree.map(lambda a: a[0], nparams["stack_c"]["moe"])
+    assert MOE.capacity_experts(ncfg, layer0) == 2
+    # prefix/uncompressed layers keep physical-count sizing
+    uncomp = jax.tree.map(lambda a: a[0], params["stack"]["moe"])
+    assert MOE.capacity_experts(cfg, uncomp) == cfg.moe.n_experts
+    # uniform compression: live == physical, unchanged sizing
+    ucfg, uparams, _ = CMP.compress_model(
+        cfg, params, method="average", merged_experts=4, split=1,
+        batches=batches)
+    ulayer = jax.tree.map(lambda a: a[0], uparams["stack_c"]["moe"])
+    assert MOE.capacity_experts(ucfg, ulayer) == 4
+    # degenerate hetero plan with max M == N: suffix tables are N wide, so
+    # the prefix matches too — BOTH stacks size by min(live) (conservative:
+    # extra slots, never extra drops)
+    N = cfg.moe.n_experts
+    dplan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "average", N),
+        PLAN.LayerSpec(1, "average", 2),
+    ))
+    dcfg, dparams, _ = CMP.compress_with_plan(cfg, params, dplan,
+                                              batches=batches)
+    dlayer = jax.tree.map(lambda a: a[0], dparams["stack_c"]["moe"])
+    assert MOE.capacity_experts(dcfg, dlayer) == 2
+
+
+# ---------------------------------------------------------------------------
+# budget planner
+# ---------------------------------------------------------------------------
+
+def test_planner_hits_target_ratio():
+    cfg = configs.get("qwen3-moe-30b-a3b")          # 48 layers, 128 experts
+    plan = PLAN.for_target_ratio(cfg, target_ratio=1.5, split=28)
+    got = PLAN.plan_live_ratio(cfg, plan)
+    assert got >= 1.5                                # met ...
+    # ... and not overshot by more than one expert's worth of bytes
+    per_expert = 3 * cfg.d_model * cfg.moe.d_ff_expert \
+        * cfg.param_dtype.itemsize
+    total = cfg.param_count() * cfg.param_dtype.itemsize
+    assert (total / 1.5) - (total / got) <= per_expert + 1
+
+
+def test_planner_respects_importance_stats():
+    """A layer whose routing concentrates on few experts is squeezed harder
+    than one spreading traffic across all of them."""
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced().replace(n_layers=4)
+    N = cfg.moe.n_experts
+    stats = {l: np.ones(N) for l in range(4)}
+    stats[1] = np.zeros(N)
+    stats[1][0] = 100.0                              # layer 1: one hot expert
+    plan = PLAN.for_target_ratio(cfg, target_ratio=1.12, stats=stats, split=1)
+    by_layer = dict(zip(plan.layers, plan.merged_per_layer))
+    assert by_layer[1] < by_layer[2] and by_layer[1] < by_layer[3]
+
+
+def test_planner_deterministic_and_unreachable_raises():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced().replace(n_layers=4)
+    a = PLAN.for_target_ratio(cfg, target_ratio=1.1, split=2)
+    b = PLAN.for_target_ratio(cfg, target_ratio=1.1, split=2)
+    assert a == b
+    with pytest.raises(ValueError, match="unreachable"):
+        PLAN.for_target_ratio(cfg, target_ratio=50.0, split=3)
