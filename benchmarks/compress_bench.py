@@ -1,4 +1,5 @@
-"""Uniform vs budget-planned per-layer compression at MATCHED ratios.
+"""Uniform vs budget-planned per-layer compression at MATCHED ratios, plus
+single- vs multi-device compression wall-time.
 
 For each uniform budget M in the sweep, the budget planner is asked to hit
 the same live-byte compression ratio but may spread the expert budget
@@ -15,18 +16,29 @@ random-init model routes near-uniformly, so the planner may legitimately
 reproduce the uniform allocation; on trained checkpoints with skewed routing
 the per-layer budgets diverge — ``test_planner_respects_importance_stats``
 pins that behavior.)
+
+The wall-time section re-runs one uniform compression in two fresh worker
+subprocesses — default single device, and a forced 4-device host platform
+with ``mesh data=2,model=2`` (DP capture + 2 solve shards, DESIGN.md §6) —
+and records both timings plus whether the outputs matched bit for bit.
+Workers are subprocesses because the forced device count must be set before
+JAX initializes.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
+import subprocess
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
+import numpy as np
 
 from repro import configs
 from repro.core import calibration as CAL
@@ -56,6 +68,73 @@ def _record(cfg, params, plan, stream, evalb, base_loss, label):
     return rec
 
 
+# ---------------------------------------------------------------------------
+# single- vs multi-device wall time (worker subprocess per device count)
+# ---------------------------------------------------------------------------
+
+_WALLTIME_MESH = "data=2,model=2"
+
+
+def _worker(args) -> None:
+    """One timed uniform compression; JSON record on stdout. The parent
+    controls the device count via XLA_FLAGS in this process's environment."""
+    mesh = None
+    if args.worker_mesh != "none":
+        from repro.launch import mesh as MESH
+        mesh = MESH.make_compression_mesh(args.worker_mesh)
+    cfg = configs.get(args.arch).reduced().replace(n_layers=args.layers)
+    params = MD.init(cfg, jax.random.PRNGKey(args.seed))
+    calib = make_batches(cfg, args.calib_batches, batch=8,
+                         seed=args.seed + 100)
+    plan = PLAN.uniform(cfg, merged_experts=min(args.uniform_m),
+                        split=args.split)
+    t0 = time.perf_counter()
+    _, nparams, info = CMP.compress_with_plan(
+        cfg, params, plan, batches=calib, max_tokens=256, mesh=mesh)
+    t_total = time.perf_counter() - t0
+    from repro.ckpt.checkpoint import tree_digest
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "mesh": info["mesh"] and info["mesh"]["axes"],
+        "solve_shards": (info["mesh"] or {}).get("solve_shards", 1),
+        "t_calibrate_s": round(info["t_calibrate_s"], 3),
+        "t_merge_s": round(info["t_merge_s"], 3),
+        "t_total_s": round(t_total, 3),
+        "digest": tree_digest(nparams["stack_c"]["moe"]),
+    }))
+
+
+def measure_wall_time(args) -> dict:
+    """Spawn one worker on the default single device and one on a forced
+    4-device host platform; return both records + the bitwise verdict."""
+    recs = {}
+    for label, devices, mesh in (("single_device", 1, "none"),
+                                 ("mesh_4dev", 4, _WALLTIME_MESH)):
+        env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+        env.pop("XLA_FLAGS", None)
+        if devices > 1:
+            env["XLA_FLAGS"] = \
+                f"--xla_force_host_platform_device_count={devices}"
+        cmd = [sys.executable, str(Path(__file__).resolve()),
+               "--worker-mesh", mesh, "--arch", args.arch,
+               "--layers", str(args.layers), "--split", str(args.split),
+               "--calib-batches", str(args.calib_batches),
+               "--seed", str(args.seed),
+               "--uniform-m"] + [str(m) for m in args.uniform_m]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=1800)
+        if r.returncode != 0:
+            raise RuntimeError(f"wall-time worker failed:\n{r.stderr}")
+        recs[label] = json.loads(r.stdout)
+        print(f"  [{label:>13}] calib={recs[label]['t_calibrate_s']}s "
+              f"merge={recs[label]['t_merge_s']}s "
+              f"total={recs[label]['t_total_s']}s")
+    recs["mesh_spec"] = _WALLTIME_MESH
+    recs["bitwise_match"] = (recs["single_device"]["digest"]
+                             == recs["mesh_4dev"]["digest"])
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
@@ -67,9 +146,16 @@ def main():
     ap.add_argument("--calib-batches", type=int, default=2)
     ap.add_argument("--eval-batches", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-wall-time", action="store_true",
+                    help="skip the single- vs multi-device timing section")
+    ap.add_argument("--worker-mesh", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--out", default=str(Path(__file__).with_name(
         "BENCH_compress.json")))
     args = ap.parse_args()
+
+    if args.worker_mesh is not None:
+        _worker(args)
+        return
 
     cfg = configs.get(args.arch).reduced().replace(n_layers=args.layers)
     params = MD.init(cfg, jax.random.PRNGKey(args.seed))
@@ -102,6 +188,10 @@ def main():
         "loss_full": round(base_loss, 4),
         "sweep": rows,
     }
+    if not args.skip_wall_time:
+        print("-- wall time: single device vs 4-device mesh "
+              f"({_WALLTIME_MESH}) --")
+        out["wall_time"] = measure_wall_time(args)
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"wrote {args.out}")
 

@@ -3,10 +3,20 @@
 #
 #   scripts/test.sh              # fast suite (slow-marked cases deselected)
 #   scripts/test.sh -m slow      # only the slow smoke cases
+#   scripts/test.sh --dist       # distributed-marked tests on a forced
+#                                # 4-device CPU host platform
 #   scripts/test.sh tests/test_kernels.py -k grouped
 #
 # Extra arguments are passed through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--dist" ]]; then
+  shift
+  # REPRO_DIST=1 tells conftest the forced device count is intentional
+  export REPRO_DIST=1
+  export JAX_PLATFORMS=cpu
+  export XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}"
+  exec python -m pytest -x -q -m distributed "$@"
+fi
 exec python -m pytest -x -q "$@"

@@ -34,6 +34,19 @@ def _flatten(tree) -> Tuple[List[Any], Any]:
     return leaves, treedef
 
 
+def tree_digest(tree) -> str:
+    """sha256 over every leaf's path + raw bytes — the content identity the
+    mesh bit-for-bit differential compares across device counts
+    (DESIGN.md §6; used by tests/_dist_compress_child.py and
+    benchmarks/compress_bench.py)."""
+    import hashlib
+    h = hashlib.sha256()
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        h.update(str(path).encode())
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
 def save(directory, step: int, tree, extras: Optional[Dict] = None,
          keep: int = 3) -> Path:
     """Synchronous atomic save. Returns the committed directory."""
@@ -181,11 +194,21 @@ def save_compressed(directory, cfg, params, plan=None, report=None,
     plan_dict = None
     if plan is not None:
         plan_dict = plan if isinstance(plan, dict) else plan.to_json_dict()
+    # mesh provenance: which device mesh produced this artifact. Execution is
+    # bit-for-bit across meshes (DESIGN.md §6), so this is a provenance
+    # record, not a loading constraint — load_compressed ignores it. One
+    # schema regardless of source: {"axes": {...}, ...} (the plan's record is
+    # a flat axis dict and gets wrapped).
+    mesh_meta = (report or {}).get("mesh")
+    if mesh_meta is None and plan_dict is not None \
+            and plan_dict.get("mesh") is not None:
+        mesh_meta = {"axes": plan_dict["mesh"]}
     extras = {"compressed": {
         "format": 1,
         "config": cfg.to_json_dict(),
         "plan": plan_dict,
         "report": report or {},
+        "mesh": mesh_meta,
     }}
     return save(directory, step, _pack_ragged_suffix(cfg, params),
                 extras=extras, keep=keep)

@@ -17,11 +17,23 @@ Two surfaces over the same capture forward:
 Because JAX forwards are pure, a single-shot capture is exactly equivalent to
 the paper's back-to-front layer traversal (merging layer ℓ never perturbs
 activations at layers ≤ ℓ) — see DESIGN.md §3.
+
+**Mesh-parallel capture (DESIGN.md §6).** Pass ``mesh=`` and the capture
+forward runs data-parallel: the batch is sharded over the mesh's batch axes
+(``repro.launch.sharding.calib_pspecs``), weights are replicated, and each
+device computes the captured activations for its batch slice. The reservoir
+replacement schedule is a PURE FUNCTION of a token's global stream index
+(:func:`reservoir_slots` — a counter-based splitmix64 draw, not a stateful
+RNG), so every shard folds its own token range independently and the
+cross-shard merge (:func:`merge_reservoirs` — per-slot max-g) is provably
+identical to one sequential fold over the whole stream. That determinism is
+what makes mesh-sharded compression bit-for-bit equal to single-device
+(`tests/test_dist_compress.py`).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -36,6 +48,91 @@ class LayerCalibration:
     counts: np.ndarray   # [N] usage frequencies
 
 
+# ---------------------------------------------------------------------------
+# deterministic reservoir schedule (shared across layers AND shards)
+# ---------------------------------------------------------------------------
+
+_MASK64 = (1 << 64) - 1
+
+
+def _u01(seed: int, g: np.ndarray) -> np.ndarray:
+    """Counter-based uniform draws in [0, 1): a pure function of (seed,
+    global token index). splitmix64 finalizer over the index — no RNG state,
+    so the draw for token g is the same no matter which shard computes it or
+    in what order tokens are folded."""
+    z = g.astype(np.uint64)
+    z = z ^ np.uint64((seed * 0x9E3779B97F4A7C15 + 0x632BE59BD9B4E019)
+                      & _MASK64)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return (z >> np.uint64(11)).astype(np.float64) * 2.0 ** -53
+
+
+def reservoir_slots(g: np.ndarray, cap: int, seed: int,
+                    policy: str = "reservoir") -> np.ndarray:
+    """Reservoir slot claimed by each global token index (-1 = dropped).
+
+    Token g claims slot g while the reservoir fills; beyond that, Algorithm
+    R — slot ``floor(u(g)·(g+1))`` iff it lands below ``cap`` (replacement
+    probability cap/(g+1), uniform over slots). ``policy="head"`` claims
+    only the fill phase (legacy first-``cap`` truncation).
+
+    The final reservoir is defined as: slot j holds the token with the
+    LARGEST global index among all tokens claiming j. Because the claim is a
+    pure function of (seed, g), that definition is independent of how the
+    stream is partitioned — any sharding folds to the same reservoir.
+    """
+    if policy == "head":
+        return np.where(g < cap, g, -1)
+    js = np.floor(_u01(seed, g) * (g + 1).astype(np.float64)).astype(np.int64)
+    return np.where(g < cap, g, np.where(js < cap, js, -1))
+
+
+def fold_tokens(x: np.ndarray, slot_g: np.ndarray, xi: np.ndarray,
+                g: np.ndarray, *, cap: int, seed: int,
+                policy: str = "reservoir") -> None:
+    """Fold tokens ``xi [L, n, d]`` with global indices ``g [n]`` into the
+    reservoir state (``x [L, cap, d]``, ``slot_g [cap]``) in place.
+
+    Last-write-wins BY GLOBAL INDEX, not by call order: a slot is overwritten
+    only when the incoming token's g exceeds the g already stored there, so
+    folding any partition of a stream in any order yields the same state as
+    one sequential pass."""
+    slots = reservoir_slots(g, cap, seed, policy)
+    keep = slots >= 0
+    if not keep.any():
+        return
+    tok = np.flatnonzero(keep)
+    slots, gk = slots[keep], g[keep]
+    order = np.argsort(gk, kind="stable")
+    slots, gk, tok = slots[order], gk[order], tok[order]
+    # per-slot winner within this chunk: the last (max-g) occurrence
+    uniq, first_rev = np.unique(slots[::-1], return_index=True)
+    sel = len(slots) - 1 - first_rev
+    win = gk[sel] > slot_g[uniq]
+    tgt = uniq[win]
+    x[:, tgt] = xi[:, tok[sel[win]]]
+    slot_g[tgt] = gk[sel[win]]
+
+
+def merge_reservoirs(parts: Iterable[Tuple[np.ndarray, np.ndarray]]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic cross-shard reservoir merge: per slot, keep the row
+    holding the largest global token index. Given per-shard states folded
+    over disjoint token ranges, the merge equals the sequential fold of the
+    whole stream (claims are pure functions of g — DESIGN.md §6)."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge_reservoirs needs at least one shard state")
+    x, g = parts[0][0].copy(), parts[0][1].copy()
+    for xi, gi in parts[1:]:
+        win = gi > g
+        x[:, win] = xi[:, win]
+        g[win] = gi[win]
+    return x, g
+
+
 class CalibrationStream:
     """Streaming per-layer activation reservoir + running expert counts.
 
@@ -44,7 +141,7 @@ class CalibrationStream:
     Beyond the cap, ``policy`` picks what survives:
 
     * ``"reservoir"`` (default) — Algorithm-R uniform sample over every
-      streamed token (seeded, deterministic);
+      streamed token (seeded, deterministic, shard-count invariant);
     * ``"head"`` — keep the FIRST cap tokens and drop the rest, exactly the
       legacy concatenate-then-truncate capture (counts keep accumulating
       over the whole stream either way).
@@ -52,11 +149,17 @@ class CalibrationStream:
     Tokens below the cap are kept in stream order under both policies, so
     with a cap ≥ the total token count the stream is bit-identical to the
     legacy capture.
+
+    ``mesh`` (optional): run the capture forward data-parallel over the
+    mesh's batch axes. Weights are REPLICATED for capture (the expert axis is
+    reserved for the solve stage), each device computes its batch slice, and
+    per-shard reservoirs merge through the fixed global-index schedule —
+    bit-for-bit equal to the single-device capture (DESIGN.md §6).
     """
 
     def __init__(self, cfg: ModelConfig, params: dict,
                  max_tokens_per_layer: Optional[int] = None, seed: int = 0,
-                 policy: str = "reservoir"):
+                 policy: str = "reservoir", mesh=None):
         if cfg.moe is None:
             raise ValueError("calibration capture requires an MoE model")
         if policy not in ("reservoir", "head"):
@@ -64,11 +167,30 @@ class CalibrationStream:
         self.cfg = cfg
         self.cap = max_tokens_per_layer
         self.policy = policy
-        self._fwd = jax.jit(
-            lambda p, b: MD.forward(cfg, p, b, capture=True)[2])
-        self._params = params
-        self._rng = np.random.default_rng(seed)
-        self._x: Optional[np.ndarray] = None      # [L, cap_or_T, d]
+        self.seed = seed
+        self.mesh = mesh
+        fn = lambda p, b: MD.forward(cfg, p, b, capture=True)[2]  # noqa: E731
+        if mesh is None:
+            self._fwd = jax.jit(fn)
+            self._params = params
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch import sharding as SH
+            # weights replicated; captured buffers keep the batch axis
+            # sharded so each host shard folds only its own token range. A
+            # batch dim that does not divide the data axes cannot use the
+            # explicit out_shardings (pjit rejects uneven dims) — that case
+            # drops to inferred sharding, and the fold handles whatever
+            # shard layout comes back (it is partition-agnostic).
+            out_sh = tuple(NamedSharding(mesh, s)
+                           for s in SH.capture_pspecs(mesh))
+            self._fwd_sharded = jax.jit(fn, out_shardings=out_sh)
+            self._fwd_inferred = jax.jit(fn)
+            self._dp_size = int(np.prod(
+                [mesh.shape[a] for a in SH.data_axes(mesh)] or [1]))
+            self._params = jax.device_put(params, NamedSharding(mesh, P()))
+        self._x: Optional[np.ndarray] = None      # [L, cap, d] reservoir rows
+        self._slot_g: Optional[np.ndarray] = None  # [cap] global idx per slot
         # uncapped mode defers concatenation: chunks pile up here and are
         # joined once on first read (streaming B batches stays O(B), not
         # O(B^2) in host copies)
@@ -80,14 +202,43 @@ class CalibrationStream:
     # ---- feeding ----------------------------------------------------------
     def update(self, batch: dict) -> None:
         """Run one capture forward and fold the batch into the reservoir."""
-        expert_inputs, cnts = self._fwd(self._params, batch)
-        xi = np.asarray(expert_inputs, np.float32)       # [L, B, S, d]
-        L = xi.shape[0]
-        xi = xi.reshape(L, -1, xi.shape[-1])             # [L, B*S, d]
+        if self.mesh is not None:
+            from repro.launch import sharding as SH
+            batch = jax.device_put(
+                batch, SH.named(SH.calib_pspecs(batch, self.mesh), self.mesh))
+            B0 = jax.tree.leaves(batch)[0].shape[0]
+            fwd = (self._fwd_sharded if B0 % self._dp_size == 0
+                   else self._fwd_inferred)
+        else:
+            fwd = self._fwd
+        expert_inputs, cnts = fwd(self._params, batch)
         c = np.asarray(cnts, np.float32)                 # [L, N]
         self._counts = c if self._counts is None else self._counts + c
-        self._fold(xi)
-        self.tokens_seen += xi.shape[1]
+        L, B, S, d = expert_inputs.shape
+        if self.cap is None:
+            xi = np.asarray(expert_inputs, np.float32).reshape(L, B * S, d)
+            self._chunks.append(xi)
+        else:
+            if self._x is None:
+                self._x = np.zeros((L, self.cap, d), np.float32)
+                self._slot_g = np.full(self.cap, -1, np.int64)
+            if self.mesh is None:
+                xi = np.asarray(expert_inputs, np.float32).reshape(L, B * S, d)
+                g = self.tokens_seen + np.arange(B * S, dtype=np.int64)
+                fold_tokens(self._x, self._slot_g, xi, g, cap=self.cap,
+                            seed=self.seed, policy=self.policy)
+            else:
+                # fold each device shard's batch slice under its own global
+                # token range — order across shards is irrelevant
+                for b0, _, data in _batch_shards(expert_inputs):
+                    xs = np.asarray(data, np.float32)
+                    nb = xs.shape[1]
+                    xs = xs.reshape(L, nb * S, d)
+                    g = (self.tokens_seen + b0 * S
+                         + np.arange(nb * S, dtype=np.int64))
+                    fold_tokens(self._x, self._slot_g, xs, g, cap=self.cap,
+                                seed=self.seed, policy=self.policy)
+        self.tokens_seen += B * S
         self.batches_seen += 1
 
     def consume(self, batches: Iterable[dict]) -> "CalibrationStream":
@@ -95,52 +246,35 @@ class CalibrationStream:
             self.update(b)
         return self
 
-    def _fold(self, xi: np.ndarray) -> None:
-        """Reservoir update. xi: [L, B*S, d]. The keep/replace decisions are
-        drawn once per TOKEN and shared across layers, so layer ℓ's reservoir
-        always holds the same token positions as layer ℓ' — the cross-layer
-        alignment the budget planner's stats rely on."""
-        if self.cap is None:
-            self._chunks.append(xi.copy())
-            return
-        if self._x is None:
-            self._x = np.empty((xi.shape[0], 0, xi.shape[-1]), np.float32)
-        fill = min(self.cap - self._x.shape[1], xi.shape[1])
-        if fill > 0:
-            self._x = np.concatenate([self._x, xi[:, :fill]], axis=1)
-        if self.policy == "head":
-            return                            # legacy truncation: drop rest
-        n_over = xi.shape[1] - fill
-        if n_over <= 0:
-            return
-        # Algorithm R over the overflow, vectorized: the token with 0-based
-        # global index g replaces a uniformly random reservoir row with prob
-        # cap/(g+1). One uniform draw per token, scaled to its own [0, g+1)
-        # range; duplicate targets resolve last-write-wins (NumPy fancy
-        # assignment keeps the final occurrence), matching the sequential
-        # later-token-overwrites semantics.
-        g = self.tokens_seen + fill + np.arange(n_over)
-        js = (self._rng.random(n_over) * (g + 1)).astype(np.int64)
-        keep = np.flatnonzero(js < self.cap)
-        if keep.size:
-            self._x[:, js[keep]] = xi[:, fill + keep]
+    def reservoir_state(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(rows [L, cap, d], slot_g [cap]) — the mergeable shard state for
+        cross-host reduction via :func:`merge_reservoirs`."""
+        if self.cap is None or self._x is None:
+            raise ValueError("reservoir_state requires a capped, fed stream")
+        return self._x, self._slot_g
 
     def _materialize(self) -> np.ndarray:
         if self._chunks:
-            parts = ([self._x] if self._x is not None else []) + self._chunks
-            self._x = (parts[0] if len(parts) == 1
-                       else np.concatenate(parts, axis=1))
-            self._chunks = []
+            parts = self._chunks
+            self._chunks = [parts[0] if len(parts) == 1
+                            else np.concatenate(parts, axis=1)]
+            return self._chunks[0]
         if self._x is None:
             raise ValueError("CalibrationStream has seen no batches")
-        return self._x
+        held = int((self._slot_g >= 0).sum())
+        # fill-phase claims are slot g == token g, so filled slots form a
+        # contiguous prefix; a full reservoir returns the whole buffer
+        return self._x if held == self.cap else self._x[:, :held]
 
     # ---- consuming --------------------------------------------------------
     @property
     def n_tokens(self) -> int:
         """Tokens currently held per layer (≤ cap)."""
-        held = 0 if self._x is None else int(self._x.shape[1])
-        return held + sum(c.shape[1] for c in self._chunks)
+        if self._chunks:
+            return sum(c.shape[1] for c in self._chunks)
+        if self._x is None:
+            return 0
+        return int((self._slot_g >= 0).sum())
 
     def layer(self, l: int) -> LayerCalibration:
         """Calibration view for ONE layer (the plan executor's access path)."""
@@ -162,6 +296,21 @@ class CalibrationStream:
         """Legacy ``collect``-shaped view (per-layer materialization)."""
         x = self._materialize()
         return {l: self.layer(l) for l in range(x.shape[0])}
+
+
+def _batch_shards(arr) -> List[Tuple[int, int, object]]:
+    """Deduplicated addressable shards of a captured ``[L, B, S, d]`` buffer,
+    keyed and sorted by their batch-axis range. Replicated buffers (e.g. a
+    batch dim that did not divide the mesh) collapse to one full-range entry,
+    so no token is ever folded twice."""
+    B = arr.shape[1]
+    out = {}
+    for sh in arr.addressable_shards:
+        sl = sh.index[1]
+        b0 = 0 if sl.start is None else int(sl.start)
+        b1 = B if sl.stop is None else int(sl.stop)
+        out.setdefault((b0, b1), sh.data)
+    return [(b0, b1, out[(b0, b1)]) for (b0, b1) in sorted(out)]
 
 
 def collect(cfg: ModelConfig, params: dict, batches: Iterable[dict],

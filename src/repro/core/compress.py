@@ -17,6 +17,15 @@
 survives as a compatibility shim that builds a uniform plan — bit-for-bit
 identical to the historical single-method pipeline.
 
+**Mesh execution (DESIGN.md §6).** ``compress_with_plan(..., mesh=...)``
+runs the two hot stages sharded: calibration capture data-parallel over the
+mesh's batch axes (per-shard reservoirs merged under a fixed global-index
+replacement schedule) and the per-layer expert solves sharded over the
+mesh's expert ("model") axis, all-gathered back into the same padded hetero
+tables. The contract — enforced by ``tests/test_dist_compress.py`` — is
+bit-for-bit: an N-device mesh produces exactly the single-device tables,
+remaps, and report.
+
 Works on any MoE config; raises TechniqueInapplicable for expert-free
 architectures (DESIGN.md §4).
 """
@@ -33,6 +42,7 @@ import numpy as np
 from repro.core import calibration as CAL
 from repro.core import plan as PLAN
 from repro.core.errors import TechniqueInapplicable, CalibrationError
+from repro.distributed.compression import shard_layer_solves
 from repro.models.config import ModelConfig
 
 # Paper Fig. 4: below ~32 calibration samples the least-squares system is
@@ -63,12 +73,18 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
                        max_tokens: Optional[int] = None,
                        strict_samples: bool = False, seed: int = 0,
                        calib_policy: str = "reservoir",
+                       mesh=None,
                        ) -> Tuple[ModelConfig, dict, Dict]:
     """Execute ``plan`` against ``params``. Calibration comes from ``stream``
     (a pre-fed :class:`CalibrationStream`, reusable across planning and
     merging) or is collected here from ``batches`` (``calib_policy`` picks
     what survives a ``max_tokens`` cap: a uniform reservoir sample, or
-    ``"head"`` — the legacy first-``max_tokens`` truncation)."""
+    ``"head"`` — the legacy first-``max_tokens`` truncation).
+
+    ``mesh``: run calibration capture data-parallel over the mesh's batch
+    axes and the per-layer solves sharded over its expert ("model") axis —
+    bit-for-bit identical to the single-device run (DESIGN.md §6). A pre-fed
+    ``stream`` keeps whatever mesh it was built with."""
     plan.validate(cfg)
     if cfg.moe_merged:
         raise ValueError("model is already compressed")
@@ -82,7 +98,8 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
     if stream is None:
         stream = CAL.CalibrationStream(cfg, params,
                                        max_tokens_per_layer=max_tokens,
-                                       seed=seed, policy=calib_policy)
+                                       seed=seed, policy=calib_policy,
+                                       mesh=mesh)
     if batches is not None:
         stream.consume(batches)
     t_calib = time.perf_counter() - t0
@@ -104,31 +121,46 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
     router_all = (np.asarray(moe_p["router"], np.float32)
                   if needs_router else None)          # [L, d, N]
 
-    t0 = time.perf_counter()
-    merged: List = []
-    per_layer: List[Dict] = []
-    for spec in plan.specs:
-        l = spec.layer
+    # ---- solve stage: one closure per layer, sharded over the mesh's
+    # expert axis (host threads — the solves are replicated-input fp64
+    # NumPy, so the gather is bit-identical to the sequential loop for any
+    # shard count; DESIGN.md §6)
+    calibs = {spec.layer: stream.layer(spec.layer) for spec in plan.specs}
+
+    def solve_one(spec):
         strategy = PLAN.get_strategy(spec.method)
-        calib = stream.layer(l)
-        res = strategy.merge(
-            np.asarray(moe_p["wg"][l], np.float32),
-            np.asarray(moe_p["wu"][l], np.float32),
-            np.asarray(moe_p["wd"][l], np.float32),
+        calib = calibs[spec.layer]
+        return strategy.merge(
+            np.asarray(moe_p["wg"][spec.layer], np.float32),
+            np.asarray(moe_p["wu"][spec.layer], np.float32),
+            np.asarray(moe_p["wd"][spec.layer], np.float32),
             calib.counts if "counts" in strategy.requires else None,
             calib.x if "x" in strategy.requires else None,
             spec.merged_experts,
-            router=router_all[l] if "router" in strategy.requires else None,
+            router=(router_all[spec.layer]
+                    if "router" in strategy.requires else None),
         )
-        merged.append(res)
+
+    n_solve_shards = 1
+    if mesh is not None:
+        from repro.launch.mesh import expert_axis_size
+        n_solve_shards = min(expert_axis_size(mesh), len(plan.specs))
+
+    t0 = time.perf_counter()
+    merged, solve_stats = shard_layer_solves(
+        [lambda spec=spec: solve_one(spec) for spec in plan.specs],
+        max(n_solve_shards, 1))
+    t_merge = time.perf_counter() - t0
+
+    per_layer: List[Dict] = []
+    for spec, res in zip(plan.specs, merged):
         resid = res.info.get("resid")
         per_layer.append({
-            "layer": l, "method": spec.method,
+            "layer": spec.layer, "method": spec.method,
             "merged_experts": spec.merged_experts,
             "resid": (None if resid is None
                       else [float(r) for r in np.asarray(resid)]),
         })
-    t_merge = time.perf_counter() - t0
 
     # ---- assemble the compressed parameter tree (padded to max M)
     dt = cfg.param_dtype
@@ -159,9 +191,17 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
                     for m in plan.merged_per_layer)
     comp = padded - pad_bytes
     methods = sorted(set(plan.methods))
+    mesh_info = None
+    if mesh is not None:
+        from repro.launch.mesh import mesh_shape_dict, mesh_devices
+        mesh_info = {"axes": mesh_shape_dict(mesh),
+                     "devices": mesh_devices(mesh),
+                     "solve_shards": solve_stats["n_shards"],
+                     "t_solve_shards_s": solve_stats["t_shard_s"]}
     info = {
         "method": methods[0] if len(methods) == 1 else "mixed",
-        "plan": plan.to_json_dict(),
+        "plan": plan.with_mesh(mesh).to_json_dict(),
+        "mesh": mesh_info,
         "layers_merged": list(plan.layers),
         "merged_per_layer": list(plan.merged_per_layer),
         "per_layer": per_layer,

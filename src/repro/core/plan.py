@@ -148,12 +148,31 @@ class CompressionPlan:
     The merged layers must form a contiguous SUFFIX of the stack (the model
     splits into an untouched prefix ``stack`` and a compressed ``stack_c`` at
     ``split``); methods and budgets may differ per layer.
+
+    ``mesh`` records the device mesh the plan was built/executed under
+    (``(("data", 4), ("model", 2))``-style pairs, or None for single-device).
+    It is provenance METADATA only: execution is bit-for-bit identical across
+    mesh shapes (DESIGN.md §6), so a plan may be replayed on any mesh.
     """
     specs: Tuple[LayerSpec, ...]
+    mesh: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "specs", tuple(
             sorted(self.specs, key=lambda s: s.layer)))
+        if self.mesh is not None:
+            object.__setattr__(self, "mesh", tuple(
+                (str(a), int(s)) for a, s in
+                (self.mesh.items() if isinstance(self.mesh, Mapping)
+                 else self.mesh)))
+
+    def with_mesh(self, mesh) -> "CompressionPlan":
+        """Same plan annotated with the mesh it ran under. Accepts a
+        jax Mesh, an {axis: size} mapping, pair tuples, or None."""
+        if mesh is not None and hasattr(mesh, "shape") \
+                and not isinstance(mesh, (Mapping, tuple)):
+            mesh = {str(k): int(v) for k, v in mesh.shape.items()}
+        return CompressionPlan(self.specs, mesh)
 
     # ---- views ------------------------------------------------------------
     @property
@@ -227,12 +246,18 @@ class CompressionPlan:
 
     # ---- (de)serialization -------------------------------------------------
     def to_json_dict(self) -> dict:
-        return {"version": PLAN_FORMAT_VERSION,
-                "specs": [s.to_dict() for s in self.specs]}
+        d = {"version": PLAN_FORMAT_VERSION,
+             "specs": [s.to_dict() for s in self.specs]}
+        if self.mesh is not None:
+            d["mesh"] = {a: s for a, s in self.mesh}
+        return d
 
     @classmethod
     def from_json_dict(cls, d: Mapping) -> "CompressionPlan":
-        return cls(specs=tuple(LayerSpec.from_dict(s) for s in d["specs"]))
+        mesh = d.get("mesh")
+        return cls(specs=tuple(LayerSpec.from_dict(s) for s in d["specs"]),
+                   mesh=None if mesh is None else tuple(
+                       (str(a), int(s)) for a, s in mesh.items()))
 
     def to_json(self) -> str:
         return json.dumps(self.to_json_dict(), indent=1)

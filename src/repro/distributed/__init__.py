@@ -1,3 +1,3 @@
 from repro.distributed.compression import (  # noqa: F401
-    ef_compressed, compressed_psum, quantize, dequantize)
+    ef_compressed, compressed_psum, quantize, dequantize, shard_layer_solves)
 from repro.distributed.straggler import StragglerMonitor, StragglerReport  # noqa: F401

@@ -1,6 +1,6 @@
-"""Gradient compression for slow (cross-pod DCN) links.
+"""Distributed compression substrate.
 
-Two pieces:
+Three pieces:
 
 * ``ef_compressed(opt, bits=8)`` — optimizer wrapper implementing
   ERROR-FEEDBACK quantization: the gradient is quantized to int8 (per-leaf
@@ -13,10 +13,20 @@ Two pieces:
   quantize -> psum int32 -> dequantize. Moves 4x fewer bytes on the mapped
   axis; used for the ``pod`` axis where DCN bandwidth, not ICI, is the
   bottleneck (EXPERIMENTS.md §Perf, multi-pod iteration).
+
+* ``shard_layer_solves(thunks, n_shards)`` — the MergeMoE solve-stage
+  executor: per-layer expert-merge solve closures are statically sharded
+  over the mesh's expert-parallel axis ranks and the results all-gathered
+  back in layer order (DESIGN.md §6). Solves are independent fp64 host
+  computations over replicated calibration inputs, so the gathered result is
+  bit-identical to the sequential loop for ANY shard count — the property
+  ``tests/test_dist_compress.py`` enforces end to end.
 """
 from __future__ import annotations
 
-from typing import Any
+import threading
+import time
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +84,52 @@ def ef_compressed(opt: Optimizer, seed: int = 0) -> Optimizer:
         return updates, {"inner": inner, "ef": new_ef}
 
     return Optimizer(init, update, state_factored=opt.state_factored)
+
+
+def shard_layer_solves(thunks: Sequence[Callable[[], Any]], n_shards: int
+                       ) -> Tuple[List[Any], Dict]:
+    """Run the per-layer expert-merge solve closures across ``n_shards``
+    worker shards; shard i owns the layers with ``index % n_shards == i``
+    (static round-robin, mirroring how the expert axis stripes expert tables
+    at serving time). Returns (results in layer order, stats).
+
+    Shards are host threads: the solves are NumPy/LAPACK fp64 (DESIGN.md §2),
+    which release the GIL inside BLAS, and every shard reads the same
+    replicated calibration reservoir. Because each closure is a deterministic
+    function of its (replicated) inputs and results are gathered by index —
+    never by completion order — the output is bit-identical to running the
+    loop sequentially, whatever ``n_shards`` is. On a multi-host fleet the
+    same contract holds with processes instead of threads plus one
+    all-gather of the merged tables.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    results: List[Any] = [None] * len(thunks)
+    t_shard = [0.0] * n_shards
+    errors: List[BaseException] = []
+
+    def worker(rank: int) -> None:
+        t0 = time.perf_counter()
+        try:
+            for i in range(rank, len(thunks), n_shards):
+                results[i] = thunks[i]()
+        except BaseException as e:        # re-raised on the caller thread
+            errors.append(e)
+        t_shard[rank] = time.perf_counter() - t0
+
+    if n_shards == 1:
+        worker(0)
+    else:
+        threads = [threading.Thread(target=worker, args=(r,), daemon=True)
+                   for r in range(n_shards)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    if errors:
+        raise errors[0]
+    return results, {"n_shards": n_shards,
+                     "t_shard_s": [round(t, 3) for t in t_shard]}
 
 
 def compressed_psum(x: jax.Array, axis: str, key) -> jax.Array:

@@ -69,12 +69,20 @@ def build_plan(cfg, *, plan_path=None, target_ratio=None, method="mergemoe",
 def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
         split=None, calib_batches: int = 2, eval_batches: int = 4,
         params=None, cfg=None, seed: int = 0, plan=None, plan_path=None,
-        target_ratio=None, max_calib_tokens=None, save_dir=None):
+        target_ratio=None, max_calib_tokens=None, save_dir=None,
+        mesh_spec=None):
     cfg = cfg if cfg is not None else configs.get(arch).reduced()
     if params is None:
         params = MD.init(cfg, jax.random.PRNGKey(seed))
     calib = make_batches(cfg, calib_batches, seed=seed + 100)
     evalb = make_batches(cfg, eval_batches, seed=seed + 200)
+
+    # mesh-parallel compression: DP capture over "data", solve shards over
+    # "model" — bit-for-bit equal to the single-device run (DESIGN.md §6)
+    mesh = None
+    if mesh_spec is not None:
+        from repro.launch import mesh as MESH
+        mesh = MESH.make_compression_mesh(mesh_spec)
 
     t0 = time.perf_counter()
     base_loss = eval_loss(cfg, params, evalb)
@@ -84,7 +92,7 @@ def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
     # the per-layer merges
     stream = CAL.CalibrationStream(cfg, params,
                                    max_tokens_per_layer=max_calib_tokens,
-                                   seed=seed).consume(calib)
+                                   seed=seed, mesh=mesh).consume(calib)
     if plan is None:
         plan = build_plan(cfg, plan_path=plan_path, target_ratio=target_ratio,
                           method=method, merged_experts=merged_experts,
@@ -92,7 +100,7 @@ def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
 
     t0 = time.perf_counter()
     new_cfg, new_params, info = CMP.compress_with_plan(
-        cfg, params, plan, stream=stream)
+        cfg, params, plan, stream=stream, mesh=mesh)
     t_total = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -101,12 +109,13 @@ def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
 
     if save_dir:
         from repro.ckpt import checkpoint as CKPT
-        CKPT.save_compressed(save_dir, new_cfg, new_params, plan=plan,
-                             report=info)
+        CKPT.save_compressed(save_dir, new_cfg, new_params,
+                             plan=plan.with_mesh(mesh), report=info)
 
     report = {
         "arch": arch, "method": info["method"],
         "plan": info["plan"],
+        "mesh": info["mesh"],
         "n_experts": info["n_experts"],
         "merged_experts": info["merged_experts"],
         "merged_per_layer": info["merged_per_layer"],
@@ -150,13 +159,18 @@ def main():
     ap.add_argument("--save-dir", default=None,
                     help="persist the compressed artifact "
                          "(Engine.from_checkpoint loads it)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="device mesh for the compression pipeline, e.g. "
+                         "'data=4' (DP capture) or 'data=2,model=2' (DP "
+                         "capture + sharded solves); bit-for-bit equal to "
+                         "the single-device run (DESIGN.md §6)")
     args = ap.parse_args()
     _, _, report = run(args.arch, args.method, args.merged_experts,
                        split=args.split, calib_batches=args.calib_batches,
                        eval_batches=args.eval_batches, plan_path=args.plan,
                        target_ratio=args.target_ratio,
                        max_calib_tokens=args.max_calib_tokens,
-                       save_dir=args.save_dir)
+                       save_dir=args.save_dir, mesh_spec=args.mesh)
     print(json.dumps(report, indent=1))
 
 

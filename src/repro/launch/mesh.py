@@ -56,3 +56,54 @@ def data_axes(mesh) -> tuple:
 
 def mesh_devices(mesh) -> int:
     return int(np.prod(list(mesh.shape.values())))
+
+
+# ---------------------------------------------------------------------------
+# compression meshes (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def parse_mesh_spec(spec: str):
+    """Parse a ``--mesh`` CLI spec into (shape, axes).
+
+    Accepted forms: ``"data=4"``, ``"data=2,model=2"``, ``"4"`` (all-data),
+    ``"4x2"`` (data x model). Axis names must come from
+    {pod, data, model} so the existing sharding rules apply unchanged."""
+    spec = spec.strip()
+    known = ("pod", "data", "model")
+    if "=" in spec:
+        shape, axes = [], []
+        for part in spec.split(","):
+            name, _, size = part.partition("=")
+            name = name.strip()
+            if name not in known:
+                raise ValueError(f"unknown mesh axis {name!r}; one of {known}")
+            axes.append(name)
+            shape.append(int(size))
+        return tuple(shape), tuple(axes)
+    sizes = tuple(int(s) for s in spec.replace("x", " ").split())
+    if len(sizes) == 1:
+        return sizes, ("data",)
+    if len(sizes) == 2:
+        return sizes, ("data", "model")
+    raise ValueError(f"cannot parse mesh spec {spec!r}")
+
+
+def make_compression_mesh(spec: str | None = None):
+    """Mesh for the compression pipeline over the host's devices.
+
+    Default: every device on the "data" axis (calibration capture is pure
+    data-parallelism; the "model" axis only shards the solve stage)."""
+    if spec is None:
+        return jax.make_mesh((jax.device_count(),), ("data",))
+    return jax.make_mesh(*parse_mesh_spec(spec))
+
+
+def mesh_shape_dict(mesh) -> dict:
+    """{axis: size} — the JSON-able mesh record plans/artifacts carry."""
+    return {str(k): int(v) for k, v in mesh.shape.items()}
+
+
+def expert_axis_size(mesh) -> int:
+    """Size of the expert-parallel ("model") axis — the number of shards the
+    per-expert compression solves split across (DESIGN.md §6)."""
+    return int(mesh.shape.get("model", 1))

@@ -1,6 +1,6 @@
 """Path-rule based sharding: params / optimizer state / batches / caches.
 
-Strategy (DESIGN.md §6):
+Strategy:
   * batch DP over ("pod","data"); FSDP weight sharding over "data";
     Megatron-style TP over "model" (fused head dim / FFN width);
     expert parallelism = expert dim over "model".
@@ -220,6 +220,40 @@ def cache_pspecs(cache_shapes, mesh):
         return _fit_spec((dp,) + (None,) * (len(shape) - 1), shape, mesh)
 
     return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# calibration capture buffers (mesh-parallel compression, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def calib_batch_axes(mesh):
+    """Mesh axes carrying the calibration batch. Capture is data-parallel
+    ONLY: weights stay replicated (the "model"/expert axis is reserved for
+    the solve stage), so the batch rides every data axis, pod included."""
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+def calib_pspecs(batch_shapes, mesh):
+    """Specs for the calibration batch fed to the capture forward: leading
+    (batch) dim over the data axes, everything else replicated. Independent
+    of the parallelism profile — capture sharding must not change with the
+    training profile, or the captured reservoirs would depend on it."""
+    dp = calib_batch_axes(mesh)
+
+    def one(path, leaf):
+        return _fit_spec((dp,) + (None,) * (len(leaf.shape) - 1),
+                         leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def capture_pspecs(mesh) -> Tuple[P, P]:
+    """(expert_inputs [L, B, S, d], usage_counts [L, N]) output specs for the
+    capture forward: activations keep the batch dim sharded so each host
+    shard folds only its own token range; counts are exact one-hot sums, so
+    the all-reduce into a replicated buffer is bitwise-safe."""
+    return P(None, calib_batch_axes(mesh)), P()
 
 
 def logits_pspec(mesh, shape=None) -> P:

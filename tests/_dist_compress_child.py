@@ -1,0 +1,84 @@
+"""Subprocess worker for the mesh-differential compression tests.
+
+Runs ``compress_with_plan`` for a uniform and a heterogeneous plan — with
+``--mesh SPEC`` on whatever devices the environment provides (the parent
+test forces a 4-device host platform via XLA_FLAGS), without it on the
+default single device — and emits a JSON record of content digests plus the
+canonicalized report. The parent asserts the records are IDENTICAL across
+device counts: the bit-for-bit contract of DESIGN.md §6.
+
+Not a test module (no ``test_`` prefix); invoked by
+``tests/test_dist_compress.py`` and reusable from the command line:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python tests/_dist_compress_child.py --mesh data=2,model=2
+"""
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.ckpt.checkpoint import tree_digest
+from repro.core import compress as CMP
+from repro.core import plan as PLAN
+from repro.models import model as MD
+
+# volatile report keys: wall times and the mesh annotation (provenance) are
+# the ONLY fields allowed to differ between a sharded and a single-device run
+_VOLATILE = ("t_calibrate_s", "t_merge_s", "mesh")
+
+
+def canonical_report(info: dict) -> dict:
+    d = {k: v for k, v in info.items() if k not in _VOLATILE}
+    d["plan"] = {k: v for k, v in d["plan"].items() if k != "mesh"}
+    return d
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch import mesh as MESH
+        mesh = MESH.make_compression_mesh(args.mesh)
+
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (8, 32),
+                                             0, cfg.vocab_size)}
+               for i in range(3)]
+
+    plans = {
+        "uniform": PLAN.uniform(cfg, method="mergemoe", merged_experts=4,
+                                split=1),
+        "hetero": PLAN.CompressionPlan((
+            PLAN.LayerSpec(0, "mergemoe", 4),
+            PLAN.LayerSpec(1, "average", 2),
+        )),
+    }
+
+    out = {"devices": jax.device_count(), "mesh": args.mesh}
+    for name, plan in plans.items():
+        # max_tokens < total stream so the reservoir replacement schedule is
+        # exercised, not just the fill phase
+        ncfg, nparams, info = CMP.compress_with_plan(
+            cfg, params, plan, batches=batches, max_tokens=100, mesh=mesh)
+        moe = nparams["stack_c"]["moe"]
+        out[name] = {
+            "params_digest": tree_digest(nparams),
+            "tables_digest": tree_digest(
+                {k: moe[k] for k in ("wg", "wu", "wd")}),
+            "remap": np.asarray(moe["remap"]).tolist(),
+            "live": np.asarray(moe["live"]).tolist(),
+            "report": canonical_report(info),
+        }
+    json.dump(out, sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

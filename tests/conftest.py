@@ -1,9 +1,14 @@
 """Tests run with the DEFAULT single CPU device (the dry-run's 512-device
-XLA flag must never leak here)."""
+XLA flag must never leak here). The ONE sanctioned exception is the
+distributed lane: ``scripts/test.sh --dist`` forces a 4-device host platform
+for the distributed-marked cases and marks the intent with REPRO_DIST=1."""
 import os
 
-assert "xla_force_host_platform_device_count" not in os.environ.get(
-    "XLA_FLAGS", ""), "tests must not inherit the dry-run device flag"
+assert ("xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")
+        or os.environ.get("REPRO_DIST") == "1"), \
+    "tests must not inherit a forced device-count flag (scripts/test.sh " \
+    "--dist sets REPRO_DIST=1 for the distributed lane)"
 
 import jax  # noqa: E402
 

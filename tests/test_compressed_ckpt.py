@@ -79,6 +79,32 @@ def test_extras_survive_roundtrip(tmp_path, compressed):
     assert art["report"]["merged_per_layer"] == [4, 2]
     assert art["report"]["compression_ratio"] == pytest.approx(
         info["compression_ratio"])
+    assert art["mesh"] is None                     # single-device provenance
+
+
+def test_artifact_records_mesh_provenance(tmp_path, compressed):
+    """An artifact built under a mesh carries the mesh axes in meta.json —
+    provenance only, never a loading constraint (DESIGN.md §6)."""
+    ncfg, nparams, plan, info = compressed
+    annotated = dict(info, mesh={"axes": {"data": 4}, "devices": 4,
+                                 "solve_shards": 1})
+    CKPT.save_compressed(tmp_path, ncfg, nparams,
+                         plan=plan.with_mesh({"data": 4}), report=annotated)
+    lcfg, lparams, art = CKPT.load_compressed(tmp_path)
+    assert art["mesh"] == {"axes": {"data": 4}, "devices": 4,
+                           "solve_shards": 1}
+    assert PLAN.CompressionPlan.from_json_dict(art["plan"]).mesh \
+        == (("data", 4),)
+    # ...and loading ignores it: params come back identical
+    for a, b in zip(jax.tree.leaves(lparams), jax.tree.leaves(nparams)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # without a report mesh the plan's flat record is wrapped into the SAME
+    # {"axes": ...} schema (one shape for every consumer)
+    CKPT.save_compressed(tmp_path / "planned", ncfg, nparams,
+                         plan=plan.with_mesh({"data": 4}))
+    _, _, art2 = CKPT.load_compressed(tmp_path / "planned")
+    assert art2["mesh"] == {"axes": {"data": 4}}
 
 
 def test_artifact_stores_ragged_tables(tmp_path, compressed):

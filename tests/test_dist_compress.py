@@ -1,0 +1,235 @@
+"""Mesh-parallel compression: the bit-for-bit differential harness.
+
+Three layers of evidence that sharded ``compress_with_plan`` equals the
+single-device run (DESIGN.md §6):
+
+1. DIFFERENTIAL (subprocess): the same compression job runs on 1 device and
+   on a forced 4-device host platform (pure-DP and DP x expert-shard
+   meshes); tables, remaps, live counts, and the canonical report must be
+   IDENTICAL — digests compared across process boundaries.
+2. ALGEBRAIC (host-only): the reservoir replacement schedule is a pure
+   function of the global token index, so folding ANY partition of a token
+   stream in ANY order and merging per-slot must equal one sequential fold —
+   property-tested over random partitions.
+3. EXECUTOR (host-only): ``shard_layer_solves`` gathers results by index,
+   so any shard count returns the sequential list.
+
+In-process multi-device cases run only under ``scripts/test.sh --dist``
+(forced 4-device parent, REPRO_DIST=1); everything else runs in the default
+tier-1 lane.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import calibration as CAL
+from repro.distributed import shard_layer_solves
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run_child(mesh=None, devices=None):
+    # inherit the real environment (CI runners need their PATH/HOME/python
+    # setup intact) and override only the knobs under test. JAX_PLATFORMS=cpu:
+    # without it, a container with libtpu installed spends minutes retrying
+    # GCP metadata probes before falling back to CPU.
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    cmd = [sys.executable, "tests/_dist_compress_child.py"]
+    if mesh:
+        cmd += ["--mesh", mesh]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=str(REPO), timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return json.loads(r.stdout)
+
+
+# ---------------------------------------------------------------------------
+# 1. differential: sharded == single-device, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+def test_mesh_compression_bit_identical_to_single_device():
+    """Uniform AND heterogeneous plans compress to bit-identical tables,
+    remaps, live counts, and reports on a 4-device mesh vs one device."""
+    single = _run_child()
+    assert single["devices"] == 1
+    data4 = _run_child(mesh="data=4", devices=4)
+    assert data4["devices"] == 4
+    mixed = _run_child(mesh="data=2,model=2", devices=4)
+    for name in ("uniform", "hetero"):
+        assert data4[name] == single[name], \
+            f"{name}: pure-DP mesh diverged from single device"
+        assert mixed[name] == single[name], \
+            f"{name}: DP x expert-shard mesh diverged from single device"
+    # the reports really carry content (not vacuously-equal empties)
+    assert single["hetero"]["report"]["merged_per_layer"] == [4, 2]
+    assert any(e["resid"] for e in single["hetero"]["report"]["per_layer"])
+
+
+# ---------------------------------------------------------------------------
+# 2. reservoir shard-merge determinism (host-only, property-based)
+# ---------------------------------------------------------------------------
+
+def _sequential_fold(xi, cap, seed, policy="reservoir"):
+    L, T, d = xi.shape
+    x = np.zeros((L, cap, d), np.float32)
+    slot_g = np.full(cap, -1, np.int64)
+    CAL.fold_tokens(x, slot_g, xi, np.arange(T, dtype=np.int64),
+                    cap=cap, seed=seed, policy=policy)
+    return x, slot_g
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=5, max_value=40))
+def test_reservoir_partition_invariance(seed, n_shards, cap):
+    """Folding any contiguous partition of the stream, in any shard order,
+    then merging, equals the sequential fold — the determinism argument the
+    mesh-parallel calibration capture rests on."""
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(cap, 4 * cap + 8))
+    xi = rng.standard_normal((2, T, 3)).astype(np.float32)
+    ref_x, ref_g = _sequential_fold(xi, cap, seed)
+
+    cuts = np.sort(rng.integers(0, T + 1, size=n_shards - 1))
+    bounds = [0, *cuts.tolist(), T]
+    parts = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        x = np.zeros((2, cap, 3), np.float32)
+        slot_g = np.full(cap, -1, np.int64)
+        if hi > lo:
+            CAL.fold_tokens(x, slot_g, xi[:, lo:hi],
+                            np.arange(lo, hi, dtype=np.int64),
+                            cap=cap, seed=seed)
+        parts.append((x, slot_g))
+    rng.shuffle(parts)                      # merge order must not matter
+    got_x, got_g = CAL.merge_reservoirs(parts)
+    np.testing.assert_array_equal(got_g, ref_g)
+    np.testing.assert_array_equal(got_x, ref_x)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_reservoir_fold_is_order_independent(seed):
+    """Folding shard chunks into ONE state in reversed order still matches
+    the sequential fold (last-write-wins is by global index, not call order)."""
+    rng = np.random.default_rng(seed)
+    cap, T = 16, 50
+    xi = rng.standard_normal((1, T, 2)).astype(np.float32)
+    ref_x, ref_g = _sequential_fold(xi, cap, seed)
+    x = np.zeros((1, cap, 2), np.float32)
+    slot_g = np.full(cap, -1, np.int64)
+    for lo, hi in [(30, 50), (0, 15), (15, 30)]:
+        CAL.fold_tokens(x, slot_g, xi[:, lo:hi],
+                        np.arange(lo, hi, dtype=np.int64), cap=cap, seed=seed)
+    np.testing.assert_array_equal(slot_g, ref_g)
+    np.testing.assert_array_equal(x, ref_x)
+
+
+def test_reservoir_is_uniform_enough():
+    """Sanity on the counter-based Algorithm R: every slot is claimed, and
+    late-stream tokens survive at roughly cap/T rate (not systematically
+    dropped — the property that makes the sample uniform over the stream)."""
+    cap, T = 64, 4096
+    slots = CAL.reservoir_slots(np.arange(T, dtype=np.int64), cap, seed=7)
+    kept = slots >= 0
+    assert kept[:cap].all()                       # fill phase keeps everything
+    tail = kept[T // 2:]
+    expect = cap * np.log(2)                      # sum_{g>T/2} cap/g ≈ cap ln 2
+    assert 0.4 * expect < tail.sum() < 2.5 * expect
+    assert set(slots[kept][-200:]) <= set(range(cap))
+
+
+# ---------------------------------------------------------------------------
+# 3. sharded solve executor (host-only)
+# ---------------------------------------------------------------------------
+
+def test_shard_layer_solves_matches_sequential_any_shard_count():
+    thunks = [lambda i=i: np.arange(i, i + 4) * (i + 1) for i in range(7)]
+    ref, _ = shard_layer_solves(thunks, 1)
+    for n in (2, 3, 7, 16):
+        got, stats = shard_layer_solves(thunks, n)
+        assert stats["n_shards"] == n
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_shard_layer_solves_propagates_errors():
+    def boom():
+        raise RuntimeError("solve failed")
+    with pytest.raises(RuntimeError, match="solve failed"):
+        shard_layer_solves([lambda: 1, boom, lambda: 3], 2)
+    with pytest.raises(ValueError):
+        shard_layer_solves([lambda: 1], 0)
+
+
+# ---------------------------------------------------------------------------
+# in-process multi-device cases (scripts/test.sh --dist lane)
+# ---------------------------------------------------------------------------
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs a forced 4-device host platform (scripts/test.sh --dist)")
+
+
+@pytest.mark.distributed
+@needs_devices
+def test_mesh_capture_matches_single_stream_in_process():
+    """CalibrationStream(mesh=...) reproduces the unsharded stream bitwise:
+    same reservoir rows, same slot schedule, same counts."""
+    from repro import configs
+    from repro.launch import mesh as MESH
+    from repro.models import model as MD
+
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(i), (8, 16),
+                                             0, cfg.vocab_size)}
+               for i in range(2)]
+    ref = CAL.CalibrationStream(cfg, params, max_tokens_per_layer=48,
+                                seed=11).consume(batches)
+    mesh = MESH.make_compression_mesh("data=4")
+    got = CAL.CalibrationStream(cfg, params, max_tokens_per_layer=48,
+                                seed=11, mesh=mesh).consume(batches)
+    rx, rg = ref.reservoir_state()
+    gx, gg = got.reservoir_state()
+    np.testing.assert_array_equal(gg, rg)
+    np.testing.assert_array_equal(gx, rx)
+    for l in range(cfg.n_layers):
+        np.testing.assert_array_equal(got.counts(l), ref.counts(l))
+
+
+@pytest.mark.distributed
+@needs_devices
+def test_mesh_capture_uncapped_and_nondivisible_batch():
+    """Uncapped streams gather every token in order; a batch dim that does
+    not divide the data axis falls back to replicated capture (divisibility
+    drop) without changing the captured values."""
+    from repro import configs
+    from repro.launch import mesh as MESH
+    from repro.models import model as MD
+
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    mesh = MESH.make_compression_mesh("data=4")
+    for B in (8, 6):                          # 6 does not divide data=4
+        batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(9),
+                                                 (B, 16), 0, cfg.vocab_size)}]
+        ref = CAL.CalibrationStream(cfg, params).consume(batches)
+        got = CAL.CalibrationStream(cfg, params, mesh=mesh).consume(batches)
+        assert got.n_tokens == ref.n_tokens == B * 16
+        for l in range(cfg.n_layers):
+            np.testing.assert_array_equal(got.layer(l).x, ref.layer(l).x)
+            np.testing.assert_array_equal(got.layer(l).counts,
+                                          ref.layer(l).counts)

@@ -83,6 +83,59 @@ def test_remap_duplicates_sum_weights():
         np.asarray(e0, np.float32), atol=2.0, rtol=0.02)  # bf16 precision
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), bad=st.integers(0, 7))
+def test_route_fail_closed_drops_corrupted_remap_targets(seed, bad):
+    """route() masking must FAIL CLOSED: an original expert whose remap
+    lands at or beyond ``live`` (possible only through corruption — valid
+    remaps stay below live by construction) can never win top-k, so tokens
+    are never dispatched into zero-filled pad rows. The no-op direction
+    (valid remap => mask changes nothing) is covered by
+    test_plan.py::test_router_logit_mask_is_noop_for_valid_remap; this is
+    the DROP direction."""
+    cfg = _cfg(E=8, k=2)
+    key = jax.random.PRNGKey(seed)
+    p = MoE.moe_init(cfg, key, n_real=4)            # M=4 physical rows
+    live = 3
+    remap = np.array(jax.random.randint(key, (8,), 0, live), np.int32)
+    remap[bad] = live                               # corrupted: pad row
+    p = dict(p, remap=jnp.asarray(remap),
+             live=jnp.asarray(live, jnp.int32))
+    # router biased hard toward the corrupted expert so unmasked routing
+    # WOULD pick it for every token — the mask must divert all of them
+    router = np.zeros((cfg.d_model, 8), np.float32)
+    router[:, bad] = 10.0
+    p["router"] = jnp.asarray(router)
+    x = jax.random.normal(key, (2, 9, cfg.d_model), jnp.float32)
+
+    w, idx, probs = MoE.route(cfg, p, x)
+    chosen_remap = np.asarray(jnp.take(p["remap"], idx))
+    assert (chosen_remap < live).all(), \
+        "masked routing dispatched a token to a pad row"
+    assert not np.isin(np.asarray(idx), bad).any()
+    assert np.asarray(probs)[..., bad].max() == 0.0   # -inf before softmax
+    # weights stay a valid renormalized top-k distribution
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, rtol=1e-5)
+
+    # non-vacuous: without the live mask the corrupted expert DOES win top-k
+    # for the tokens whose projection onto its router column is positive
+    stripped = {k_: v for k_, v in p.items() if k_ != "live"}
+    _, idx_unmasked, _ = MoE.route(cfg, stripped, x)
+    assert np.isin(np.asarray(idx_unmasked), bad).any(), \
+        "test setup failed to make the corrupted expert attractive"
+
+    # and the full forward stays finite with the corrupted remap in place
+    params = MD.init(cfg.compressed(4, 1), jax.random.PRNGKey(0))
+    moe_c = dict(params["stack_c"]["moe"])
+    lr = np.array(moe_c["remap"])
+    lr[:, bad] = 4                                  # >= live on every layer
+    moe_c["remap"] = jnp.asarray(lr)
+    params["stack_c"] = dict(params["stack_c"], moe=moe_c)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+    logits, _, _ = MD.forward(cfg.compressed(4, 1), params, batch)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
 def test_compressed_psum_multidevice():
     """int8-over-the-wire psum inside shard_map on 8 simulated devices."""
     script = textwrap.dedent("""

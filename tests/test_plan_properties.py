@@ -1,0 +1,105 @@
+"""Property-based tests for the CompressionPlan builders.
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/_hypothesis_compat.py`` shim — same properties either way:
+
+* ``for_target_ratio`` MEETS the requested ratio and never overshoots by
+  more than one expert's bytes (the planner's decrement granularity);
+* the planner is MONOTONE: asking for more compression never keeps more
+  experts alive, globally or per layer;
+* plan validation REJECTS out-of-range budgets, holes in the suffix, and
+  unknown methods — for arbitrary bad inputs, not just the hand-picked
+  cases in test_plan.py.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import configs
+from repro.core import plan as PLAN
+
+CFG = configs.get("qwen3-moe-30b-a3b").reduced().replace(n_layers=4)
+N = CFG.moe.n_experts
+L = CFG.n_layers
+
+# reachable target band for this config: ratios are drawn in tenths over
+# (1.0, max_ratio at split=1) and clamped to the drawn split's own ceiling
+# so every example is plannable by construction
+_MAX_RATIO = PLAN.plan_live_ratio(
+    CFG, PLAN.uniform(CFG, merged_experts=1, split=1))
+_TENTHS = st.integers(min_value=11, max_value=int(_MAX_RATIO * 10) - 1)
+
+
+def _reachable(target: float, split: int) -> float:
+    ceil = PLAN.plan_live_ratio(
+        CFG, PLAN.uniform(CFG, merged_experts=1, split=split))
+    return min(target, ceil - 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_TENTHS, st.integers(min_value=1, max_value=L - 1))
+def test_for_target_ratio_lands_within_tolerance(tenths, split):
+    target = _reachable(tenths / 10.0, split)
+    plan = PLAN.for_target_ratio(CFG, target_ratio=target, split=split)
+    got = PLAN.plan_live_ratio(CFG, plan)
+    assert got >= target                      # met ...
+    # ... and not overshot by more than ONE expert's bytes (the greedy
+    # planner's decrement granularity)
+    total = CFG.param_count() * CFG.param_dtype.itemsize
+    assert (total / target) - (total / got) <= PLAN.expert_bytes(CFG) + 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(_TENTHS, _TENTHS, st.integers(min_value=1, max_value=L - 1))
+def test_for_target_ratio_monotone_in_target(a, b, split):
+    lo = _reachable(min(a, b) / 10.0, split)
+    hi = _reachable(max(a, b) / 10.0, split)
+    p_lo = PLAN.for_target_ratio(CFG, target_ratio=lo, split=split)
+    p_hi = PLAN.for_target_ratio(CFG, target_ratio=hi, split=split)
+    # more compression => no layer keeps MORE experts (the greedy order is
+    # fixed, so the harder plan's allocation is a pointwise refinement)
+    for m_lo, m_hi in zip(p_lo.merged_per_layer, p_hi.merged_per_layer):
+        assert m_hi <= m_lo
+    assert sum(p_hi.merged_per_layer) <= sum(p_lo.merged_per_layer)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=-5, max_value=3 * N),
+       st.integers(min_value=0, max_value=L - 1))
+def test_validation_rejects_out_of_range_budgets(m, split):
+    specs = tuple(PLAN.LayerSpec(l, "mergemoe", m) for l in range(split, L))
+    plan = PLAN.CompressionPlan(specs)
+    if 1 <= m <= N:
+        assert plan.validate(CFG) is plan
+    else:
+        with pytest.raises(ValueError, match="merged_experts"):
+            plan.validate(CFG)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=L - 1),
+                min_size=1, max_size=L))
+def test_validation_accepts_exactly_contiguous_suffixes(layers):
+    layer_set = sorted(set(layers))
+    specs = tuple(PLAN.LayerSpec(l, "mergemoe", 2) for l in layer_set)
+    plan = PLAN.CompressionPlan(specs)
+    if layer_set == list(range(layer_set[0], L)):
+        assert plan.validate(CFG) is plan
+    else:                                     # hole, or suffix not reaching L
+        with pytest.raises(ValueError, match="suffix"):
+            plan.validate(CFG)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=N),
+       st.sampled_from(PLAN.available_methods()),
+       st.integers(min_value=0, max_value=L - 1))
+def test_plan_json_roundtrip_property(m, method, split):
+    plan = PLAN.uniform(CFG, method=method, merged_experts=m, split=split)
+    again = PLAN.CompressionPlan.from_json(plan.to_json())
+    assert again == plan
+    # mesh provenance survives the roundtrip too
+    annotated = plan.with_mesh({"data": 4, "model": 2})
+    back = PLAN.CompressionPlan.from_json(annotated.to_json())
+    assert back.mesh == (("data", 4), ("model", 2))
+    assert back.specs == plan.specs
