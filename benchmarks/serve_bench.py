@@ -1,19 +1,28 @@
-"""Continuous-batching throughput: uncompressed vs MergeMoE (M = N/2).
+"""Continuous-batching serving benchmark -> benchmarks/BENCH_serve.json.
 
-Serves an identical Poisson-ish request trace through the continuous-batching
-engine twice — once with the original checkpoint, once with the same weights
-MergeMoE-compressed to half the experts (router + remap unchanged math,
-merged expert tables) — and reports tokens/sec plus per-request latency.
-Both runs decode through the ragged dispatch path, so on TPU the comparison
-is grouped-kernel vs grouped-kernel with fewer, fuller expert groups; on CPU
-(this container) the jnp oracle stands in at identical shapes.
+Serves an identical Poisson request trace through the engine in two modes —
+
+* **before**: the pre-PR hot loop (``decode_block=1`` step-at-a-time decode,
+  ragged dispatch, batch-of-1 admission): one jitted call + one host sync per
+  decode STEP;
+* **after**: the fused loop (``decode_block=K`` device-resident scan with
+  on-device sampling/stop flags, gather-dispatch decode MoE, batched
+  same-bucket admission): one call + one sync per K steps —
+
+for both the uncompressed checkpoint and the same weights MergeMoE-compressed
+to half the experts, and records tokens/sec, p50/p95 request latency, and
+host dispatches per generated token. Every mode pair is asserted
+token-for-token identical (greedy), and the JSON carries the parity bits the
+CI smoke gate checks. On TPU the compressed rows route fewer, fuller expert
+groups through the grouped/gather kernels; on CPU (this container) the jnp
+oracles stand in at identical shapes, so the trustworthy CPU signals are the
+host-dispatch counts and the fused-loop overhead reduction.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --requests 16
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -29,21 +38,34 @@ from repro.core import compress as CMP
 from repro.models import model as MD
 from repro.serving import Engine, EngineConfig, poisson_trace
 
+OUT_PATH = Path(__file__).resolve().parent / "BENCH_serve.json"
 
-def run_trace(cfg, params, *, label, requests, prompt_lens, arrivals,
-              max_new_tokens, n_slots, s_max, buckets, repeats=3):
+
+def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
+              requests, prompt_lens, arrivals, max_new_tokens, n_slots, s_max,
+              buckets, repeats=3, bench_iters=50, run_bench=True):
     eng = Engine(EngineConfig(n_slots=n_slots, s_max=s_max,
-                              prefill_buckets=buckets), cfg=cfg, params=params)
+                              prefill_buckets=buckets,
+                              decode_block=decode_block, dispatch=dispatch,
+                              batch_admission=batch_admission),
+                 cfg=cfg, params=params)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=int(l), dtype=np.int32)
                for l in prompt_lens]
 
-    # warmup: compile the decode step and every prefill bucket specialization
-    # on throwaway requests before the timed trace
+    # warmup: compile the decode block and every prefill specialization —
+    # each bucket at each power-of-two admission-group size the trace can
+    # produce — on throwaway requests before the timed trace
     eng.submit(prompts[0], max_new_tokens=2)
-    for l in sorted(set(eng.bucket_for(len(p)) for p in prompts)):
-        eng.submit(np.zeros(min(l, s_max - 4), np.int32), max_new_tokens=1)
     eng.run()
+    for l in sorted(set(eng.bucket_for(len(p)) for p in prompts)):
+        for burst in (n_slots, 2, 1):
+            for _ in range(burst):
+                eng.submit(np.zeros(min(l, s_max - 4), np.int32),
+                           max_new_tokens=1)
+            eng.run()
+    for c in eng.counters:
+        eng.counters[c] = 0
 
     # trace tok/s is host-loop noisy at smoke scale -> best of ``repeats``
     best_dt, done = None, None
@@ -62,25 +84,38 @@ def run_trace(cfg, params, *, label, requests, prompt_lens, arrivals,
 
     toks = sum(len(r.out_tokens) for r in done)
     lat = [r.t_finished - r.arrival_time for r in done]
-    steady = eng.bench_decode(iters=50)
+    # parity-isolation runs only need tokens, not a steady-state timing pass
+    steady = (eng.bench_decode(iters=bench_iters) if run_bench
+              else {"tok_per_s": 0.0, "dispatches_per_s": 0.0,
+                    "host_dispatches_per_token": 0.0})
     rec = {
         "label": label,
-        "experts": (cfg.moe_merged or cfg.moe.n_experts
-                    ) if cfg.moe else 0,
-        "dispatch": cfg.moe.dispatch if cfg.moe else "dense-mlp",
+        "experts": (cfg.moe_merged or cfg.moe.n_experts) if cfg.moe else 0,
+        "dispatch": dispatch,
+        "decode_block": decode_block,
+        "batch_admission": batch_admission,
         "requests": len(done),
         "tokens": toks,
         "wall_s": round(best_dt, 3),
         "tok_per_s": round(toks / best_dt, 1),
-        "steady_decode_tok_per_s": round(steady, 1),
+        # trace-loop counters cover all repeats (the ratio is what matters)
+        "host_dispatches_per_token": round(eng.host_dispatches_per_token, 4),
+        "steady_decode_tok_per_s": round(steady["tok_per_s"], 1),
+        "steady_dispatches_per_s": round(steady["dispatches_per_s"], 1),
+        "steady_host_dispatches_per_token": round(
+            steady["host_dispatches_per_token"], 4),
         "mean_latency_steps": round(float(np.mean(lat)), 2),
+        "p50_latency_steps": round(float(np.percentile(lat, 50)), 2),
         "p95_latency_steps": round(float(np.percentile(lat, 95)), 2),
     }
-    print(f"[{label:>12}] {rec['tok_per_s']:8.1f} tok/s trace  "
-          f"{rec['steady_decode_tok_per_s']:8.1f} tok/s steady-decode  "
-          f"({rec['tokens']} tokens, {rec['experts']} experts, "
-          f"mean latency {rec['mean_latency_steps']} steps)")
-    return rec
+    print(f"[{label:>22}] {rec['tok_per_s']:8.1f} tok/s trace  "
+          f"{rec['steady_decode_tok_per_s']:8.1f} tok/s steady  "
+          f"{rec['host_dispatches_per_token']:.3f} disp/tok  "
+          f"(p95 latency {rec['p95_latency_steps']} steps)")
+    # tokens in submission order (uids are per-engine; position is the
+    # cross-engine-stable key, and repeats are deterministic replicas)
+    tokens = [list(r.out_tokens) for r in sorted(done, key=lambda r: r.uid)]
+    return rec, tokens
 
 
 def main():
@@ -89,15 +124,18 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--s-max", type=int, default=64)
-    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="fused K (the 'after' engine)")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="Poisson arrival rate (requests per decode step)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--bench-iters", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced()
-    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
     params = MD.init(cfg, jax.random.PRNGKey(args.seed))
 
     calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
@@ -112,29 +150,84 @@ def main():
     lens = np.minimum(lens, args.s_max - args.max_new_tokens - 1)
     arrivals = poisson_trace(args.requests, rate=args.rate,
                              seed=args.seed + 2)
-    buckets = (8, 16, 24, 32)
     common = dict(requests=args.requests, prompt_lens=lens, arrivals=arrivals,
                   max_new_tokens=args.max_new_tokens, n_slots=args.n_slots,
-                  s_max=args.s_max, buckets=buckets)
+                  s_max=args.s_max, buckets=(8, 16, 24, 32),
+                  repeats=args.repeats, bench_iters=args.bench_iters)
+    K = args.decode_block
+    before = dict(decode_block=1, dispatch="ragged", batch_admission=False)
+    after = dict(decode_block=K, dispatch="gather", batch_admission=True)
 
     print(f"== serve_bench: {args.requests} requests, Poisson rate "
-          f"{args.rate}/step, {args.n_slots} slots ==")
-    full = run_trace(cfg, params, label="uncompressed", **common)
-    comp = run_trace(ncfg, nparams, label=f"mergemoe-M{M}", **common)
-    summary = {
-        "full": full, "compressed": comp,
-        "compression_ratio": round(info["compression_ratio"], 3),
-        "speedup_trace": round(comp["tok_per_s"] / full["tok_per_s"], 3),
-        "speedup_steady": round(comp["steady_decode_tok_per_s"]
-                                / full["steady_decode_tok_per_s"], 3),
+          f"{args.rate}/step, {args.n_slots} slots, K={K} ==")
+    rows, toks = {}, {}
+    for tag, c, p in (("full", cfg, params), ("compressed", ncfg, nparams)):
+        rb, tb = run_trace(c, p, label=f"{tag}/before(K1,ragged)",
+                           **before, **common)
+        ra, ta = run_trace(c, p, label=f"{tag}/after(K{K},gather)",
+                           **after, **common)
+        # gather==ragged isolation at the same fused K, and batched==serial
+        # admission isolation at the same dispatch
+        rr, tr = run_trace(c, p, label=f"{tag}/after(K{K},ragged)",
+                           **dict(after, dispatch="ragged"),
+                           **dict(common, repeats=1, run_bench=False))
+        rs, ts = run_trace(c, p, label=f"{tag}/after(serial-admit)",
+                           **dict(after, batch_admission=False),
+                           **dict(common, repeats=1, run_bench=False))
+        rows[tag] = {"before": rb, "after": ra}
+        toks[tag] = {"before": tb, "after": ta, "ragged": tr, "serial": ts}
+
+    parity = {
+        "fused_vs_step_bitwise": all(
+            toks[t]["before"] == toks[t]["after"] for t in toks),
+        "gather_vs_ragged_bitwise": all(
+            toks[t]["after"] == toks[t]["ragged"] for t in toks),
+        "batched_vs_serial_admission_bitwise": all(
+            toks[t]["after"] == toks[t]["serial"] for t in toks),
     }
-    print(f"== trace speedup {summary['speedup_trace']}x, steady-decode "
-          f"speedup {summary['speedup_steady']}x at "
-          f"{summary['compression_ratio']}x fewer expert bytes ==\n"
-          f"   (CPU runs the jnp oracle at identical shapes — the "
-          f"fewer-fuller-blocks win is a TPU grouped-kernel effect)")
+    fb, fa = rows["full"]["before"], rows["full"]["after"]
+    cb, ca = rows["compressed"]["before"], rows["compressed"]["after"]
+    summary = {
+        "arch": args.arch,
+        "n_slots": args.n_slots,
+        "decode_block": K,
+        "requests": args.requests,
+        "max_new_tokens": args.max_new_tokens,
+        "full": rows["full"],
+        "compressed": rows["compressed"],
+        "parity": parity,
+        "compression_ratio": round(info["compression_ratio"], 3),
+        "speedup": {
+            "host_dispatch_reduction_fused": round(
+                fb["host_dispatches_per_token"]
+                / fa["host_dispatches_per_token"], 2),
+            "steady_dispatch_reduction_fused": round(
+                fb["steady_host_dispatches_per_token"]
+                / fa["steady_host_dispatches_per_token"], 2),
+            "steady_tok_per_s_fused": round(
+                fa["steady_decode_tok_per_s"]
+                / fb["steady_decode_tok_per_s"], 3),
+            "trace_tok_per_s_fused": round(
+                fa["tok_per_s"] / fb["tok_per_s"], 3),
+            "steady_tok_per_s_compressed_after": round(
+                ca["steady_decode_tok_per_s"]
+                / fa["steady_decode_tok_per_s"], 3),
+            "trace_tok_per_s_compressed_after": round(
+                ca["tok_per_s"] / fa["tok_per_s"], 3),
+        },
+    }
+    print(f"== fused K={K}: {summary['speedup']['host_dispatch_reduction_fused']}x "
+          f"fewer host dispatches/token on the trace "
+          f"({summary['speedup']['steady_dispatch_reduction_fused']}x steady), "
+          f"{summary['speedup']['trace_tok_per_s_fused']}x trace tok/s, "
+          f"{summary['speedup']['steady_tok_per_s_fused']}x steady tok/s ==")
+    print(f"== parity {parity} ==")
+    OUT_PATH.write_text(json.dumps(summary, indent=1))
+    print(f"wrote {OUT_PATH}")
     if args.json:
         print(json.dumps(summary, indent=1))
+    if not all(parity.values()):
+        raise SystemExit("serve_bench parity check FAILED: " + repr(parity))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+"""Decode-mode (gather-dispatch) MoE SwiGLU Pallas kernel.
+
+The grouped kernel (``grouped_mlp.py``) is built for prefill-sized token
+counts: it sorts tokens by expert, pads every expert segment to a token
+block, and walks block-aligned groups. At decode the MoE layer sees only
+``n_slots`` tokens (a handful), so that path is pure overhead — the argsort,
+bincount, segment padding (``T + E·(bt-1)`` rows for T≈4!) and scatter cost
+more than the math.
+
+This kernel is the small-T specialization: the grid is ``(T, k)`` — one
+token per row-block, one of its top-k experts per inner step — and a
+scalar-prefetched ``idx`` table lets each step's BlockSpec index maps gather
+the three weight tables of exactly the expert that token routed to. No
+sorting, no padding, no scatter: the only HBM traffic is the k expert rows a
+token actually needs, which after MergeMoE merging means fewer distinct rows
+re-read across the batch. The per-token combine weight rides in SMEM and the
+k contributions accumulate in an fp32 VMEM scratch, mirroring the ragged
+path's fp32 scatter-add so the two dispatches agree (tests assert parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(idx_ref, x_ref, w_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref,
+            *, k: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                           # [1, d]
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=F32)
+    u = jnp.dot(x, wu_ref[0], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    # downcast to the model dtype before the fp32-weighted combine — the
+    # exact arithmetic of the ragged path (grouped matmul emits x.dtype rows,
+    # the combine scatter-adds them in fp32)
+    y = jnp.dot(h, wd_ref[0], preferred_element_type=F32).astype(x.dtype)
+    acc_ref[...] += w_ref[0] * y.astype(F32)
+
+    @pl.when(j == k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_swiglu(x, wg, wu, wd, idx, w, interpret: bool = False):
+    """x: [T, d]; wg/wu: [E, d, f]; wd: [E, f, d]; idx: [T, k] int32 in REAL
+    expert space; w: [T, k] combine weights. Returns [T, d] where row t is
+    ``Σ_j w[t, j] · SwiGLU_{idx[t, j]}(x[t])``.
+
+    ``idx`` entries are clipped to [0, E): routing fails closed upstream
+    (``moe.route`` masks remap targets >= live, DESIGN.md §5), so the clip is
+    pure out-of-bounds defense for the weight-row gather, matching the
+    oracle."""
+    T, d = x.shape
+    E, _, f = wg.shape
+    k = idx.shape[-1]
+    if T == 0:
+        return jnp.zeros((0, d), x.dtype)
+    idx = jnp.clip(idx.astype(jnp.int32), 0, E - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t, j, ix: (t, 0)),
+            pl.BlockSpec((1, 1), lambda t, j, ix: (t, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, d, f), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, d, f), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, f, d), lambda t, j, ix: (ix[t, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda t, j, ix: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), F32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=interpret,
+    )(idx, x, w.astype(F32), wg, wu, wd)

@@ -35,6 +35,15 @@ def grouped_swiglu(x, wg, wu, wd, group_sizes, interpret: bool = False):
     return ref.grouped_swiglu(x, wg, wu, wd, group_sizes)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_swiglu(x, wg, wu, wd, idx, w, interpret: bool = False):
+    if _on_tpu() or interpret:
+        from repro.kernels import decode_moe as _k
+        return _k.gather_swiglu(x, wg, wu, wd, idx, w,
+                                interpret=not _on_tpu())
+    return ref.gather_swiglu(x, wg, wu, wd, idx, w)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "interpret"))
 def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
     if _on_tpu() or interpret:

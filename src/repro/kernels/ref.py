@@ -42,6 +42,31 @@ def grouped_swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
     return ein("tf,tfd->td", h, wd[eid]).astype(x.dtype)
 
 
+def gather_swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+                  idx: jax.Array, w: jax.Array) -> jax.Array:
+    """Decode-mode (gather-dispatch) MoE oracle.
+
+    x: [T, d]; wg/wu: [E, d, f]; wd: [E, f, d]; idx: [T, k] int32 REAL-expert
+    ids; w: [T, k] combine weights. Returns [T, d] with row t equal to
+    ``Σ_j w[t, j] · SwiGLU_{idx[t, j]}(x[t])`` — the same per-row arithmetic
+    as :func:`grouped_swiglu` on expert-sorted rows, evaluated token-major
+    (no sort/bincount/scatter). The combine accumulates in fp32, mirroring
+    the ragged path's scatter-add.
+    """
+    T, d = x.shape
+    k = idx.shape[-1]
+    E = wg.shape[0]
+    eid = jnp.clip(idx.reshape(-1), 0, E - 1)        # [T*k] token-major
+    xr = jnp.repeat(x, k, axis=0)                    # [T*k, d]
+    g = ein("td,tdf->tf", xr, wg[eid])
+    u = ein("td,tdf->tf", xr, wu[eid])
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = ein("tf,tfd->td", h, wd[eid]).astype(x.dtype)
+    out = jnp.sum(y.reshape(T, k, d).astype(F32)
+                  * w.reshape(T, k, 1).astype(F32), axis=1)
+    return out.astype(x.dtype)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, scale: float | None = None) -> jax.Array:
     """Attention oracle. q/k/v: [B, H, S, hd] (same H; GQA expansion is done

@@ -98,23 +98,6 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
 # continuous-batching (slotted) serving
 # ---------------------------------------------------------------------------
 
-def make_slot_prefill(cfg: ModelConfig) -> Callable:
-    """prefill_slots(params, tokens [B, S_bucket], lengths [B]) ->
-    (logits [B, V], k [L, B, S_bucket, nkv, hd], v). One jit specialization
-    per prompt bucket length."""
-    def slot_prefill(params, tokens, lengths):
-        return MD.prefill_slots(cfg, params, tokens, lengths)
-    return slot_prefill
-
-
-def make_slot_insert(cfg: ModelConfig) -> Callable:
-    """slot_insert(cache, slot, k_new, v_new, length) -> cache. ``slot`` and
-    ``length`` are traced, so admission compiles once per bucket length."""
-    def slot_insert(cache, slot, k_new, v_new, length):
-        return MD.insert_slot(cache, slot, k_new, v_new, length)
-    return slot_insert
-
-
 def make_slot_decode(cfg: ModelConfig) -> Callable:
     """slot_decode(params, cache, token [B], active [B]) ->
     (logits [B, V], greedy [B] int32, cache). The greedy argmax is computed
@@ -124,3 +107,77 @@ def make_slot_decode(cfg: ModelConfig) -> Callable:
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return logits, greedy, cache
     return slot_decode
+
+
+def make_slot_admit(cfg: ModelConfig) -> Callable:
+    """Fused admission: prefill + slot insert + first-token argmax in ONE
+    jitted call (one dispatch per admission group instead of three).
+
+    slot_admit(params, cache, tokens [B, S_bucket], lengths [B], slots [B])
+    -> (logits [B, V], greedy [B] int32, cache). Rows may be padding (the
+    engine pads groups to a power of two to bound jit specializations):
+    their ``slots`` entry is set OUT OF BOUNDS (>= n_slots), and JAX's
+    default scatter semantics DROP out-of-bounds updates, so pad rows'
+    garbage KV and lengths never land in the cache — the engine just ignores
+    their logits rows."""
+    def slot_admit(params, cache, tokens, lengths, slots):
+        logits, k_new, v_new = MD.prefill_slots(cfg, params, tokens, lengths)
+        cache = MD.insert_slots(cache, slots, k_new, v_new, lengths)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, greedy, cache
+    return slot_admit
+
+
+def make_slot_decode_multi(cfg: ModelConfig, k_steps: int,
+                           temperature: float = 0.0) -> Callable:
+    """Fused K-step decode: the device, not Python, drives steady-state
+    decode (DESIGN.md §7).
+
+    slot_decode_multi(params, cache, token [B], active [B], remaining [B],
+    eos [B], key) -> (block [K, B, 2] int32, active [B] bool, cache), where
+    ``block[s, b] = (token, emitted)`` — tokens and their emitted flags are
+    PACKED into one array so the engine's per-block device->host readback is
+    a single transfer.
+
+    ``lax.scan`` runs ``k_steps`` decode steps inside ONE jitted call:
+    sampling (greedy argmax, or Gumbel-max at ``temperature`` > 0 from a
+    per-step fold of ``key``) happens on device, and per-slot stop flags
+    freeze finished slots in place — a slot whose sampled token hits its
+    ``eos`` entry (-1 = none) or exhausts ``remaining`` stops advancing
+    ``pos`` and stops emitting, but rides along in the batch (static
+    shapes). ``emitted[s, b]`` marks which of the K tokens are real; the
+    host replays only those. When every slot is frozen the remaining scan
+    tail skips the forward entirely (``lax.cond``), so an early-finishing
+    block costs control flow, not FLOPs. Host syncs drop from one per token
+    to one per K tokens."""
+    def slot_decode_multi(params, cache, token, active, remaining, eos, key):
+        def step(carry, key_s):
+            cache, tok, act, rem = carry
+            logits, cache = MD.decode_step_slots(cfg, params, cache, tok, act)
+            if temperature > 0.0:
+                g = jax.random.gumbel(key_s, logits.shape, F32)
+                nxt = jnp.argmax(logits.astype(F32) / temperature + g,
+                                 axis=-1).astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            emitted = act
+            rem = rem - act.astype(jnp.int32)
+            done = (nxt == eos) | (rem <= 0)
+            act = act & ~done
+            tok = jnp.where(emitted, nxt, tok)
+            return (cache, tok, act, rem), (nxt, emitted)
+
+        def body(carry, key_s):
+            cache, tok, act, rem = carry
+            return jax.lax.cond(
+                jnp.any(act),
+                lambda c: step(c, key_s),
+                lambda c: (c, (c[1], jnp.zeros_like(c[2]))),
+                (cache, tok, act, rem))
+
+        keys = jax.random.split(key, k_steps)
+        (cache, tok, act, rem), (toks, emits) = jax.lax.scan(
+            body, (cache, token, active, remaining), keys)
+        block = jnp.stack([toks, emits.astype(jnp.int32)], axis=-1)
+        return block, act, cache
+    return slot_decode_multi

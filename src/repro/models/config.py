@@ -26,9 +26,16 @@ class MoEConfig:
     group_size: int = 1024
     router_jitter: float = 0.0
     aux_loss_coef: float = 0.01
-    # 'dense' = capacity/einsum dispatch (pjit friendly, used in dry-run)
+    # 'dense'  = capacity/einsum dispatch (pjit friendly, used in dry-run)
     # 'ragged' = sort-based grouped matmul (single-device / Pallas path)
+    # 'gather' = ragged that specializes decode-shaped calls (one token per
+    #            sequence, S == 1, and T <= gather_max_tokens) to the
+    #            per-token gather kernel; prefill buckets (S > 1) always
+    #            keep the grouped kernel. Trace-time switch (DESIGN.md §7).
     dispatch: str = "dense"
+    # token-count ceiling for the gather specialization under
+    # dispatch='gather' (the serving engine raises it to cover n_slots)
+    gather_max_tokens: int = 8
 
 
 @dataclass(frozen=True)

@@ -346,6 +346,20 @@ def insert_slot(cache: dict, slot: jax.Array, k_new: jax.Array,
     return {"k": k, "v": v, "pos": pos}
 
 
+def insert_slots(cache: dict, slots: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, lengths: jax.Array) -> dict:
+    """Batched :func:`insert_slot`: write a whole admission group at once.
+
+    k_new/v_new: [L, B, S_bucket, nkv, hd] from one batched
+    :func:`prefill_slots`; slots: [B] int32 (distinct); lengths: [B] int32.
+    One scatter per tensor instead of B ``dynamic_update_slice`` dispatches."""
+    Sb = k_new.shape[2]
+    k = cache["k"].at[:, slots, :Sb].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, slots, :Sb].set(v_new.astype(cache["v"].dtype))
+    pos = cache["pos"].at[slots].set(lengths)
+    return {"k": k, "v": v, "pos": pos}
+
+
 def decode_step_slots(cfg: ModelConfig, params: dict, cache: dict,
                       token: jax.Array, active: jax.Array):
     """One decode step across all serving slots.

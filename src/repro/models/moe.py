@@ -1,12 +1,18 @@
 """Mixture-of-Experts layer.
 
-Two dispatch paths:
+Three dispatch paths:
 
 * ``dense``  — GShard/GSPMD-style capacity-based one-hot dispatch. Static
   shapes, partitions cleanly under pjit (tokens on the ``data`` axis, experts
   on the ``model`` axis -> XLA inserts the all-to-all). Used by train/dry-run.
 * ``ragged`` — sort-by-expert grouped matmul (single-device / serving path;
   the Pallas grouped-matmul kernel plugs in here).
+* ``gather`` — ragged that specializes decode-SHAPED calls (one token per
+  sequence, at most ``gather_max_tokens`` of them) to a per-token
+  weight-row gather kernel (``kernels/decode_moe.py``): no
+  argsort/bincount/scatter, no per-expert segment padding. Selection is on
+  static shapes at trace time; prefill buckets (S > 1) keep the grouped
+  kernel.
 
 Compressed (merged) models keep the ORIGINAL router ``[d, N]`` and add an
 int32 ``remap`` table ``[N] -> [M]`` (the paper's matrix ``A``, stored as the
@@ -116,6 +122,25 @@ def route(cfg: ModelConfig, p: dict, x: jax.Array):
     w, idx = _topk_iterative(probs, m.top_k)
     w = w / jnp.sum(w, axis=-1, keepdims=True)  # renormalize among top-k
     return w, idx, probs
+
+
+def route_infer(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Inference-only routing: (topk_weights [.., k] fp32, topk_idx [.., k]).
+
+    Selects top-k directly on the (live-masked) router LOGITS — softmax is
+    strictly monotone, so the selection matches :func:`route` — and computes
+    the combine weights as a softmax over just the k selected logits:
+    ``exp(l_i) / Σ_topk exp(l_j)``, the same value :func:`route` reaches by
+    renormalizing the full softmax. Skips materializing the [.., N] ``probs``
+    tensor entirely; it exists only to feed :func:`balance_loss`, which
+    decode throws away every step. Training/capture keep :func:`route`."""
+    m = cfg.moe
+    logits = ein32("...d,de->...e", x.astype(F32), p["router"])
+    if "live" in p:
+        # same fail-closed pad-row mask as route() (DESIGN.md §5)
+        logits = jnp.where(p["remap"] >= p["live"], -jnp.inf, logits)
+    lw, idx = _topk_iterative(logits, m.top_k)
+    return jax.nn.softmax(lw, axis=-1), idx
 
 
 def balance_loss(cfg: ModelConfig, probs: jax.Array, idx: jax.Array) -> jax.Array:
@@ -236,16 +261,42 @@ def _moe_ragged(cfg: ModelConfig, p: dict, xf: jax.Array, w, idx):
 
 
 # ---------------------------------------------------------------------------
+# gather dispatch — decode-mode (tiny T) kernel path
+# ---------------------------------------------------------------------------
+
+def _moe_gather(cfg: ModelConfig, p: dict, xf: jax.Array, w, idx):
+    """xf: [T, d]; w/idx: [T, k] (idx in REAL expert space). Dropless.
+
+    Per-token weight-row gather + fused SwiGLU: no argsort/bincount/scatter,
+    no per-expert segment padding — the decode-mode specialization
+    (``kernels/decode_moe.py``). Per-row arithmetic and the fp32 combine
+    match :func:`_moe_ragged` exactly."""
+    from repro.kernels import ops as kops
+    y = kops.gather_swiglu(xf, p["wg"], p["wu"], p["wd"], idx,
+                           w.astype(F32))
+    return y.astype(xf.dtype)
+
+
+# ---------------------------------------------------------------------------
 # public entry
 # ---------------------------------------------------------------------------
 
 def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
-              capture: bool = False) -> MoEOutput:
-    """x: [B, S, d] (or [B, 1, d] for decode)."""
+              capture: bool = False, need_aux: bool = True) -> MoEOutput:
+    """x: [B, S, d] (or [B, 1, d] for decode).
+
+    ``need_aux=False`` (serving prefill/decode): routing goes through
+    :func:`route_infer` — no [.., N] probs materialization, no
+    :func:`balance_loss` — and ``aux_loss`` is a constant zero. Training and
+    calibration capture keep the full :func:`route` path."""
     m = cfg.moe
     B, S, d = x.shape
-    w, idx, probs = route(cfg, p, x)
-    aux = balance_loss(cfg, probs, idx)
+    if capture or need_aux:
+        w, idx, probs = route(cfg, p, x)
+        aux = balance_loss(cfg, probs, idx)
+    else:
+        w, idx = route_infer(cfg, p, x)
+        aux = jnp.zeros((), F32)
     ridx = jnp.take(p["remap"], idx)                 # original -> real experts
 
     T = B * S
@@ -253,7 +304,18 @@ def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
     wf = w.reshape(T, m.top_k)
     rf = ridx.reshape(T, m.top_k)
 
-    if m.dispatch == "ragged":
+    if m.dispatch == "gather":
+        # trace-time selection (shapes are static, so each jit
+        # specialization picks exactly one path): gather only for
+        # decode-SHAPED calls — one token per sequence (S == 1) and at most
+        # ``gather_max_tokens`` of them. Prefill buckets (S > 1) always
+        # keep the sort-based grouped kernel, whatever their token count
+        # (DESIGN.md §7).
+        if S == 1 and T <= m.gather_max_tokens:
+            y = _moe_gather(cfg, p, xf, wf, rf)
+        else:
+            y = _moe_ragged(cfg, p, xf, wf, rf)
+    elif m.dispatch == "ragged":
         y = _moe_ragged(cfg, p, xf, wf, rf)
     else:
         G = min(m.group_size, T)

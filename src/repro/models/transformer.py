@@ -115,7 +115,9 @@ def stack_decode(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v, pos,
         h = h + a
         hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
         if cfg.moe is not None:
-            out = M.moe_apply(cfg, layer_p["moe"], hn)
+            # decode throws the aux loss away every step — skip it and the
+            # full-probs softmax it retains (moe_apply need_aux=False)
+            out = M.moe_apply(cfg, layer_p["moe"], hn, need_aux=False)
             h = h + out.y
         else:
             h = h + L.mlp_apply(layer_p["mlp"], hn)
@@ -141,7 +143,7 @@ def stack_decode_slots(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v,
         h = h + a
         hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
         if cfg.moe is not None:
-            out = M.moe_apply(cfg, layer_p["moe"], hn)
+            out = M.moe_apply(cfg, layer_p["moe"], hn, need_aux=False)
             h = h + out.y
         else:
             h = h + L.mlp_apply(layer_p["mlp"], hn)
@@ -161,7 +163,10 @@ def stack_prefill(cfg: ModelConfig, stacked: dict, x, *, inv_freq):
         h = h + a
         hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
         if cfg.moe is not None:
-            h = h + constrain(M.moe_apply(cfg, layer_p["moe"], hn).y,
+            # stack_prefill only feeds serving caches (training runs
+            # stack_apply), so the aux loss is never consumed here
+            h = h + constrain(M.moe_apply(cfg, layer_p["moe"], hn,
+                                          need_aux=False).y,
                               "DP", "M", None)
         else:
             h = h + constrain(L.mlp_apply(layer_p["mlp"], hn),

@@ -5,26 +5,31 @@ request-level scheduling, the deployment path the paper's serving claim is
 about: merged checkpoints route fewer, fuller expert groups through the
 grouped kernel at identical arithmetic.
 
-Design:
+Design (decode dataflow details in DESIGN.md §7):
 
 * **Slots.** The engine owns a persistent slotted KV cache
   (``[L, n_slots, s_max, nkv, hd]`` + per-slot ``pos``). A request occupies
   one slot from admission to completion; eviction just marks the slot free —
   stale rows are masked by the per-slot causal mask and overwritten in place
   by the next occupant (no copying, no reallocation).
-* **Admission.** Pending requests are FIFO by arrival time. At the top of
-  every engine step, each free slot admits the next due request: the prompt
-  is right-padded to a small set of bucket lengths (bounding jit
-  specializations), prefilled as a batch of one, and its KV inserted into the
-  slot. The prefill logits yield the request's first generated token.
-* **Decode.** One jitted step advances ALL occupied slots together at their
-  own positions. Idle slots ride along (static shapes) without advancing
-  ``pos``. With ``dispatch='ragged'`` the MoE layers sort the slot tokens by
-  expert and run the grouped SwiGLU kernel — the path where MergeMoE's
-  smaller expert count means fewer, fuller groups.
+* **Admission.** Pending requests sit in a heap ordered by
+  ``(arrival_time, uid)`` (FIFO by arrival, O(log n) per op). At the top of
+  every engine step each free slot claims the next due request, and all
+  requests admitted together that share a prompt bucket are prefilled as ONE
+  batch (padded to the next power of two to bound jit specializations) and
+  inserted with one scatter — admission cost no longer scales with the burst
+  size.
+* **Decode.** The steady-state hot loop is DEVICE-RESIDENT: one jitted call
+  runs ``decode_block`` (K) scanned decode steps with on-device sampling and
+  per-slot stop flags; finished slots freeze in place and ride along. The
+  host reads back one ``[K, B]`` token block per call instead of one token
+  per step — host dispatches drop from ~2/token to ~2/(K·B) tokens.
+  ``decode_block=1`` keeps the original step-at-a-time loop (the parity
+  reference). With ``dispatch='gather'`` the decode-sized MoE layers skip
+  the sort-based grouped path for the per-token gather kernel.
 * **Stop conditions.** Per-request ``max_new_tokens`` and optional
-  ``eos_token``; finished requests free their slot for the next admission at
-  the following step.
+  ``eos_token``, evaluated on device inside the fused block; freed slots
+  admit at the next block boundary.
 
 The clock is pluggable: ``clock='steps'`` interprets ``arrival_time`` in
 decode-step units (deterministic — used by tests and the CPU benchmark),
@@ -32,10 +37,11 @@ decode-step units (deterministic — used by tests and the CPU benchmark),
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import heapq
+import itertools
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,10 +83,17 @@ class EngineConfig:
     prefill_buckets: Sequence[int] = (16, 32, 64)
     temperature: float = 0.0
     seed: int = 0
-    # MoE dispatch for the serving path; "ragged" routes decode through the
-    # grouped kernel. None keeps whatever the ModelConfig says.
-    dispatch: Optional[str] = "ragged"
+    # MoE dispatch for the serving path; "gather" = ragged with the decode
+    # token counts specialized to the per-token gather kernel, "ragged"
+    # forces the grouped kernel everywhere. None keeps the ModelConfig's.
+    dispatch: Optional[str] = "gather"
     clock: str = "steps"                # "steps" | "wall"
+    # fused decode block size K: decode steps per jitted call. 1 = the
+    # step-at-a-time host loop (parity reference).
+    decode_block: int = 8
+    # prefill all due same-bucket requests as one batch (False = the
+    # batch-of-1 admission loop, kept as the parity reference)
+    batch_admission: bool = True
 
 
 class Engine:
@@ -92,34 +105,54 @@ class Engine:
             configs.get(ec.arch).reduced() if ec.reduced
             else configs.get(ec.arch))
         if cfg.moe is not None and ec.dispatch is not None:
-            cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
-                                                      dispatch=ec.dispatch))
+            moe = dataclasses.replace(cfg.moe, dispatch=ec.dispatch)
+            if ec.dispatch == "gather":
+                # the gather ceiling must cover the decode token count
+                # (T = n_slots) or big-slot engines would silently fall back
+                # to ragged on every decode step
+                moe = dataclasses.replace(
+                    moe, gather_max_tokens=max(moe.gather_max_tokens,
+                                               ec.n_slots))
+            cfg = cfg.replace(moe=moe)
         if cfg.family not in ("dense", "moe"):
             raise NotImplementedError(
                 f"continuous batching serves token-only families "
                 f"(dense/moe), not {cfg.family}")
+        if ec.decode_block < 1:
+            raise ValueError("decode_block must be >= 1")
         self.cfg = cfg
         mesh = make_host_mesh()
         set_activation_mesh(mesh)
         self.params = params if params is not None else MD.init(
             cfg, jax.random.PRNGKey(ec.seed))
 
-        self._prefill = jax.jit(ST.make_slot_prefill(cfg))
-        self._insert = jax.jit(ST.make_slot_insert(cfg))
+        self._admit_step = jax.jit(ST.make_slot_admit(cfg))
         self._decode = jax.jit(ST.make_slot_decode(cfg))
+        self._decode_multi = jax.jit(ST.make_slot_decode_multi(
+            cfg, ec.decode_block, ec.temperature))
         self.cache = MD.init_slot_cache(cfg, ec.n_slots, ec.s_max)
 
         self._buckets = tuple(sorted(set(int(b) for b in ec.prefill_buckets)))
         self._slot_req: List[Optional[Request]] = [None] * ec.n_slots
         self._last_tok = np.zeros((ec.n_slots,), np.int32)
         self._active = np.zeros((ec.n_slots,), bool)
-        # kept sorted by (arrival_time, uid) so admission is FIFO by arrival
-        # regardless of submission order
-        self._pending: List[Request] = []
+        # heap of (arrival_time, uid, seq, Request): admission is FIFO by
+        # arrival regardless of submission order, O(log n) per push/pop. The
+        # monotonic ``seq`` breaks (arrival, uid) ties (submit() accepts
+        # caller uids and never rejects reuse) so heapq never falls through
+        # to comparing Request objects.
+        self._pending: List[Tuple[float, int, int, Request]] = []
+        self._seq = itertools.count()
         self._next_uid = 0
         self._step_count = 0
         self._t0: Optional[float] = None
         self._rng = np.random.default_rng(ec.seed)
+        self._key = jax.random.PRNGKey(ec.seed + 1)   # fused-loop sampling
+        # host<->device crossing telemetry: device_calls counts jitted
+        # dispatches, host_syncs counts device->host readbacks, tokens_out
+        # counts generated tokens (dispatches-per-token = their ratio)
+        self.counters: Dict[str, int] = {
+            "device_calls": 0, "host_syncs": 0, "tokens_out": 0}
         # plan/report extras when booted via from_checkpoint
         self.artifact: Optional[dict] = None
 
@@ -132,7 +165,7 @@ class Engine:
 
         The artifact's own ModelConfig (including per-layer merged-expert
         counts) and parameters are used verbatim; ``ec`` only controls
-        serving knobs (slots, buckets, dispatch — ragged by default). The
+        serving knobs (slots, buckets, dispatch — gather by default). The
         executed plan and compression report are exposed as
         ``engine.artifact``."""
         from repro.ckpt import checkpoint as CKPT
@@ -160,6 +193,13 @@ class Engine:
         """Decode steps taken so far (the 'steps' clock's current time)."""
         return self._step_count
 
+    @property
+    def host_dispatches_per_token(self) -> float:
+        """Host<->device crossings (jit dispatches + readbacks) per
+        generated token so far."""
+        c = self.counters
+        return (c["device_calls"] + c["host_syncs"]) / max(c["tokens_out"], 1)
+
     def submit(self, prompt, max_new_tokens: int, eos_token: int | None = None,
                arrival_time: float = 0.0, uid: int | None = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
@@ -176,13 +216,15 @@ class Engine:
         self._next_uid = max(self._next_uid, uid) + 1
         req = Request(uid=uid, prompt=prompt, max_new_tokens=max_new_tokens,
                       eos_token=eos_token, arrival_time=arrival_time)
-        bisect.insort(self._pending, req,
-                      key=lambda r: (r.arrival_time, r.uid))
+        heapq.heappush(self._pending,
+                       (req.arrival_time, req.uid, next(self._seq), req))
         return req
 
     def step(self, now: float | None = None) -> List[Request]:
-        """Admit due requests, run one decode step, evict finished.
-        Returns the requests that finished during this step."""
+        """Admit due requests, run ONE decode step, evict finished.
+        Returns the requests that finished during this step. This is the
+        step-at-a-time reference loop; :meth:`step_block` is the fused
+        production path (``run`` picks by ``decode_block``)."""
         now = self._now() if now is None else now
         finished = self._admit(now)
         if self._active.any():
@@ -190,11 +232,14 @@ class Engine:
             act = jnp.asarray(self._active)
             logits, greedy, self.cache = self._decode(
                 self.params, self.cache, toks, act)
+            self.counters["device_calls"] += 1
             next_toks = self._sample(logits, greedy)
+            self.counters["host_syncs"] += 1
             for slot in np.flatnonzero(self._active):
                 req = self._slot_req[slot]
                 tok = int(next_toks[slot])
                 req.out_tokens.append(tok)
+                self.counters["tokens_out"] += 1
                 self._last_tok[slot] = tok
                 if self._is_done(req, tok):
                     self._evict(slot, now)
@@ -202,37 +247,119 @@ class Engine:
         self._step_count += 1
         return finished
 
+    def step_block(self, now: float | None = None) -> List[Request]:
+        """Admit due requests, then run ``decode_block`` fused decode steps
+        in ONE device call (DESIGN.md §7). Returns finished requests; their
+        ``t_finished`` is the block-start clock plus the inner step they
+        stopped at, so step accounting matches the per-step loop."""
+        now = self._now() if now is None else now
+        finished = self._admit(now)
+        K = self.ec.decode_block
+        if not self._active.any():
+            # nothing to decode: advance one step so arrival admission keeps
+            # fine-grained timing while the engine drains the future queue
+            self._step_count += 1
+            return finished
+        n = self.ec.n_slots
+        rem = np.zeros((n,), np.int32)
+        eos = np.full((n,), -1, np.int32)
+        slots = np.flatnonzero(self._active)
+        for s in slots:
+            req = self._slot_req[s]
+            rem[s] = req.max_new_tokens - len(req.out_tokens)
+            eos[s] = -1 if req.eos_token is None else req.eos_token
+        self._key, sub = jax.random.split(self._key)
+        block, _, self.cache = self._decode_multi(
+            self.params, self.cache, jnp.asarray(self._last_tok),
+            jnp.asarray(self._active), jnp.asarray(rem), jnp.asarray(eos),
+            sub)
+        self.counters["device_calls"] += 1
+        block_np = np.asarray(block)        # ONE readback: [K, B, (tok, emit)]
+        self.counters["host_syncs"] += 1
+        for s in slots:
+            req = self._slot_req[s]
+            for j in range(K):
+                if not block_np[j, s, 1]:
+                    break
+                tok = int(block_np[j, s, 0])
+                req.out_tokens.append(tok)
+                self.counters["tokens_out"] += 1
+                self._last_tok[s] = tok
+                if self._is_done(req, tok):
+                    # steps clock: finish = block start + inner step. Wall
+                    # clock has no per-inner-step timestamps (the block is
+                    # one device call) — stamp the post-block wall time.
+                    self._evict(s, now + j if self.ec.clock == "steps"
+                                else self._now())
+                    finished.append(req)
+                    break
+        self._step_count += K
+        return finished
+
     def run(self, requests: Sequence[Request] | None = None) -> List[Request]:
         """Drive until every pending/submitted request completes."""
         if requests:
             for r in requests:
-                bisect.insort(self._pending, r,
-                              key=lambda q: (q.arrival_time, q.uid))
+                heapq.heappush(self._pending,
+                               (r.arrival_time, r.uid, next(self._seq), r))
+        advance = self.step_block if self.ec.decode_block > 1 else self.step
         done: List[Request] = []
         while not self.idle:
-            done.extend(self.step())
+            done.extend(advance())
         return sorted(done, key=lambda r: r.uid)
 
-    def bench_decode(self, iters: int = 50) -> float:
-        """Steady-state decode throughput (tokens/sec) with every slot
-        active, bypassing admission — isolates the jitted model step (the
-        grouped-kernel path) from scheduler overhead. Does not disturb
-        engine bookkeeping: runs on a scratch copy of the cache."""
+    def bench_decode(self, iters: int = 50,
+                     k_steps: int | None = None) -> Dict[str, float]:
+        """Steady-state decode throughput with every slot active, bypassing
+        admission — isolates the jitted fused loop from scheduler overhead.
+
+        Runs ``iters`` fused ``k_steps``-step blocks (default: the engine's
+        ``decode_block``) on a scratch copy of the cache and returns
+        ``{"tok_per_s", "dispatches_per_s", "host_dispatches_per_token",
+        "k_steps"}`` — tokens/sec AND host dispatches/sec, since the fused
+        loop improves the latter even where CPU model math dominates the
+        former. The ``pos`` reset needed to keep the scratch cache in bounds
+        is fused INTO the jitted block (no host-side clamp op inside the
+        timed loop, which previously added a dispatch per iteration and
+        skewed the measurement)."""
+        K = int(self.ec.decode_block if k_steps is None else k_steps)
         n = self.ec.n_slots
+        s_max = self.ec.s_max
+        if K >= s_max // 2:
+            raise ValueError(f"k_steps={K} too large for s_max={s_max}")
+        multi = ST.make_slot_decode_multi(self.cfg, K, self.ec.temperature)
+
+        def block(params, cache, toks, act, rem, eos, key):
+            # keep pos in bounds ON DEVICE: reset to mid-cache before the
+            # scanned steps would run past the last slot row
+            pos = cache["pos"]
+            pos = jnp.where(pos + K >= s_max, s_max // 2, pos)
+            return multi(params, dict(cache, pos=pos), toks, act, rem, eos,
+                         key)
+
+        fn = jax.jit(block)
         cache = jax.tree.map(jnp.copy, self.cache)
-        cache["pos"] = jnp.full((n,), self.ec.s_max // 2, jnp.int32)
+        cache["pos"] = jnp.full((n,), s_max // 2, jnp.int32)
         toks = jnp.zeros((n,), jnp.int32)
         act = jnp.ones((n,), bool)
-        _, greedy, cache = self._decode(self.params, cache, toks, act)  # warm
-        greedy.block_until_ready()
-        cache["pos"] = jnp.full((n,), self.ec.s_max // 2, jnp.int32)
+        rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
+        eos = jnp.full((n,), -1, jnp.int32)
+        key = jax.random.PRNGKey(0)
+        out, _, cache = fn(self.params, cache, toks, act, rem, eos, key)
+        jax.block_until_ready(out)                                   # warm
         t0 = time.perf_counter()
         for _ in range(iters):
-            cache["pos"] = jnp.minimum(cache["pos"], self.ec.s_max - 1)
-            _, greedy, cache = self._decode(self.params, cache, toks, act)
-        greedy.block_until_ready()
+            out, _, cache = fn(self.params, cache, toks, act, rem, eos, key)
+        jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        return n * iters / dt
+        return {
+            "tok_per_s": n * K * iters / dt,
+            "dispatches_per_s": iters / dt,
+            # 1 jitted call + 1 readback per block — same crossings-counting
+            # definition as Engine.host_dispatches_per_token
+            "host_dispatches_per_token": 2.0 / (n * K),
+            "k_steps": K,
+        }
 
     # ------------------------------------------------------------ internals
 
@@ -272,26 +399,60 @@ class Engine:
 
     def _admit(self, now: float) -> List[Request]:
         """Fill free slots with due pending requests (prefill + insert +
-        first token). Returns requests that finish AT admission (e.g.
-        max_new_tokens == 1)."""
+        first token), batching same-bucket admissions. Returns requests that
+        finish AT admission (e.g. max_new_tokens == 1)."""
         finished: List[Request] = []
         free = [s for s in range(self.ec.n_slots) if not self._active[s]]
-        while free and self._pending \
-                and self._pending[0].arrival_time <= now:
-            req = self._pending.pop(0)
-            slot = free.pop(0)
-            bucket = self.bucket_for(req.n_prompt)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :req.n_prompt] = req.prompt
-            logits, k_new, v_new = self._prefill(
-                self.params, jnp.asarray(toks),
-                jnp.asarray([req.n_prompt], jnp.int32))
-            self.cache = self._insert(
-                self.cache, jnp.asarray(slot, jnp.int32), k_new, v_new,
-                jnp.asarray(req.n_prompt, jnp.int32))
-            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tok = int(self._sample(logits, greedy)[0])
+        claimed: List[Tuple[Request, int]] = []
+        while free and self._pending and self._pending[0][0] <= now:
+            req = heapq.heappop(self._pending)[-1]
+            claimed.append((req, free.pop(0)))
+        if not claimed:
+            return finished
+        if self.ec.batch_admission:
+            groups: Dict[int, List[Tuple[Request, int]]] = {}
+            for req, slot in claimed:
+                groups.setdefault(self.bucket_for(req.n_prompt),
+                                  []).append((req, slot))
+            for bucket in sorted(groups):
+                self._admit_group(bucket, groups[bucket], now, finished)
+        else:
+            for req, slot in claimed:
+                self._admit_group(self.bucket_for(req.n_prompt),
+                                  [(req, slot)], now, finished)
+        return finished
+
+    def _admit_group(self, bucket: int, group: List[Tuple[Request, int]],
+                     now: float, finished: List[Request]) -> None:
+        """Prefill + insert + first token for one bucket's admissions as a
+        single fused device call (``steps.make_slot_admit``).
+
+        The batch is padded to the next power of two so admission compiles
+        at most ``len(buckets) * (log2(n_slots)+1)`` specializations instead
+        of one per (bucket, group-size) pair; pad rows carry an
+        out-of-bounds slot index, which JAX scatter semantics drop, so they
+        never touch the cache."""
+        B = len(group)
+        Bp = 1
+        while Bp < B:
+            Bp *= 2
+        toks = np.zeros((Bp, bucket), np.int32)
+        lengths = np.ones((Bp,), np.int32)
+        slots = np.full((Bp,), self.ec.n_slots, np.int32)   # pads: OOB, dropped
+        for i, (req, slot) in enumerate(group):
+            toks[i, :req.n_prompt] = req.prompt
+            lengths[i] = req.n_prompt
+            slots[i] = slot
+        logits, greedy, self.cache = self._admit_step(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(lengths),
+            jnp.asarray(slots))
+        self.counters["device_calls"] += 1
+        first = self._sample(logits[:B], greedy[:B])
+        self.counters["host_syncs"] += 1
+        for i, (req, slot) in enumerate(group):
+            tok = int(first[i])
             req.out_tokens.append(tok)
+            self.counters["tokens_out"] += 1
             req.t_admitted = now
             req.t_first_token = now
             self._slot_req[slot] = req
@@ -300,7 +461,6 @@ class Engine:
             if self._is_done(req, tok):
                 self._evict(slot, now)
                 finished.append(req)
-        return finished
 
     def _evict(self, slot: int, now: float) -> None:
         req = self._slot_req[slot]

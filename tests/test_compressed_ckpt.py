@@ -162,7 +162,11 @@ def test_engine_from_checkpoint_token_parity(tmp_path, compressed):
 
     prompts = np.random.default_rng(0).integers(
         0, ncfg.vocab_size, size=(3, 12), dtype=np.int32)
-    ec = EngineConfig(arch=ARCH, n_slots=2, s_max=48, prefill_buckets=(16,))
+    # pin dispatch to the fixture's ragged config so ``eng2.cfg == ncfg``
+    # stays an exact equality (the engine default is now 'gather', whose
+    # token parity is covered by test_serving_engine)
+    ec = EngineConfig(arch=ARCH, n_slots=2, s_max=48, prefill_buckets=(16,),
+                      dispatch="ragged")
 
     def generate(eng):
         reqs = [eng.submit(p, max_new_tokens=8) for p in prompts]

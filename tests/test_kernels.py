@@ -10,6 +10,7 @@ from repro.kernels import ref
 from repro.kernels import swiglu as K_swiglu
 from repro.kernels import flash_attention as K_fa
 from repro.kernels import grouped_mlp as K_gm
+from repro.kernels import decode_moe as K_dm
 
 RNG = np.random.default_rng(42)
 
@@ -198,6 +199,99 @@ def test_grouped_swiglu_zero_groups_regression(sizes):
     yr = ref.grouped_swiglu(x, wg, wu, wd, gs)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gather (decode-mode MoE) SwiGLU
+# ---------------------------------------------------------------------------
+
+def _gather_inputs(T, d, f, E, k, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((T, d)) * 0.5, dtype)
+    wg = jnp.asarray(rng.standard_normal((E, d, f)) * 0.2, dtype)
+    wu = jnp.asarray(rng.standard_normal((E, d, f)) * 0.2, dtype)
+    wd = jnp.asarray(rng.standard_normal((E, f, d)) * 0.2, dtype)
+    idx = jnp.asarray(rng.integers(0, E, (T, k)), jnp.int32)
+    w = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((T, k)), jnp.float32), axis=-1)
+    return x, wg, wu, wd, idx, w
+
+
+@pytest.mark.parametrize("T,d,f,E,k", [
+    (4, 24, 32, 8, 2),      # decode shape: n_slots tokens
+    (1, 16, 16, 4, 1),      # single token, single expert
+    (8, 32, 48, 8, 3),      # k > 2
+    (3, 16, 32, 2, 2),      # tiny expert table
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_swiglu(T, d, f, E, k, dtype):
+    x, wg, wu, wd, idx, w = _gather_inputs(T, d, f, E, k, dtype)
+    y = K_dm.gather_swiglu(x, wg, wu, wd, idx, w, interpret=True)
+    yr = ref.gather_swiglu(x, wg, wu, wd, idx, w)
+    assert y.shape == (T, d) and y.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+def test_gather_swiglu_duplicate_expert_sums_weights():
+    """A token whose top-k selects the SAME expert twice must weight that
+    expert by the sum — exactly the post-merge remap situation where two
+    original experts collapse onto one merged row."""
+    T, d, f, E = 2, 16, 16, 4
+    x, wg, wu, wd, _, _ = _gather_inputs(T, d, f, E, 2, jnp.float32)
+    idx = jnp.asarray([[1, 1], [2, 0]], jnp.int32)
+    w = jnp.asarray([[0.3, 0.7], [0.5, 0.5]], jnp.float32)
+    y = K_dm.gather_swiglu(x, wg, wu, wd, idx, w, interpret=True)
+    one = ref.swiglu_mlp(x[:1], wg[1], wu[1], wd[1])
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(one[0]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gather_swiglu_matches_sorted_grouped_composition():
+    """gather(x, idx, w) == the ragged pipeline (sort by expert, grouped
+    kernel, weighted scatter-add) on the same routing — the moe_apply-level
+    dispatch-parity contract at kernel granularity."""
+    T, d, f, E, k = 6, 24, 32, 8, 2
+    x, wg, wu, wd, idx, w = _gather_inputs(T, d, f, E, k, jnp.float32, seed=3)
+    y = K_dm.gather_swiglu(x, wg, wu, wd, idx, w, interpret=True)
+
+    flat = np.asarray(idx).reshape(-1)
+    order = np.argsort(flat, kind="stable")
+    tok_of = order // k
+    xs = x[tok_of]
+    gs = jnp.asarray(np.bincount(flat, minlength=E), jnp.int32)
+    ys = K_gm.grouped_swiglu(xs, wg, wu, wd, gs, block_t=8, block_f=16,
+                             interpret=True)
+    wf = np.asarray(w).reshape(-1)[order]
+    out = np.zeros((T, d), np.float32)
+    np.add.at(out, tok_of, np.asarray(ys, np.float32) * wf[:, None])
+    np.testing.assert_allclose(np.asarray(y), out, atol=1e-5, rtol=1e-5)
+
+
+def test_gather_swiglu_clips_out_of_bounds_idx():
+    """Corrupted expert ids must not read out of bounds (routing fails
+    closed upstream; the kernel clips as defense-in-depth, same as the
+    oracle)."""
+    T, d, f, E, k = 2, 16, 16, 4, 2
+    x, wg, wu, wd, _, w = _gather_inputs(T, d, f, E, k, jnp.float32)
+    idx = jnp.asarray([[E + 3, 0], [1, -7]], jnp.int32)
+    y = K_dm.gather_swiglu(x, wg, wu, wd, idx, w, interpret=True)
+    yr = ref.gather_swiglu(x, wg, wu, wd, idx, w)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(T=st.sampled_from([1, 3, 8]), E=st.sampled_from([2, 8]),
+       k=st.sampled_from([1, 2, 4]), seed=st.integers(0, 100))
+def test_gather_property(T, E, k, seed):
+    x, wg, wu, wd, idx, w = _gather_inputs(T, 16, 16, E, k, jnp.float32,
+                                           seed=seed)
+    y = K_dm.gather_swiglu(x, wg, wu, wd, idx, w, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.gather_swiglu(x, wg, wu, wd, idx, w)),
+        atol=1e-4, rtol=1e-4)
 
 
 def test_grouped_matches_single_expert_swiglu():

@@ -136,6 +136,137 @@ def test_route_fail_closed_drops_corrupted_remap_targets(seed, bad):
     assert np.isfinite(np.asarray(logits)).all()
 
 
+def _apply_with(cfg, p, x, dispatch, **kw):
+    c = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch=dispatch))
+    return MoE.moe_apply(c, p, x, **kw).y
+
+
+def test_gather_ragged_dense_parity_uniform():
+    """Decode-sized token counts: gather == ragged bitwise (identical
+    per-row arithmetic + fp32 combine), both == dense within bf16 tolerance
+    (dense combines through the capacity einsum)."""
+    cfg = _cfg(E=8, k=2, cf=8.0)     # capacity headroom: dense drops nothing
+    p = MoE.moe_init(cfg, jax.random.PRNGKey(0))
+    # decode shape: [n_slots, 1, d] — one token per slot sequence
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model),
+                          jnp.bfloat16)
+    assert 4 <= cfg.moe.gather_max_tokens
+    y_g = _apply_with(cfg, p, x, "gather", need_aux=False)
+    y_r = _apply_with(cfg, p, x, "ragged", need_aux=False)
+    y_d = _apply_with(cfg, p, x, "dense", need_aux=False)
+    np.testing.assert_array_equal(np.asarray(y_g, np.float32),
+                                  np.asarray(y_r, np.float32))
+    # dense combines through bf16 dispatch/combine einsums -> looser tol
+    np.testing.assert_allclose(np.asarray(y_g, np.float32),
+                               np.asarray(y_d, np.float32),
+                               atol=0.1, rtol=0.05)
+
+
+def test_gather_ragged_dense_parity_hetero_live_masked():
+    """Heterogeneous compressed layer: padded tables (live < n_real), valid
+    remap onto the live rows — all three dispatches agree and never touch
+    the zero pad rows."""
+    cfg = _cfg(E=8, k=2, cf=8.0)
+    key = jax.random.PRNGKey(3)
+    p = MoE.moe_init(cfg, key, n_real=4)
+    live = 3
+    p = dict(p,
+             remap=jax.random.randint(key, (8,), 0, live).astype(jnp.int32),
+             live=jnp.asarray(live, jnp.int32))
+    # poison the pad row: if any dispatch touched it, outputs would diverge
+    p["wd"] = p["wd"].at[live:].set(1e4)
+    x = jax.random.normal(key, (6, 1, cfg.d_model), jnp.bfloat16)
+    y_g = _apply_with(cfg, p, x, "gather", need_aux=False)
+    y_r = _apply_with(cfg, p, x, "ragged", need_aux=False)
+    y_d = _apply_with(cfg, p, x, "dense", need_aux=False)
+    assert np.isfinite(np.asarray(y_g, np.float32)).all()
+    assert np.abs(np.asarray(y_g, np.float32)).max() < 1e3
+    np.testing.assert_array_equal(np.asarray(y_g, np.float32),
+                                  np.asarray(y_r, np.float32))
+    # dense combines through bf16 dispatch/combine einsums -> looser tol
+    np.testing.assert_allclose(np.asarray(y_g, np.float32),
+                               np.asarray(y_d, np.float32),
+                               atol=0.1, rtol=0.05)
+
+
+def test_gather_fail_closed_corrupted_remap():
+    """The corrupted-remap fail-closed contract (DESIGN.md §5) through the
+    gather path: a remap entry pointing at a pad row is masked in routing,
+    so the gather kernel never loads that row and the output stays finite
+    even with the router biased hard toward the corrupted expert."""
+    cfg = _cfg(E=8, k=2)
+    key = jax.random.PRNGKey(5)
+    p = MoE.moe_init(cfg, key, n_real=4)
+    live, bad = 3, 6
+    remap = np.array(jax.random.randint(key, (8,), 0, live), np.int32)
+    remap[bad] = live                               # corrupted: pad row
+    router = np.zeros((cfg.d_model, 8), np.float32)
+    router[:, bad] = 10.0
+    p = dict(p, remap=jnp.asarray(remap),
+             live=jnp.asarray(live, jnp.int32), router=jnp.asarray(router))
+    p["wd"] = p["wd"].at[live:].set(1e4)            # poisoned pad row
+    x = jax.random.normal(key, (6, 1, cfg.d_model), jnp.bfloat16)
+    for need_aux in (False, True):
+        y = _apply_with(cfg, p, x, "gather", need_aux=need_aux)
+        assert np.isfinite(np.asarray(y, np.float32)).all()
+        assert np.abs(np.asarray(y, np.float32)).max() < 1e3
+
+
+def test_gather_falls_back_to_ragged_outside_decode_shape(monkeypatch):
+    """dispatch='gather' is a trace-time switch on static shapes: only
+    decode-shaped calls (S == 1, T <= gather_max_tokens) take the gather
+    kernel; prefill-shaped calls (S > 1) and over-ceiling decode batches
+    run the sort-based grouped path and never invoke it."""
+    import repro.kernels.ops as kops
+    calls = []
+    real = kops.gather_swiglu
+    monkeypatch.setattr(kops, "gather_swiglu",
+                        lambda *a, **k: (calls.append(a[0].shape), real(*a, **k))[1])
+    cfg = _cfg(E=8, k=2)
+    p = MoE.moe_init(cfg, jax.random.PRNGKey(0))
+    decode = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model),
+                               jnp.bfloat16)
+    prefill = jax.random.normal(jax.random.PRNGKey(1),
+                                (1, cfg.moe.gather_max_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    wide = jax.random.normal(jax.random.PRNGKey(1),
+                             (cfg.moe.gather_max_tokens + 1, 1, cfg.d_model),
+                             jnp.bfloat16)
+    _apply_with(cfg, p, decode, "gather", need_aux=False)
+    assert calls == [(4, cfg.d_model)]
+    for x in (prefill, wide):                       # gather never re-invoked
+        y = _apply_with(cfg, p, x, "gather", need_aux=False)
+        assert calls == [(4, cfg.d_model)]
+        np.testing.assert_array_equal(
+            np.asarray(y, np.float32),
+            np.asarray(_apply_with(cfg, p, x, "ragged", need_aux=False),
+                       np.float32))
+
+
+def test_need_aux_false_matches_training_routing():
+    """route_infer (top-k on logits + subset softmax) must reproduce
+    route()'s renormalized weights and selection; aux comes back as a
+    constant zero."""
+    cfg = _cfg(E=8, k=2)
+    p = MoE.moe_init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 5, cfg.d_model),
+                          jnp.bfloat16)
+    w_t, i_t, probs = MoE.route(cfg, p, x)
+    w_i, i_i = MoE.route_infer(cfg, p, x)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_i))
+    np.testing.assert_allclose(np.asarray(w_t), np.asarray(w_i),
+                               atol=1e-6, rtol=1e-6)
+    out_t = MoE.moe_apply(cfg.replace(moe=dataclasses.replace(
+        cfg.moe, dispatch="ragged")), p, x)
+    out_i = MoE.moe_apply(cfg.replace(moe=dataclasses.replace(
+        cfg.moe, dispatch="ragged")), p, x, need_aux=False)
+    assert float(out_t.aux_loss) > 0.0
+    assert float(out_i.aux_loss) == 0.0
+    np.testing.assert_allclose(np.asarray(out_t.y, np.float32),
+                               np.asarray(out_i.y, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
 def test_compressed_psum_multidevice():
     """int8-over-the-wire psum inside shard_map on 8 simulated devices."""
     script = textwrap.dedent("""
