@@ -18,6 +18,24 @@ groups through the grouped/gather kernels; on CPU (this container) the jnp
 oracles stand in at identical shapes, so the trustworthy CPU signals are the
 host-dispatch counts and the fused-loop overhead reduction.
 
+**Int8 rows (DESIGN.md §8).** The same trace additionally runs with int8
+expert tables — the uncompressed model quantized in place ("full-int8") and
+the M = N/2 merge executed with ``weight_dtype='int8'`` — and every row
+records the MODELED decode HBM traffic
+(``launch.hlo_analysis.decode_traffic_model``) at both the served smoke
+config and the full-scale architecture. Quality rides in
+``int8.top1_match_*``: per-position greedy top-1 agreement with the bf16
+weights on the bf16 trace's contexts, gated against ``--int8-tolerance``.
+
+The GATED traffic metric is the modeled **expert stream** per token — the
+"k full expert SwiGLU tables streamed from HBM per token" term that is
+this change's target and decode's dominant cost at scale: both int8 rows
+must sit >= ``EXPERT_STREAM_GATE`` (1.7x) below the bf16 M = N/2 row at
+the full-scale arch. TOTAL modeled HBM/token is recorded alongside
+(``hbm_reduction_vs_bf16_half``): int8 cannot move the bf16 attention/KV/
+head floors, so totals drop ~1.55x (full) / ~1.68x (M = N/2) — quote the
+expert-stream ratio only for the expert stream.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --requests 16
 """
 from __future__ import annotations
@@ -35,10 +53,21 @@ import numpy as np
 
 from repro import configs
 from repro.core import compress as CMP
+from repro.core import plan as PLAN
+from repro.core import quant as Q
+from repro.launch.hlo_analysis import decode_traffic_model
 from repro.models import model as MD
 from repro.serving import Engine, EngineConfig, poisson_trace
 
 OUT_PATH = Path(__file__).resolve().parent / "BENCH_serve.json"
+
+# cache depth for the full-scale modeled-traffic rows (mid-stream decode)
+FULL_SCALE_POS = 512
+
+# both int8 rows must cut the full-scale modeled EXPERT STREAM at least
+# this far below the bf16 M=N/2 row (see module docstring for why the
+# expert stream, not the total, is the gated term)
+EXPERT_STREAM_GATE = 1.7
 
 
 def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
@@ -87,10 +116,14 @@ def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
     # parity-isolation runs only need tokens, not a steady-state timing pass
     steady = (eng.bench_decode(iters=bench_iters) if run_bench
               else {"tok_per_s": 0.0, "dispatches_per_s": 0.0,
-                    "host_dispatches_per_token": 0.0})
+                    "host_dispatches_per_token": 0.0,
+                    "hbm_bytes_per_token": 0.0,
+                    "moe_expert_bytes_per_token": 0.0,
+                    "roofline_tok_per_s": 0.0, "roofline_fraction": 0.0})
     rec = {
         "label": label,
         "experts": (cfg.moe_merged or cfg.moe.n_experts) if cfg.moe else 0,
+        "weight_dtype": eng.expert_weight_dtypes()[1],
         "dispatch": dispatch,
         "decode_block": decode_block,
         "batch_admission": batch_admission,
@@ -104,6 +137,12 @@ def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
         "steady_dispatches_per_s": round(steady["dispatches_per_s"], 1),
         "steady_host_dispatches_per_token": round(
             steady["host_dispatches_per_token"], 4),
+        # modeled decode HBM traffic of the SERVED (smoke) config
+        "hbm_bytes_per_token": round(steady["hbm_bytes_per_token"], 1),
+        "moe_expert_bytes_per_token": round(
+            steady["moe_expert_bytes_per_token"], 1),
+        "roofline_tok_per_s": round(steady["roofline_tok_per_s"], 1),
+        "roofline_fraction": steady["roofline_fraction"],
         "mean_latency_steps": round(float(np.mean(lat)), 2),
         "p50_latency_steps": round(float(np.percentile(lat, 50)), 2),
         "p95_latency_steps": round(float(np.percentile(lat, 95)), 2),
@@ -113,9 +152,81 @@ def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
           f"{rec['host_dispatches_per_token']:.3f} disp/tok  "
           f"(p95 latency {rec['p95_latency_steps']} steps)")
     # tokens in submission order (uids are per-engine; position is the
-    # cross-engine-stable key, and repeats are deterministic replicas)
+    # cross-engine-stable key, and repeats are deterministic replicas).
+    # prompts ride along so quality metrics replay the EXACT contexts this
+    # trace served, with no parallel regeneration to drift out of sync.
     tokens = [list(r.out_tokens) for r in sorted(done, key=lambda r: r.uid)]
-    return rec, tokens
+    return rec, tokens, prompts
+
+
+def top1_match(cfg_a, params_a, cfg_b, params_b, prompts, token_lists) -> float:
+    """Per-position greedy top-1 agreement between two parameterizations on
+    IDENTICAL contexts: the reference trace's sequences are teacher-forced
+    through both models and the argmax compared position by position.
+
+    Teacher forcing is the right quality metric here: free-running decode
+    compounds — one near-tie flip early in a request makes every later
+    token diverge — so a trace-vs-trace comparison measures divergence
+    POSITION, not per-token quality. The engines' bitwise contracts stay
+    free-running (the ``parity`` section); quality across the quantization
+    boundary is this per-position tolerance (DESIGN.md §8)."""
+    import dataclasses
+    import jax.numpy as jnp
+
+    def pin_ragged(c):
+        return c.replace(moe=dataclasses.replace(c.moe, dispatch="ragged")) \
+            if c.moe is not None else c
+
+    ca, cb = pin_ragged(cfg_a), pin_ragged(cfg_b)
+    agree = total = 0
+    for p, t in zip(prompts, token_lists):
+        if not t:
+            continue
+        seq = jnp.asarray(np.concatenate(
+            [np.asarray(p, np.int32), np.asarray(t[:-1], np.int32)])[None])
+        pred = []
+        for c, prm in ((ca, params_a), (cb, params_b)):
+            logits, _, _ = MD.forward(c, prm, {"tokens": seq})
+            pred.append(np.argmax(np.asarray(logits[0], np.float32), -1))
+        start = len(p) - 1
+        agree += int((pred[0][start:start + len(t)]
+                      == pred[1][start:start + len(t)]).sum())
+        total += len(t)
+    return agree / max(total, 1)
+
+
+def full_scale_traffic(arch: str, n_slots: int) -> dict:
+    """Modeled decode HBM bytes/token of the four serving variants at the
+    FULL-SCALE architecture (the smoke engine serves the reduced config; the
+    bandwidth claim is about the real one). Same model for every row:
+    ``hlo_analysis.decode_traffic_model`` at ``FULL_SCALE_POS``."""
+    cfg = configs.get(arch)
+    N = cfg.moe.n_experts
+    half = cfg.compressed_per_layer((N // 2,) * cfg.n_layers, 0)
+    rows = {
+        "bf16_full": decode_traffic_model(cfg, n_slots=n_slots,
+                                          pos=FULL_SCALE_POS),
+        "bf16_half": decode_traffic_model(half, n_slots=n_slots,
+                                          pos=FULL_SCALE_POS),
+        "int8_full": decode_traffic_model(cfg, n_slots=n_slots,
+                                          pos=FULL_SCALE_POS,
+                                          weight_dtype="int8"),
+        "int8_half": decode_traffic_model(half, n_slots=n_slots,
+                                          pos=FULL_SCALE_POS,
+                                          weight_dtype="int8"),
+    }
+    out = {k: {"hbm_bytes_per_token": round(v["bytes_per_token"]),
+               "moe_expert_bytes_per_token":
+                   round(v["moe_expert_bytes_per_token"])}
+           for k, v in rows.items()}
+    base = rows["bf16_half"]
+    for k in ("int8_full", "int8_half"):
+        out[k]["expert_stream_reduction_vs_bf16_half"] = round(
+            base["moe_expert_bytes_per_token"]
+            / rows[k]["moe_expert_bytes_per_token"], 3)
+        out[k]["hbm_reduction_vs_bf16_half"] = round(
+            base["bytes_per_token"] / rows[k]["bytes_per_token"], 3)
+    return out
 
 
 def main():
@@ -132,6 +243,9 @@ def main():
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--bench-iters", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--int8-tolerance", type=float, default=0.85,
+                    help="minimum top-1 greedy token match of the int8 rows "
+                         "vs their bf16 counterparts on the trace")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -144,6 +258,15 @@ def main():
     ncfg, nparams, info = CMP.compress_model(
         cfg, params, method="mergemoe", merged_experts=M, split=0,
         batches=calib)
+    # int8 variants: the uncompressed model quantized in place, and the SAME
+    # merge executed through the plan path with weight_dtype='int8' (the
+    # solves are deterministic, so the merged tables match the bf16 row
+    # before quantization)
+    params_q = Q.quantize_model_experts(params)
+    plan_q = PLAN.uniform(cfg, method="mergemoe", merged_experts=M, split=0,
+                          weight_dtype="int8")
+    qcfg, qparams, qinfo = CMP.compress_with_plan(
+        cfg, params, plan_q, batches=calib, calib_policy="head")
 
     rng = np.random.default_rng(args.seed + 1)
     lens = rng.choice([8, 16, 24, 32], size=args.requests)
@@ -162,31 +285,71 @@ def main():
           f"{args.rate}/step, {args.n_slots} slots, K={K} ==")
     rows, toks = {}, {}
     for tag, c, p in (("full", cfg, params), ("compressed", ncfg, nparams)):
-        rb, tb = run_trace(c, p, label=f"{tag}/before(K1,ragged)",
+        rb, tb, _ = run_trace(c, p, label=f"{tag}/before(K1,ragged)",
                            **before, **common)
-        ra, ta = run_trace(c, p, label=f"{tag}/after(K{K},gather)",
+        ra, ta, served_prompts = run_trace(c, p, label=f"{tag}/after(K{K},gather)",
                            **after, **common)
         # gather==ragged isolation at the same fused K, and batched==serial
         # admission isolation at the same dispatch
-        rr, tr = run_trace(c, p, label=f"{tag}/after(K{K},ragged)",
+        rr, tr, _ = run_trace(c, p, label=f"{tag}/after(K{K},ragged)",
                            **dict(after, dispatch="ragged"),
                            **dict(common, repeats=1, run_bench=False))
-        rs, ts = run_trace(c, p, label=f"{tag}/after(serial-admit)",
+        rs, ts, _ = run_trace(c, p, label=f"{tag}/after(serial-admit)",
                            **dict(after, batch_admission=False),
                            **dict(common, repeats=1, run_bench=False))
         rows[tag] = {"before": rb, "after": ra}
         toks[tag] = {"before": tb, "after": ta, "ragged": tr, "serial": ts}
 
+    # int8 rows: the fused/after engine over the identical trace, expert
+    # tables stored int8 (dequant fused into the kernels, DESIGN.md §8)
+    for tag, c, p in (("full-int8", cfg, params_q),
+                      ("compressed-int8", qcfg, qparams)):
+        ri, ti, _ = run_trace(c, p, label=f"{tag}/after(K{K},gather)",
+                           **after, **common)
+        rows[tag] = {"after": ri}
+        toks[tag] = {"after": ti}
+
+    bf16_tags = ("full", "compressed")
     parity = {
         "fused_vs_step_bitwise": all(
-            toks[t]["before"] == toks[t]["after"] for t in toks),
+            toks[t]["before"] == toks[t]["after"] for t in bf16_tags),
         "gather_vs_ragged_bitwise": all(
-            toks[t]["after"] == toks[t]["ragged"] for t in toks),
+            toks[t]["after"] == toks[t]["ragged"] for t in bf16_tags),
         "batched_vs_serial_admission_bitwise": all(
-            toks[t]["after"] == toks[t]["serial"] for t in toks),
+            toks[t]["after"] == toks[t]["serial"] for t in bf16_tags),
     }
     fb, fa = rows["full"]["before"], rows["full"]["after"]
     cb, ca = rows["compressed"]["before"], rows["compressed"]["after"]
+    qf, qc = rows["full-int8"]["after"], rows["compressed-int8"]["after"]
+    fs = full_scale_traffic(args.arch, args.n_slots)
+    int8 = {
+        "full": qf,
+        "compressed": qc,
+        # quality at equal tolerance: per-position greedy top-1 agreement
+        # with the bf16 weights, teacher-forced on the bf16 rows' trace —
+        # prompts come FROM that trace (run_trace returns the prompts it
+        # served), never regenerated in parallel
+        "top1_match_full": round(top1_match(
+            cfg, params_q, cfg, params,
+            served_prompts, toks["full"]["after"]), 4),
+        "top1_match_compressed": round(top1_match(
+            qcfg, qparams, ncfg, nparams,
+            served_prompts, toks["compressed"]["after"]), 4),
+        "tolerance": args.int8_tolerance,
+        # smoke-config modeled-traffic reduction (expert stream)
+        "expert_stream_reduction_vs_bf16_half_smoke": round(
+            ca["moe_expert_bytes_per_token"]
+            / max(qc["moe_expert_bytes_per_token"], 1e-9), 3),
+        # full-scale modeled traffic — the deployment claim
+        "modeled_full_scale": fs,
+    }
+    int8["parity_ok"] = bool(
+        int8["top1_match_full"] >= args.int8_tolerance
+        and int8["top1_match_compressed"] >= args.int8_tolerance)
+    int8["expert_stream_gate"] = EXPERT_STREAM_GATE
+    int8["expert_stream_ok"] = bool(all(
+        fs[k]["expert_stream_reduction_vs_bf16_half"] >= EXPERT_STREAM_GATE
+        for k in ("int8_full", "int8_half")))
     summary = {
         "arch": args.arch,
         "n_slots": args.n_slots,
@@ -195,8 +358,10 @@ def main():
         "max_new_tokens": args.max_new_tokens,
         "full": rows["full"],
         "compressed": rows["compressed"],
+        "int8": int8,
         "parity": parity,
         "compression_ratio": round(info["compression_ratio"], 3),
+        "compression_ratio_int8": round(qinfo["compression_ratio"], 3),
         "speedup": {
             "host_dispatch_reduction_fused": round(
                 fb["host_dispatches_per_token"]
@@ -221,6 +386,12 @@ def main():
           f"({summary['speedup']['steady_dispatch_reduction_fused']}x steady), "
           f"{summary['speedup']['trace_tok_per_s_fused']}x trace tok/s, "
           f"{summary['speedup']['steady_tok_per_s_fused']}x steady tok/s ==")
+    print(f"== int8: full-scale expert stream "
+          f"{fs['int8_full']['expert_stream_reduction_vs_bf16_half']}x (full) / "
+          f"{fs['int8_half']['expert_stream_reduction_vs_bf16_half']}x (M=N/2) "
+          f"below the bf16 M=N/2 row; top-1 match "
+          f"{int8['top1_match_full']} / {int8['top1_match_compressed']} "
+          f"(tolerance {args.int8_tolerance}) ==")
     print(f"== parity {parity} ==")
     OUT_PATH.write_text(json.dumps(summary, indent=1))
     print(f"wrote {OUT_PATH}")
@@ -228,6 +399,18 @@ def main():
         print(json.dumps(summary, indent=1))
     if not all(parity.values()):
         raise SystemExit("serve_bench parity check FAILED: " + repr(parity))
+    if not int8["parity_ok"]:
+        raise SystemExit(
+            f"serve_bench int8 parity-tolerance FAILED: "
+            f"top-1 match full={int8['top1_match_full']} "
+            f"compressed={int8['top1_match_compressed']} "
+            f"< tolerance {args.int8_tolerance}")
+    if not int8["expert_stream_ok"]:
+        raise SystemExit(
+            f"serve_bench int8 expert-stream gate FAILED: full-scale "
+            f"reductions {fs['int8_full']['expert_stream_reduction_vs_bf16_half']}x / "
+            f"{fs['int8_half']['expert_stream_reduction_vs_bf16_half']}x "
+            f"below {EXPERT_STREAM_GATE}x vs the bf16 M=N/2 row")
 
 
 if __name__ == "__main__":

@@ -139,41 +139,62 @@ def load(directory, step: Optional[int] = None, shardings=None,
 _EXPERT_TABLES = ("wg", "wu", "wd")
 
 
+def _pack_stacked(stacked, live):
+    """[L_c, M_max, ...] -> {layer_i: [live_i, ...]} (expert axis sliced)."""
+    return {f"layer_{i:03d}": stacked[i, :live[i]]
+            for i in range(stacked.shape[0])}
+
+
+def _unpack_stacked(layers, M):
+    """Inverse of :func:`_pack_stacked`: zero-pad each layer back to ``M``
+    rows and restack (pad rows were zeros by construction — for int8 tables
+    both the values and the scales pad with exact zeros, DESIGN.md §8)."""
+    import jax.numpy as jnp
+    out = []
+    for i in range(len(layers)):
+        a = layers[f"layer_{i:03d}"]
+        pad = M - a.shape[0]
+        if pad:
+            a = jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+        out.append(a)
+    return jnp.stack(out)
+
+
 def _pack_ragged_suffix(cfg, params):
-    """Store heterogeneous suffix expert tables UNPADDED: the stacked
+    """Store heterogeneous suffix expert tables UNPADDED: each stacked
     ``[L_c, M_max, ...]`` leaf becomes one per-layer leaf sliced to that
     layer's live count, so the artifact's bytes match the plan's budget
-    rather than the in-memory max-M padding."""
+    rather than the in-memory max-M padding. Quantized suffixes
+    (``moe["qexp"]``, DESIGN.md §8) pack all six int8/scale leaves the same
+    way — the scale rows share the expert axis; bf16 checkpoints are
+    untouched by the quantized branch."""
     if cfg.moe_merged_layers is None:
         return params
     live = cfg.live_experts_per_suffix_layer()
     moe = dict(params["stack_c"]["moe"])
-    for key in _EXPERT_TABLES:
-        stacked = moe[key]
-        moe[key] = {f"layer_{i:03d}": stacked[i, :live[i]]
-                    for i in range(stacked.shape[0])}
+    if "qexp" in moe:
+        moe["qexp"] = {k: _pack_stacked(v, live)
+                       for k, v in moe["qexp"].items()}
+    else:
+        for key in _EXPERT_TABLES:
+            moe[key] = _pack_stacked(moe[key], live)
     return {**params, "stack_c": {**params["stack_c"], "moe": moe}}
 
 
 def _unpack_ragged_suffix(cfg, tree):
     """Inverse of :func:`_pack_ragged_suffix`: zero-pad each layer back to
     ``cfg.moe_merged`` rows and restack (exactly reproducing the in-memory
-    padded tables — the pad rows were zeros by construction)."""
+    padded tables)."""
     if cfg.moe_merged_layers is None:
         return tree
-    import jax.numpy as jnp
     M = cfg.moe_merged
     moe = dict(tree["stack_c"]["moe"])
-    for key in _EXPERT_TABLES:
-        layers = moe[key]
-        out = []
-        for i in range(len(layers)):
-            a = layers[f"layer_{i:03d}"]
-            pad = M - a.shape[0]
-            if pad:
-                a = jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
-            out.append(a)
-        moe[key] = jnp.stack(out)
+    if "qexp" in moe:
+        moe["qexp"] = {k: _unpack_stacked(v, M)
+                       for k, v in moe["qexp"].items()}
+    else:
+        for key in _EXPERT_TABLES:
+            moe[key] = _unpack_stacked(moe[key], M)
     return {**tree, "stack_c": {**tree["stack_c"], "moe": moe}}
 
 

@@ -175,6 +175,14 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
     suffix_moe["remap"] = jnp.asarray(np.stack([r.remap for r in merged]),
                                       jnp.int32)
     suffix_moe["live"] = jnp.asarray(plan.merged_per_layer, jnp.int32)
+    if plan.weight_dtype == "int8":
+        # calibration-aware int8: scales come from the CALIBRATED tables the
+        # solves just produced (per expert, per output channel); pad rows are
+        # zeros and quantize to zero scale, staying exact (DESIGN.md §8).
+        # Deterministic on the gathered solves, so the §6 mesh bit-for-bit
+        # contract carries over unchanged.
+        from repro.core import quant as QT
+        suffix_moe = QT.quantize_moe_tree(suffix_moe)
     suffix = dict(suffix)
     suffix["moe"] = suffix_moe
 
@@ -186,8 +194,9 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
     orig = _tree_bytes(params)
     padded = _tree_bytes(new_params)
     # live bytes: what a ragged artifact stores — pad rows excluded (same
-    # per-expert byte model the budget planner optimizes)
-    pad_bytes = sum((M_max - m) * PLAN.expert_bytes(cfg)
+    # per-expert byte model the budget planner optimizes, at the plan's
+    # storage dtype)
+    pad_bytes = sum((M_max - m) * PLAN.expert_bytes(cfg, plan.weight_dtype)
                     for m in plan.merged_per_layer)
     comp = padded - pad_bytes
     methods = sorted(set(plan.methods))
@@ -202,6 +211,7 @@ def compress_with_plan(cfg: ModelConfig, params: dict,
         "method": methods[0] if len(methods) == 1 else "mixed",
         "plan": plan.with_mesh(mesh).to_json_dict(),
         "mesh": mesh_info,
+        "weight_dtype": plan.weight_dtype,
         "layers_merged": list(plan.layers),
         "merged_per_layer": list(plan.merged_per_layer),
         "per_layer": per_layer,

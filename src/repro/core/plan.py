@@ -141,6 +141,12 @@ class LayerSpec:
                    merged_experts=int(d["merged_experts"]))
 
 
+#: storage dtypes a plan may request for the merged expert tables.
+#: "bf16" keeps the model dtype; "int8" stores symmetric
+#: per-expert-per-output-channel int8 + fp32 scales (DESIGN.md §8).
+WEIGHT_DTYPES = ("bf16", "int8")
+
+
 @dataclass(frozen=True)
 class CompressionPlan:
     """An ordered set of per-layer merge decisions.
@@ -153,9 +159,19 @@ class CompressionPlan:
     (``(("data", 4), ("model", 2))``-style pairs, or None for single-device).
     It is provenance METADATA only: execution is bit-for-bit identical across
     mesh shapes (DESIGN.md §6), so a plan may be replayed on any mesh.
+
+    ``weight_dtype`` picks the STORAGE dtype of the merged expert tables —
+    the second, multiplicative axis of the memory budget next to the
+    per-layer M: ``"bf16"`` (default) or ``"int8"``
+    (per-expert-per-output-channel symmetric quantization applied at the end
+    of ``compress_with_plan``, DESIGN.md §8). Orthogonal to the merge
+    decisions: the planner's budget math stays in the bf16 byte model, and
+    quantization is deterministic on the solved tables, so the §6 mesh
+    bit-for-bit contract is unaffected.
     """
     specs: Tuple[LayerSpec, ...]
     mesh: Optional[Tuple[Tuple[str, int], ...]] = None
+    weight_dtype: str = "bf16"
 
     def __post_init__(self):
         object.__setattr__(self, "specs", tuple(
@@ -172,7 +188,7 @@ class CompressionPlan:
         if mesh is not None and hasattr(mesh, "shape") \
                 and not isinstance(mesh, (Mapping, tuple)):
             mesh = {str(k): int(v) for k, v in mesh.shape.items()}
-        return CompressionPlan(self.specs, mesh)
+        return CompressionPlan(self.specs, mesh, self.weight_dtype)
 
     # ---- views ------------------------------------------------------------
     @property
@@ -229,6 +245,9 @@ class CompressionPlan:
                     f"layer {s.layer}: merged_experts={s.merged_experts} "
                     f"outside [1, {N}]")
             get_strategy(s.method)       # raises on unregistered methods
+        if self.weight_dtype not in WEIGHT_DTYPES:
+            raise ValueError(
+                f"weight_dtype={self.weight_dtype!r} not in {WEIGHT_DTYPES}")
         return self
 
     def apply_to(self, cfg: ModelConfig) -> ModelConfig:
@@ -247,6 +266,7 @@ class CompressionPlan:
     # ---- (de)serialization -------------------------------------------------
     def to_json_dict(self) -> dict:
         d = {"version": PLAN_FORMAT_VERSION,
+             "weight_dtype": self.weight_dtype,
              "specs": [s.to_dict() for s in self.specs]}
         if self.mesh is not None:
             d["mesh"] = {a: s for a, s in self.mesh}
@@ -257,7 +277,9 @@ class CompressionPlan:
         mesh = d.get("mesh")
         return cls(specs=tuple(LayerSpec.from_dict(s) for s in d["specs"]),
                    mesh=None if mesh is None else tuple(
-                       (str(a), int(s)) for a, s in mesh.items()))
+                       (str(a), int(s)) for a, s in mesh.items()),
+                   # absent in pre-int8 plan files -> bf16 (back-compat)
+                   weight_dtype=str(d.get("weight_dtype", "bf16")))
 
     def to_json(self) -> str:
         return json.dumps(self.to_json_dict(), indent=1)
@@ -289,30 +311,38 @@ def _default_split(cfg: ModelConfig, split: Optional[int]) -> int:
 
 
 def uniform(cfg: ModelConfig, *, method: str = "mergemoe",
-            merged_experts: int, split: Optional[int] = None
-            ) -> CompressionPlan:
+            merged_experts: int, split: Optional[int] = None,
+            weight_dtype: str = "bf16") -> CompressionPlan:
     """Same method and budget for every layer in [split, n_layers) — the
     legacy ``compress_model(method, merged_experts, split)`` surface."""
     split = _default_split(cfg, split)
     return CompressionPlan(tuple(
         LayerSpec(l, method, merged_experts)
-        for l in range(split, cfg.n_layers))).validate(cfg)
+        for l in range(split, cfg.n_layers)),
+        weight_dtype=weight_dtype).validate(cfg)
 
 
 def suffix(cfg: ModelConfig, *, method: str = "mergemoe",
-           merged_experts: int, frac: float = 0.4) -> CompressionPlan:
+           merged_experts: int, frac: float = 0.4,
+           weight_dtype: str = "bf16") -> CompressionPlan:
     """Merge the last ``frac`` of the stack uniformly (paper App. C.2 merges
     the final ~40% of layers)."""
     if not 0.0 < frac <= 1.0:
         raise ValueError(f"frac={frac} outside (0, 1]")
     split = cfg.n_layers - max(1, int(round(cfg.n_layers * frac)))
     return uniform(cfg, method=method, merged_experts=merged_experts,
-                   split=split)
+                   split=split, weight_dtype=weight_dtype)
 
 
-def expert_bytes(cfg: ModelConfig) -> int:
-    """Bytes of ONE expert's three projection matrices."""
-    return 3 * cfg.d_model * cfg.moe.d_ff_expert * cfg.param_dtype.itemsize
+def expert_bytes(cfg: ModelConfig, weight_dtype: str = "bf16") -> int:
+    """Bytes of ONE expert's three projection matrices at ``weight_dtype``.
+
+    int8 stores one byte per weight plus the fp32 per-output-channel scale
+    rows: ``2f`` columns for wg/wu and ``d`` for wd (DESIGN.md §8)."""
+    d, f = cfg.d_model, cfg.moe.d_ff_expert
+    if weight_dtype == "int8":
+        return 3 * d * f + 4 * (2 * f + d)
+    return 3 * d * f * cfg.param_dtype.itemsize
 
 
 def _total_bytes(cfg: ModelConfig) -> int:
@@ -358,7 +388,8 @@ def layer_importance(stats: Optional[Mapping[int, np.ndarray]],
 def for_target_ratio(cfg: ModelConfig, *, target_ratio: float,
                      stats: Optional[Mapping[int, np.ndarray]] = None,
                      method: str = "mergemoe", split: Optional[int] = None,
-                     min_merged: int = 1) -> CompressionPlan:
+                     min_merged: int = 1,
+                     weight_dtype: str = "bf16") -> CompressionPlan:
     """Budget-driven planner: allocate per-layer M so the compressed model's
     (live) bytes hit ``total_bytes / target_ratio``.
 
@@ -401,6 +432,11 @@ def for_target_ratio(cfg: ModelConfig, *, target_ratio: float,
         M[i] -= 1
         saved += per_expert
 
+    # weight_dtype rides along without altering the M allocation: the greedy
+    # budget math stays in the bf16 byte model, and int8 composes on top
+    # (target_ratio then understates the final ratio — by design, the two
+    # axes are reported separately in the compression report).
     return CompressionPlan(tuple(
         LayerSpec(l, method, int(M[i]))
-        for i, l in enumerate(layers))).validate(cfg)
+        for i, l in enumerate(layers)),
+        weight_dtype=weight_dtype).validate(cfg)

@@ -1,0 +1,174 @@
+"""Int8 expert-weight quantization (DESIGN.md §8).
+
+MergeMoE shrinks the NUMBER of expert tables; the bits per weight in each
+surviving table are the other, multiplicative axis of the decode memory
+budget (PuzzleMoE's bit-packed-inference observation). This module owns that
+axis: symmetric per-expert-per-OUTPUT-CHANNEL int8 quantization of the
+calibrated SwiGLU tables ``wg/wu/wd``, applied at the end of
+``compress_with_plan`` when the plan's ``weight_dtype`` is ``"int8"``.
+
+Format
+------
+For ``wg``/``wu`` of shape ``[..., E, d, f]`` the output channel is the FFN
+column ``f``; for ``wd`` ``[..., E, f, d]`` it is the model column ``d``. Each
+(expert, output channel) pair gets one fp32 scale ``amax / 127`` (reduced
+over the contraction axis, ``axis=-2``), stored with a broadcast-ready
+keepdim: scales are ``[..., E, 1, f]`` / ``[..., E, 1, d]``. Values quantize
+by round-to-nearest-even of ``w / scale`` clipped to ``[-127, 127]`` — the
+symmetric range, so dequantization is a single fused multiply with no zero
+point. All-zero channels (the pad rows of heterogeneous suffixes,
+DESIGN.md §5) store scale 0 and dequantize back to exact zeros.
+
+Per-output-channel (not per-tensor) granularity matters because the merge
+solve (§1-§2) leaves the merged down projection with strongly heterogeneous
+column norms; a per-tensor scale would burn most of the 8-bit range on the
+few largest columns.
+
+In the parameter tree the six arrays live as a plain dict under
+``moe["qexp"]`` (replacing the ``wg``/``wu``/``wd`` leaves) so generic tree
+machinery — checkpoint treedef proto serialization, path-rule sharding,
+``lax.scan`` over stacked layers — needs no custom pytree registration;
+:class:`QuantizedExpertTables` is the typed view model/kernel code works
+with (``QuantizedExpertTables.from_tree(p["qexp"])``).
+
+Numerics contract (DESIGN.md §8): dequantization inside the Pallas kernels
+reproduces the jnp dequant oracles bit for bit (tests/test_kernels.py),
+and the int8 ragged and gather paths consume identical fp32-dequantized
+values through identical fp32 combines, so they agree bitwise with each
+other at top_k = 2. Across REPRESENTATIONS the contract is a tolerance,
+not parity: the int8 paths keep the dequantized weights at fp32
+internally, while serving tables materialized at the model dtype
+(:func:`dequantize_moe_tree`) round through bf16 inside the standard
+paths — same weights, different intermediate roundings.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+I8_MAX = 127.0
+
+#: tree keys of one quantized expert-table set, in a fixed order
+#: (checkpoint packing and tests iterate this)
+QEXP_KEYS = ("wg", "wu", "wd", "wg_scale", "wu_scale", "wd_scale")
+
+
+class QuantizedExpertTables(NamedTuple):
+    """Typed view over a ``moe["qexp"]`` subtree.
+
+    ``wg``/``wu``: int8 ``[..., E, d, f]``; ``wd``: int8 ``[..., E, f, d]``;
+    scales: fp32 with the contraction axis kept at 1 (``[..., E, 1, f]`` /
+    ``[..., E, 1, d]``) so ``q * scale`` broadcasts. NamedTuples cannot ride
+    in checkpointed trees (treedef proto rejects user nodes), hence
+    :meth:`to_tree`/:meth:`from_tree`.
+    """
+    wg: jax.Array
+    wu: jax.Array
+    wd: jax.Array
+    wg_scale: jax.Array
+    wu_scale: jax.Array
+    wd_scale: jax.Array
+
+    @classmethod
+    def from_tree(cls, tree: Dict) -> "QuantizedExpertTables":
+        return cls(**{k: tree[k] for k in QEXP_KEYS})
+
+    def to_tree(self) -> Dict:
+        return {k: getattr(self, k) for k in QEXP_KEYS}
+
+    @property
+    def n_experts(self) -> int:
+        return self.wg.shape[-3]
+
+    def dequant(self, dtype) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(wg, wu, wd) materialized at ``dtype`` (dense dispatch, export);
+        the ragged/gather kernels apply the same fp32 product per block but
+        skip the ``dtype`` cast (fp32-internal, DESIGN.md §8)."""
+        return (dequantize(self.wg, self.wg_scale, dtype),
+                dequantize(self.wu, self.wu_scale, dtype),
+                dequantize(self.wd, self.wd_scale, dtype))
+
+
+def quantize_channelwise(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization over ``axis=-2`` (the contraction axis).
+
+    Returns ``(q int8, scale f32 keepdim)`` with
+    ``|w - q*scale| <= scale/2`` per channel (round-to-nearest) and
+    ``q == 0, scale == 0`` for all-zero channels.
+    """
+    w32 = jnp.asarray(w, F32)
+    amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)
+    scale = amax / I8_MAX
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(w32 * inv), -I8_MAX, I8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """``q * scale`` at fp32, cast to ``dtype``. The Pallas kernels inline
+    the same fp32 product per block and keep it at fp32 (their single
+    downcast happens at the output store — DESIGN.md §8)."""
+    return (q.astype(F32) * scale).astype(dtype)
+
+
+def quantize_expert_tables(wg: jax.Array, wu: jax.Array, wd: jax.Array
+                           ) -> QuantizedExpertTables:
+    """Quantize one expert-table set (any leading stack dims)."""
+    qg, sg = quantize_channelwise(wg)
+    qu, su = quantize_channelwise(wu)
+    qd, sd = quantize_channelwise(wd)
+    return QuantizedExpertTables(qg, qu, qd, sg, su, sd)
+
+
+# ---------------------------------------------------------------------------
+# parameter-tree surgery
+# ---------------------------------------------------------------------------
+
+def quantize_moe_tree(moe_p: Dict) -> Dict:
+    """Return ``moe_p`` with ``wg/wu/wd`` replaced by a ``qexp`` subtree.
+    Router, remap, live, and shared-expert leaves pass through untouched
+    (the router stays fp32; shared experts are a dense MLP, out of scope)."""
+    if "qexp" in moe_p:
+        return dict(moe_p)
+    qt = quantize_expert_tables(moe_p["wg"], moe_p["wu"], moe_p["wd"])
+    out = {k: v for k, v in moe_p.items() if k not in ("wg", "wu", "wd")}
+    out["qexp"] = qt.to_tree()
+    return out
+
+
+def quantize_model_experts(params: Dict) -> Dict:
+    """Quantize every routed-expert table in a model parameter tree (both
+    the untouched prefix ``stack`` and the merged suffix ``stack_c``).
+    Used for the full-model int8 rows of ``serve_bench`` and by callers that
+    want int8 serving WITHOUT merging."""
+    out = dict(params)
+    for key in ("stack", "stack_c"):
+        if key in params and "moe" in params[key]:
+            out[key] = dict(params[key],
+                            moe=quantize_moe_tree(params[key]["moe"]))
+    return out
+
+
+def is_quantized(moe_p: Dict) -> bool:
+    return "qexp" in moe_p
+
+
+def dequantize_moe_tree(moe_p: Dict, dtype) -> Dict:
+    """Inverse surgery: materialize plain tables from a ``qexp`` subtree.
+
+    NOT a bitwise stand-in for serving the int8 tree: the int8 kernel/oracle
+    paths keep the dequantized weights at fp32 internally, while a
+    materialized ``dtype`` table rounds through ``dtype`` (and the standard
+    bf16 paths round their intermediates) — outputs agree to quantization-
+    scale tolerance only. Use it to recover a conventional table layout
+    (export, analysis), not for parity contracts (DESIGN.md §8)."""
+    if "qexp" not in moe_p:
+        return dict(moe_p)
+    qt = QuantizedExpertTables.from_tree(moe_p["qexp"])
+    wg, wu, wd = qt.dequant(dtype)
+    out = {k: v for k, v in moe_p.items() if k != "qexp"}
+    out.update(wg=wg, wu=wu, wd=wd)
+    return out

@@ -89,3 +89,70 @@ def gather_swiglu(x, wg, wu, wd, idx, w, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
         interpret=interpret,
     )(idx, x, w.astype(F32), wg, wu, wd)
+
+
+def _kernel_q(idx_ref, x_ref, qg_ref, qu_ref, qd_ref,
+              sg_ref, su_ref, sd_ref, o_ref):
+    """Int8 variant of :func:`_kernel`: the three gathered weight blocks are
+    int8 plus fp32 per-output-channel scale rows, dequantized in VMEM — one
+    byte per weight over HBM instead of two. The dequantized weights stay
+    fp32 through the whole SwiGLU and each (token, expert-slot) contribution
+    is emitted to its own ``[T, k, d]`` output row at the model dtype; the
+    wrapper applies the fp32 combine weights OUTSIDE the kernel with exactly
+    the oracle's ops. Rationale: accumulating ``acc += w*y`` in-kernel is an
+    FMA-contraction site (XLA:CPU fuses the multiply-add with one fewer
+    rounding), which would put the interpret-mode result 1 ulp away from
+    any jnp oracle — structurally unfixable, so the combine lives outside
+    (DESIGN.md §8). The emitted rows are k·T·d·2 bytes — noise next to the
+    k expert row-sets the kernel exists to stream."""
+    x32 = x_ref[...].astype(F32)                             # [1, d]
+    wg = qg_ref[0].astype(F32) * sg_ref[0]
+    wu = qu_ref[0].astype(F32) * su_ref[0]
+    wd = qd_ref[0].astype(F32) * sd_ref[0]
+    g = jnp.dot(x32, wg)
+    u = jnp.dot(x32, wu)
+    h = jax.nn.silu(g) * u
+    o_ref[...] = jnp.dot(h, wd)[None].astype(o_ref.dtype)
+
+
+def gather_swiglu_q(x, qt, idx, w, interpret: bool = False):
+    """Int8 decode-mode gather SwiGLU. Same contract as
+    :func:`gather_swiglu` with the weight tables replaced by a
+    :class:`repro.core.quant.QuantizedExpertTables` (int8 tables + keepdim
+    fp32 scales); per token the kernel streams k int8 expert row-sets — the
+    decode hot loop's dominant HBM term at half the bf16 width. Bitwise
+    equal to ``ref.gather_swiglu_q`` in interpret mode. Deliberately
+    UNJITTED, same reasoning as ``grouped_swiglu_q`` (production jits at
+    the ``ops`` layer)."""
+    T, d = x.shape
+    E, _, f = qt.wg.shape
+    k = idx.shape[-1]
+    if T == 0:
+        return jnp.zeros((0, d), x.dtype)
+    idx = jnp.clip(idx.astype(jnp.int32), 0, E - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t, j, ix: (t, 0)),
+            pl.BlockSpec((1, d, f), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, d, f), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, f, d), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, 1, f), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, 1, f), lambda t, j, ix: (ix[t, j], 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda t, j, ix: (ix[t, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda t, j, ix: (t, j, 0)),
+        scratch_shapes=[],
+    )
+    y = pl.pallas_call(
+        _kernel_q,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, k, d), x.dtype),
+        interpret=interpret,
+    )(idx, x, qt.wg, qt.wu, qt.wd,
+      qt.wg_scale, qt.wu_scale, qt.wd_scale)
+    # the oracle's combine, verbatim: fp32 weights over model-dtype rows
+    out = jnp.sum(y.astype(F32) * w.reshape(T, k, 1).astype(F32), axis=1)
+    return out.astype(x.dtype)

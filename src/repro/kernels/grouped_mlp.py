@@ -48,6 +48,56 @@ def _block(dim: int, target: int) -> int:
     return b
 
 
+def _kernel_q(be_ref, x_ref, qg_ref, qu_ref, qd_ref, sg_ref, su_ref, sd_ref,
+              o_ref, acc_ref, *, nf: int):
+    """Int8 variant: weight blocks arrive as int8 + per-output-channel fp32
+    scales and are dequantized IN VMEM — HBM moves one byte per weight plus
+    the (tiny) scale rows. The dequantized weights stay fp32 through the
+    whole SwiGLU and the output downcasts ONCE at the flush — the same
+    dataflow as the jnp dequant oracle, which the kernel matches bit for bit
+    when the f axis is unblocked (intermediate model-dtype roundings would
+    be cancelled by XLA's excess-precision pass and are deliberately
+    absent; DESIGN.md §8)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x32 = x_ref[...].astype(F32)
+    wg = qg_ref[0].astype(F32) * sg_ref[0]
+    wu = qu_ref[0].astype(F32) * su_ref[0]
+    wd = qd_ref[0].astype(F32) * sd_ref[0]
+    g = jnp.dot(x32, wg)
+    u = jnp.dot(x32, wu)
+    h = jax.nn.silu(g) * u
+    acc_ref[...] += jnp.dot(h, wd)
+
+    @pl.when(j == nf - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _segment_layout(group_sizes, T: int, E: int, bt: int):
+    """Shared sort-free segment layout: pad each expert's token segment to a
+    multiple of ``bt`` and derive (dest row scatter indices, block->expert
+    table, padded row count). See the duplicate-proof ``jnp.repeat`` note in
+    :func:`grouped_swiglu`."""
+    starts = jnp.cumsum(group_sizes) - group_sizes            # [E]
+    padded_sizes = ((group_sizes + bt - 1) // bt) * bt
+    padded_starts = jnp.cumsum(padded_sizes) - padded_sizes
+    Tp = T + E * (bt - 1)
+    Tp = ((Tp + bt - 1) // bt) * bt
+    nb = Tp // bt
+    eid = jnp.repeat(jnp.arange(E, dtype=jnp.int32), group_sizes,
+                     total_repeat_length=T)
+    dest = padded_starts[eid] + (jnp.arange(T) - starts[eid])
+    block_expert = jnp.repeat(jnp.arange(E, dtype=jnp.int32),
+                              padded_sizes // bt,
+                              total_repeat_length=nb)
+    return dest, block_expert, Tp, nb
+
+
 @functools.partial(jax.jit, static_argnames=("block_t", "block_f",
                                              "interpret"))
 def grouped_swiglu(x, wg, wu, wd, group_sizes, block_t: int = 128,
@@ -69,25 +119,10 @@ def grouped_swiglu(x, wg, wu, wd, group_sizes, block_t: int = 128,
     # ``jnp.repeat(..., total_repeat_length=...)``, which emits each expert id
     # exactly size/blocks-per-expert times and is duplicate-proof by
     # construction (trailing padding repeats the last id onto all-zero rows,
-    # whose output is discarded).
-    starts = jnp.cumsum(group_sizes) - group_sizes            # [E]
-    padded_sizes = ((group_sizes + bt - 1) // bt) * bt
-    padded_starts = jnp.cumsum(padded_sizes) - padded_sizes
-    Tp = T + E * (bt - 1)
-    Tp = ((Tp + bt - 1) // bt) * bt
-    nb = Tp // bt
-
-    # destination row for each source row (stable within its expert segment)
-    eid = jnp.repeat(jnp.arange(E, dtype=jnp.int32), group_sizes,
-                     total_repeat_length=T)
-    dest = padded_starts[eid] + (jnp.arange(T) - starts[eid])
+    # whose output is discarded; blocks beyond the last padded segment rerun
+    # the last non-empty expert on zero rows — harmless, output discarded).
+    dest, block_expert, Tp, nb = _segment_layout(group_sizes, T, E, bt)
     xp = jnp.zeros((Tp, d), x.dtype).at[dest].set(x)
-
-    # block -> expert table (blocks beyond the last padded segment rerun the
-    # last non-empty expert on zero rows — harmless, output discarded)
-    block_expert = jnp.repeat(jnp.arange(E, dtype=jnp.int32),
-                              padded_sizes // bt,
-                              total_repeat_length=nb)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -107,4 +142,55 @@ def grouped_swiglu(x, wg, wu, wd, group_sizes, block_t: int = 128,
         out_shape=jax.ShapeDtypeStruct((Tp, d), x.dtype),
         interpret=interpret,
     )(block_expert, xp, wg, wu, wd)
+    return yp[dest]
+
+
+def grouped_swiglu_q(x, qt, group_sizes, block_t: int = 128,
+                     block_f: int = 512, interpret: bool = False):
+    """Int8 grouped SwiGLU: same segment layout as :func:`grouped_swiglu`,
+    but the expert tables stream from HBM as int8 blocks plus fp32
+    per-output-channel scale rows and are dequantized inside the kernel —
+    half the weight traffic of the bf16 path at identical fp32 matmul
+    accumulation.
+
+    ``qt``: :class:`repro.core.quant.QuantizedExpertTables` with tables
+    ``[E, d, f]`` / ``[E, f, d]`` and keepdim scales ``[E, 1, f]`` /
+    ``[E, 1, d]``. With the f axis unblocked (``block_f >= f``) the kernel
+    is bitwise-equal to ``ref.grouped_swiglu_q``; blocking f reassociates
+    the fp32 accumulation across f-blocks — allclose, not bitwise
+    (DESIGN.md §8). Deliberately UNJITTED: the production entry point is
+    ``ops.grouped_swiglu_q`` (which jits); the interpret-mode validation
+    path runs eagerly so XLA cannot re-fuse arithmetic across the
+    kernel/wrapper boundary out from under the bitwise contract."""
+    T, d = x.shape
+    E, _, f = qt.wg.shape
+    bt = block_t
+    bf = _block(f, block_f)
+    nf = f // bf
+
+    dest, block_expert, Tp, nb = _segment_layout(group_sizes, T, E, bt)
+    xp = jnp.zeros((Tp, d), x.dtype).at[dest].set(x)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j, be: (i, 0)),
+            pl.BlockSpec((1, d, bf), lambda i, j, be: (be[i], 0, j)),
+            pl.BlockSpec((1, d, bf), lambda i, j, be: (be[i], 0, j)),
+            pl.BlockSpec((1, bf, d), lambda i, j, be: (be[i], j, 0)),
+            pl.BlockSpec((1, 1, bf), lambda i, j, be: (be[i], 0, j)),
+            pl.BlockSpec((1, 1, bf), lambda i, j, be: (be[i], 0, j)),
+            pl.BlockSpec((1, 1, d), lambda i, j, be: (be[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j, be: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bt, d), F32)],
+    )
+    yp = pl.pallas_call(
+        functools.partial(_kernel_q, nf=nf),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, d), x.dtype),
+        interpret=interpret,
+    )(block_expert, xp, qt.wg, qt.wu, qt.wd,
+      qt.wg_scale, qt.wu_scale, qt.wd_scale)
     return yp[dest]

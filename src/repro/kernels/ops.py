@@ -1,15 +1,20 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Dispatch policy: on TPU backends the Pallas implementations run natively; on
-CPU (this container) they run through the jnp oracle by default, while tests
-exercise the kernel bodies via ``interpret=True``.
+Dispatch policy (ONE place, the :func:`pallas_dispatch` decorator): on TPU
+backends the Pallas implementations run natively; on CPU (this container)
+they run through the jnp oracle by default, while tests exercise the kernel
+bodies via ``interpret=True``. The decorated function body IS the oracle
+call, and the Pallas implementation is resolved lazily from the named
+kernel module under the same public name — so adding a kernel variant is
+one decorated two-liner, not a fifth copy of the policy.
 """
 from __future__ import annotations
 
 import functools
+import importlib
+import inspect
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 
@@ -18,36 +23,80 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def swiglu_mlp(x, wg, wu, wd, interpret: bool = False):
-    if _on_tpu() or interpret:
-        from repro.kernels import swiglu as _k
-        return _k.swiglu_mlp(x, wg, wu, wd, interpret=not _on_tpu())
+def pallas_dispatch(kernel_module: str, extra_static: tuple = ()):
+    """Decorator factory implementing the interpret/TPU dispatch policy.
+
+    ``kernel_module``: module under ``repro.kernels`` holding the Pallas
+    implementation, looked up lazily (Pallas imports stay off the default
+    CPU path) under the decorated function's name. ``extra_static``: names
+    of oracle parameters to treat as jit-static alongside ``interpret``;
+    they may be passed positionally OR by keyword — a thin unjitted shim
+    rebinds positionals against the oracle's signature so jit always sees
+    them as static kwargs (the pre-decorator wrappers accepted positional
+    ``causal``; silently tracing it would turn ``if causal:`` into a
+    TracerBoolConversionError). The decorated body is the jnp-oracle
+    fallback.
+    """
+    def deco(oracle_fn):
+        name = oracle_fn.__name__
+        param_names = tuple(inspect.signature(oracle_fn).parameters)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("interpret",) + extra_static)
+        def jitted(*args, interpret: bool = False, **kw):
+            if _on_tpu() or interpret:
+                mod = importlib.import_module(f"repro.kernels.{kernel_module}")
+                return getattr(mod, name)(*args, interpret=not _on_tpu(),
+                                          **kw)
+            return oracle_fn(*args, **kw)
+
+        if not extra_static:
+            jitted.__name__ = name
+            jitted.__doc__ = oracle_fn.__doc__
+            return jitted
+
+        def wrapper(*args, **kw):
+            # keywordize everything from the first positionally-passed
+            # static param onward (positional slots cannot be skipped)
+            cut = next((i for i, p in enumerate(param_names[:len(args)])
+                        if p in extra_static), len(args))
+            for i in range(cut, len(args)):
+                kw[param_names[i]] = args[i]
+            return jitted(*args[:cut], **kw)
+
+        wrapper.__name__ = name
+        wrapper.__doc__ = oracle_fn.__doc__
+        return wrapper
+    return deco
+
+
+@pallas_dispatch("swiglu")
+def swiglu_mlp(x, wg, wu, wd):
     return ref.swiglu_mlp(x, wg, wu, wd)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def grouped_swiglu(x, wg, wu, wd, group_sizes, interpret: bool = False):
-    if _on_tpu() or interpret:
-        from repro.kernels import grouped_mlp as _k
-        return _k.grouped_swiglu(x, wg, wu, wd, group_sizes,
-                                 interpret=not _on_tpu())
+@pallas_dispatch("grouped_mlp")
+def grouped_swiglu(x, wg, wu, wd, group_sizes):
     return ref.grouped_swiglu(x, wg, wu, wd, group_sizes)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def gather_swiglu(x, wg, wu, wd, idx, w, interpret: bool = False):
-    if _on_tpu() or interpret:
-        from repro.kernels import decode_moe as _k
-        return _k.gather_swiglu(x, wg, wu, wd, idx, w,
-                                interpret=not _on_tpu())
+@pallas_dispatch("decode_moe")
+def gather_swiglu(x, wg, wu, wd, idx, w):
     return ref.gather_swiglu(x, wg, wu, wd, idx, w)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
-def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
-    if _on_tpu() or interpret:
-        from repro.kernels import flash_attention as _k
-        return _k.flash_attention(q, k, v, causal=causal,
-                                  interpret=not _on_tpu())
+@pallas_dispatch("grouped_mlp")
+def grouped_swiglu_q(x, qt, group_sizes):
+    """Int8 grouped SwiGLU over a ``QuantizedExpertTables`` (DESIGN.md §8)."""
+    return ref.grouped_swiglu_q(x, qt, group_sizes)
+
+
+@pallas_dispatch("decode_moe")
+def gather_swiglu_q(x, qt, idx, w):
+    """Int8 decode-mode gather SwiGLU over a ``QuantizedExpertTables``."""
+    return ref.gather_swiglu_q(x, qt, idx, w)
+
+
+@pallas_dispatch("flash_attention", extra_static=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
     return ref.flash_attention(q, k, v, causal=causal)

@@ -67,6 +67,64 @@ def gather_swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
     return out.astype(x.dtype)
 
 
+def _dequant32(qt):
+    """fp32 dequantized tables — ``q * scale`` with NO intermediate downcast.
+
+    The int8 paths keep the dequantized weights at fp32 all the way through
+    the SwiGLU (one output-side downcast only). Intermediate ``bf16``
+    roundings would be unstable validation targets: XLA's excess-precision
+    pass cancels f32→bf16→f32 round-trips inside fused computations, so a
+    kernel could not reproduce them bit for bit (DESIGN.md §8)."""
+    return (qt.wg.astype(F32) * qt.wg_scale,
+            qt.wu.astype(F32) * qt.wu_scale,
+            qt.wd.astype(F32) * qt.wd_scale)
+
+
+def grouped_swiglu_q(x: jax.Array, qt, group_sizes: jax.Array) -> jax.Array:
+    """Int8 grouped SwiGLU oracle.
+
+    ``qt``: :class:`repro.core.quant.QuantizedExpertTables`. Same grouping
+    semantics as :func:`grouped_swiglu`; arithmetic is fp32 end-to-end on
+    the dequantized tables with a single downcast at the output — exactly
+    the int8 Pallas kernel's dataflow, which matches this oracle bit for
+    bit when the f axis is unblocked (tests/test_kernels.py)."""
+    wg32, wu32, wd32 = _dequant32(qt)
+    T = x.shape[0]
+    E = qt.wg.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    eid = jnp.searchsorted(starts, jnp.arange(T), side="right") - 1
+    eid = jnp.clip(eid, 0, E - 1)
+    x32 = x.astype(F32)
+    g = jnp.einsum("td,tdf->tf", x32, wg32[eid])
+    u = jnp.einsum("td,tdf->tf", x32, wu32[eid])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("tf,tfd->td", h, wd32[eid]).astype(x.dtype)
+
+
+def gather_swiglu_q(x: jax.Array, qt, idx: jax.Array,
+                    w: jax.Array) -> jax.Array:
+    """Int8 decode-mode (gather-dispatch) oracle.
+
+    Row semantics of :func:`gather_swiglu` on the fp32-dequantized tables:
+    each (token, j) contribution is computed at fp32, downcast to
+    ``x.dtype`` (the same output rounding :func:`grouped_swiglu_q` applies,
+    so the int8 ragged and gather paths stay bitwise-consistent at
+    top_k = 2), then combined with fp32 weights."""
+    T, d = x.shape
+    k = idx.shape[-1]
+    E = qt.wg.shape[0]
+    wg32, wu32, wd32 = _dequant32(qt)
+    eid = jnp.clip(idx.reshape(-1), 0, E - 1)
+    xr = jnp.repeat(x, k, axis=0).astype(F32)
+    g = jnp.einsum("td,tdf->tf", xr, wg32[eid])
+    u = jnp.einsum("td,tdf->tf", xr, wu32[eid])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tf,tfd->td", h, wd32[eid]).astype(x.dtype)
+    out = jnp.sum(y.reshape(T, k, d).astype(F32)
+                  * w.reshape(T, k, 1).astype(F32), axis=1)
+    return out.astype(x.dtype)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, scale: float | None = None) -> jax.Array:
     """Attention oracle. q/k/v: [B, H, S, hd] (same H; GQA expansion is done

@@ -54,23 +54,26 @@ def make_batches(cfg, n, batch=4, seq=64, seed=0):
 
 
 def build_plan(cfg, *, plan_path=None, target_ratio=None, method="mergemoe",
-               merged_experts=4, split=None, stream=None):
-    """Resolve the CLI's three plan sources, most declarative first."""
+               merged_experts=4, split=None, stream=None,
+               weight_dtype="bf16"):
+    """Resolve the CLI's three plan sources, most declarative first.
+    ``weight_dtype`` applies to the built plan (a plan file keeps its own)."""
     if plan_path:
         return PLAN.CompressionPlan.load(plan_path).validate(cfg)
     if target_ratio:
         stats = stream.stats() if stream is not None else None
         return PLAN.for_target_ratio(cfg, target_ratio=target_ratio,
-                                     stats=stats, method=method, split=split)
+                                     stats=stats, method=method, split=split,
+                                     weight_dtype=weight_dtype)
     return PLAN.uniform(cfg, method=method, merged_experts=merged_experts,
-                        split=split)
+                        split=split, weight_dtype=weight_dtype)
 
 
 def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
         split=None, calib_batches: int = 2, eval_batches: int = 4,
         params=None, cfg=None, seed: int = 0, plan=None, plan_path=None,
         target_ratio=None, max_calib_tokens=None, save_dir=None,
-        mesh_spec=None):
+        mesh_spec=None, weight_dtype: str = "bf16"):
     cfg = cfg if cfg is not None else configs.get(arch).reduced()
     if params is None:
         params = MD.init(cfg, jax.random.PRNGKey(seed))
@@ -96,7 +99,8 @@ def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
     if plan is None:
         plan = build_plan(cfg, plan_path=plan_path, target_ratio=target_ratio,
                           method=method, merged_experts=merged_experts,
-                          split=split, stream=stream)
+                          split=split, stream=stream,
+                          weight_dtype=weight_dtype)
 
     t0 = time.perf_counter()
     new_cfg, new_params, info = CMP.compress_with_plan(
@@ -116,6 +120,7 @@ def run(arch: str, method: str = "mergemoe", merged_experts: int = 4,
         "arch": arch, "method": info["method"],
         "plan": info["plan"],
         "mesh": info["mesh"],
+        "weight_dtype": info["weight_dtype"],
         "n_experts": info["n_experts"],
         "merged_experts": info["merged_experts"],
         "merged_per_layer": info["merged_per_layer"],
@@ -149,6 +154,12 @@ def main():
                          "calibration stats to hit this compression ratio")
     ap.add_argument("--method", default="mergemoe",
                     choices=PLAN.available_methods())
+    ap.add_argument("--weight-dtype", default="bf16",
+                    choices=PLAN.WEIGHT_DTYPES,
+                    help="storage dtype for the merged expert tables: int8 "
+                         "halves decode HBM traffic on top of merging "
+                         "(DESIGN.md §8); ignored when --plan is given "
+                         "(the plan file carries its own)")
     ap.add_argument("--merged-experts", type=int, default=4)
     ap.add_argument("--split", type=int, default=None)
     ap.add_argument("--calib-batches", type=int, default=2)
@@ -170,7 +181,8 @@ def main():
                        eval_batches=args.eval_batches, plan_path=args.plan,
                        target_ratio=args.target_ratio,
                        max_calib_tokens=args.max_calib_tokens,
-                       save_dir=args.save_dir, mesh_spec=args.mesh)
+                       save_dir=args.save_dir, mesh_spec=args.mesh,
+                       weight_dtype=args.weight_dtype)
     print(json.dumps(report, indent=1))
 
 

@@ -376,3 +376,91 @@ def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
         "dominant": dom,
         "roofline_fraction": t_c / bound,
     }
+
+
+# ---------------------------------------------------------------------------
+# analytic decode HBM-traffic model (the "modeled bytes/token" the serving
+# benchmark and Engine.bench_decode report; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def expected_distinct_experts(n_experts: int, draws: int) -> float:
+    """Expected number of DISTINCT experts hit by ``draws`` uniform routing
+    draws over ``n_experts`` — ``E·(1 − (1 − 1/E)^draws)``. This is where
+    MergeMoE shows up in the traffic model: fewer live experts ⇒ more
+    collisions across a decode batch ⇒ fewer distinct tables streamed per
+    step, even though every token still consumes top-k experts."""
+    if n_experts <= 0 or draws <= 0:
+        return 0.0
+    return n_experts * (1.0 - (1.0 - 1.0 / n_experts) ** draws)
+
+
+def decode_traffic_model(cfg, *, n_slots: int, pos: int,
+                         weight_dtype: str = "bf16",
+                         prefix_weight_dtype: str = "bf16"
+                         ) -> Dict[str, float]:
+    """Modeled HBM bytes for ONE decode step of ``n_slots`` tokens at cache
+    position ``pos`` (gather-dispatch serving path), per device.
+
+    Per step the device streams: every non-expert weight once (attention,
+    norms, router, shared experts, LM head), the KV prefix of each slot,
+    and — the dominant term at scale — the expert SwiGLU tables the batch's
+    ``n_slots·top_k`` routing draws actually hit
+    (:func:`expected_distinct_experts` per layer, at each layer's LIVE
+    expert count and storage dtype). ``weight_dtype`` is the storage dtype
+    of the expert tables (of the merged suffix when ``cfg`` is compressed —
+    ``prefix_weight_dtype`` then covers the untouched prefix stack).
+
+    Returns a component breakdown plus ``bytes_per_token`` and
+    ``flops_per_token``; feed those to :func:`roofline_terms` for the
+    bandwidth-bound tok/s ceiling (``1 / t_memory_s``). Numbers target the
+    roofline constants above — they are a MODEL of the TPU serving path,
+    not a measurement of this host.
+    """
+    from repro.core.plan import expert_bytes   # single byte-model source
+
+    pb = cfg.param_dtype.itemsize
+    m = cfg.moe
+    L = cfg.n_layers
+    draws = n_slots * (m.top_k if m else 0)
+
+    # per-layer live expert counts + storage dtype
+    layers = []                                   # (live, dtype) per layer
+    if m is not None:
+        if cfg.moe_merged:
+            live = cfg.live_experts_per_suffix_layer()
+            layers += [(m.n_experts, prefix_weight_dtype)] * cfg.moe_split
+            layers += [(int(v), weight_dtype) for v in live]
+        else:
+            layers += [(m.n_experts, weight_dtype)] * L
+
+    moe_b = 0.0
+    router_b = 0.0
+    shared_b = 0.0
+    for live, wdt in layers:
+        moe_b += (expected_distinct_experts(live, draws)
+                  * expert_bytes(cfg, wdt))
+        router_b += cfg.d_model * m.n_experts * 4          # router is fp32
+        shared_b += m.n_shared_experts * 3 * cfg.d_model * m.d_ff_expert * pb
+
+    attn_b = float(L * cfg.attn_params_per_layer() * pb)
+    if cfg.moe is None:
+        attn_b += L * cfg.dense_mlp_params_per_layer() * pb
+    head_b = float(cfg.vocab_size * cfg.d_model * pb)      # lm head read
+    kv_b = float(L * n_slots * (pos + 1) * cfg.n_kv_heads * cfg.hd * 2 * pb)
+
+    step = moe_b + router_b + shared_b + attn_b + head_b + kv_b
+    return {
+        "n_slots": float(n_slots),
+        "pos": float(pos),
+        "moe_expert_bytes_per_step": moe_b,
+        "router_bytes_per_step": router_b,
+        "shared_bytes_per_step": shared_b,
+        "attn_weight_bytes_per_step": attn_b,
+        "lm_head_bytes_per_step": head_b,
+        "kv_bytes_per_step": kv_b,
+        "bytes_per_step": step,
+        "bytes_per_token": step / max(n_slots, 1),
+        "moe_expert_bytes_per_token": moe_b / max(n_slots, 1),
+        # 2 FLOPs per active weight per token (napkin 2·N_active·D)
+        "flops_per_token": 2.0 * cfg.param_count(active_only=True),
+    }

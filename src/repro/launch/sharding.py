@@ -35,6 +35,14 @@ RULES: List[Tuple[str, Tuple]] = [
     # gathers for larger activation reduce-scatters; §Perf iteration A5.)
     (r"moe/(wg|wu)$",        ("M", "D", None)),     # [.., E, d@D, f]
     (r"moe/wd$",             ("M", None, "D")),     # [.., E, f, d@D]
+    # int8 expert tables (DESIGN.md §8): same EP/FSDP layout as the bf16
+    # leaves; the per-output-channel scales shard the expert dim only (the
+    # keepdim axis is 1 and the channel dim must stay whole next to its
+    # table's unsharded channel dim). Must precede the catch-all
+    # "ln|scale" rule, which would otherwise replicate *_scale.
+    (r"moe/qexp/(wg|wu)$",   ("M", "D", None)),     # int8 [.., E, d@D, f]
+    (r"moe/qexp/wd$",        ("M", None, "D")),     # int8 [.., E, f, d@D]
+    (r"moe/qexp/\w+_scale$", ("M", None, None)),    # f32 [.., E, 1, ch]
     (r"moe/router$",         (None, None)),         # tiny, replicated
     (r"moe/remap$",          (None,)),
     (r"moe/live$",           ()),                    # per-layer scalar

@@ -22,6 +22,15 @@ paper's implicit-A trick (App. B) with an XLA-friendly gather.
 Calibration capture: ``moe_apply(..., capture=True)`` additionally returns
 the expert-input activations and per-expert usage counts that
 ``repro.core`` consumes to build the merge.
+
+Quantized expert tables (DESIGN.md §8): a layer whose params carry a
+``qexp`` subtree instead of ``wg/wu/wd`` stores the tables as int8 plus
+per-expert-per-output-channel fp32 scales
+(:class:`repro.core.quant.QuantizedExpertTables`). All three dispatch paths
+accept it — ragged and gather route through the int8 kernels (dequant fused
+in-kernel), dense dequantizes up front (train/dry-run path, not
+bandwidth-bound). Routing, remap, and the §5 live-masking are untouched:
+quantization changes the bits under the expert tables, never the dispatch.
 """
 from __future__ import annotations
 
@@ -81,7 +90,18 @@ def moe_init(cfg: ModelConfig, key, n_real: int | None = None) -> dict:
 
 def n_real_experts(p: dict) -> int:
     """Number of physically stored experts (M after compression, else N)."""
+    if "qexp" in p:
+        return p["qexp"]["wg"].shape[0]
     return p["wg"].shape[0]
+
+
+def _quant_tables(p: dict):
+    """The layer's ``QuantizedExpertTables`` view, or None when the tables
+    are plain bf16/f32 leaves."""
+    if "qexp" not in p:
+        return None
+    from repro.core.quant import QuantizedExpertTables
+    return QuantizedExpertTables.from_tree(p["qexp"])
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +238,13 @@ def _moe_dense_groups(cfg: ModelConfig, p: dict, x2: jax.Array, w, idx):
         lambda wg, ig: _dispatch_tensors(cfg, wg, ig, E, C))(w, idx)
 
     dt = x2.dtype
+    qt = _quant_tables(p)
+    if qt is not None:
+        # dense dispatch is the train/dry-run path — not bandwidth-bound, so
+        # a one-shot dequant to the activation dtype before the einsum keeps
+        # it simple (ragged/gather stream int8 through the kernels instead).
+        wg_t, wu_t, wd_t = qt.dequant(dt)
+        p = dict(p, wg=wg_t, wu=wu_t, wd=wd_t)
     # dispatched tokens: groups stay on the batch axes, experts go to "model"
     # (expert parallelism; GSPMD realizes the reshard as an all-to-all)
     xe = ein("gtec,gtd->gecd", dispatch.astype(dt), x2).astype(dt)           # [g,E,C,d]
@@ -253,7 +280,11 @@ def _moe_ragged(cfg: ModelConfig, p: dict, xf: jax.Array, w, idx):
     group_sizes = jnp.bincount(flat_idx, length=E).astype(jnp.int32)
 
     from repro.kernels import ops as kops
-    ys = kops.grouped_swiglu(xs, p["wg"], p["wu"], p["wd"], group_sizes)
+    qt = _quant_tables(p)
+    if qt is not None:
+        ys = kops.grouped_swiglu_q(xs, qt, group_sizes)
+    else:
+        ys = kops.grouped_swiglu(xs, p["wg"], p["wu"], p["wd"], group_sizes)
 
     wf = w.reshape(-1)[order].astype(F32)            # weight per sorted slot
     out = jnp.zeros((T, d), F32).at[tok_of].add(ys.astype(F32) * wf[:, None])
@@ -272,8 +303,12 @@ def _moe_gather(cfg: ModelConfig, p: dict, xf: jax.Array, w, idx):
     (``kernels/decode_moe.py``). Per-row arithmetic and the fp32 combine
     match :func:`_moe_ragged` exactly."""
     from repro.kernels import ops as kops
-    y = kops.gather_swiglu(xf, p["wg"], p["wu"], p["wd"], idx,
-                           w.astype(F32))
+    qt = _quant_tables(p)
+    if qt is not None:
+        y = kops.gather_swiglu_q(xf, qt, idx, w.astype(F32))
+    else:
+        y = kops.gather_swiglu(xf, p["wg"], p["wu"], p["wd"], idx,
+                               w.astype(F32))
     return y.astype(xf.dtype)
 
 

@@ -200,17 +200,34 @@ class Engine:
         c = self.counters
         return (c["device_calls"] + c["host_syncs"]) / max(c["tokens_out"], 1)
 
-    def submit(self, prompt, max_new_tokens: int, eos_token: int | None = None,
-               arrival_time: float = 0.0, uid: int | None = None) -> Request:
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
+    def _validate_request(self, prompt: np.ndarray,
+                          max_new_tokens: int) -> None:
+        """Reject requests that cannot be served, with the reason spelled
+        out. A prompt must fit its prefill bucket AND leave generation room
+        in the slot; anything longer used to be silently clamped by
+        ``bucket_for`` and would corrupt the slot — now it is an error at
+        SUBMISSION time (the only place the caller can react)."""
         if prompt.size == 0:
             raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        big = min(max(self._buckets, default=1), self.ec.s_max)
+        if prompt.size > self.ec.s_max:
+            raise ValueError(
+                f"prompt length {prompt.size} cannot fit any prefill bucket: "
+                f"the largest admissible bucket is capped by slot capacity "
+                f"s_max={self.ec.s_max} (declared buckets "
+                f"{tuple(self._buckets)} top out at {big}); shorten the "
+                f"prompt or raise s_max")
         if prompt.size + max_new_tokens > self.ec.s_max:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds slot capacity s_max={self.ec.s_max}")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+
+    def submit(self, prompt, max_new_tokens: int, eos_token: int | None = None,
+               arrival_time: float = 0.0, uid: int | None = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self._validate_request(prompt, max_new_tokens)
         if uid is None:
             uid = self._next_uid
         self._next_uid = max(self._next_uid, uid) + 1
@@ -299,6 +316,14 @@ class Engine:
     def run(self, requests: Sequence[Request] | None = None) -> List[Request]:
         """Drive until every pending/submitted request completes."""
         if requests:
+            # externally built Request objects get the same admission
+            # contract as submit() — an oversized prompt must fail here, not
+            # deep inside a prefill scatter. Validate the WHOLE batch before
+            # enqueuing anything, so a rejected call leaves the engine
+            # exactly as it found it (no half-enqueued requests).
+            for r in requests:
+                self._validate_request(np.asarray(r.prompt, np.int32),
+                                       r.max_new_tokens)
             for r in requests:
                 heapq.heappush(self._pending,
                                (r.arrival_time, r.uid, next(self._seq), r))
@@ -307,6 +332,31 @@ class Engine:
         while not self.idle:
             done.extend(advance())
         return sorted(done, key=lambda r: r.uid)
+
+    def expert_weight_dtypes(self) -> Tuple[str, str]:
+        """(prefix, suffix/uncompressed) expert-table storage dtypes,
+        inferred from the parameter tree ('int8' when a stack carries the
+        quantized ``qexp`` subtree, DESIGN.md §8)."""
+        def one(stack_key):
+            stack = self.params.get(stack_key)
+            if stack is None or "moe" not in stack:
+                return "bf16"
+            return "int8" if "qexp" in stack["moe"] else "bf16"
+        return one("stack"), one("stack_c" if "stack_c" in self.params
+                                 else "stack")
+
+    def modeled_decode_traffic(self, pos: int | None = None) -> Dict[str, float]:
+        """Analytic HBM bytes for one steady-state decode step of this
+        engine (``launch.hlo_analysis.decode_traffic_model`` at the served
+        config, weight dtypes read off the actual parameter tree). ``pos``
+        defaults to mid-cache, matching :meth:`bench_decode`'s scratch
+        state."""
+        from repro.launch.hlo_analysis import decode_traffic_model
+        prefix_dt, suffix_dt = self.expert_weight_dtypes()
+        return decode_traffic_model(
+            self.cfg, n_slots=self.ec.n_slots,
+            pos=self.ec.s_max // 2 if pos is None else pos,
+            weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt)
 
     def bench_decode(self, iters: int = 50,
                      k_steps: int | None = None) -> Dict[str, float]:
@@ -318,10 +368,16 @@ class Engine:
         ``{"tok_per_s", "dispatches_per_s", "host_dispatches_per_token",
         "k_steps"}`` — tokens/sec AND host dispatches/sec, since the fused
         loop improves the latter even where CPU model math dominates the
-        former. The ``pos`` reset needed to keep the scratch cache in bounds
-        is fused INTO the jitted block (no host-side clamp op inside the
-        timed loop, which previously added a dispatch per iteration and
-        skewed the measurement)."""
+        former — plus the MODELED HBM traffic of the served config
+        (``hbm_bytes_per_token``, ``moe_expert_bytes_per_token``) and the
+        bandwidth-roofline ceiling it implies
+        (``roofline_tok_per_s = 1/max(t_memory, t_compute)`` from
+        ``hlo_analysis.roofline_terms``, with ``roofline_fraction`` = the
+        measured tok/s against it; on CPU that fraction is noise — the
+        modeled bytes are the portable signal). The ``pos`` reset needed to
+        keep the scratch cache in bounds is fused INTO the jitted block (no
+        host-side clamp op inside the timed loop, which previously added a
+        dispatch per iteration and skewed the measurement)."""
         K = int(self.ec.decode_block if k_steps is None else k_steps)
         n = self.ec.n_slots
         s_max = self.ec.s_max
@@ -352,13 +408,25 @@ class Engine:
             out, _, cache = fn(self.params, cache, toks, act, rem, eos, key)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
+        tok_per_s = n * K * iters / dt
+        from repro.launch.hlo_analysis import roofline_terms
+        traffic = self.modeled_decode_traffic()
+        terms = roofline_terms(traffic["flops_per_token"],
+                               traffic["bytes_per_token"], 0.0)
+        roof = 1.0 / max(terms["t_memory_s"], terms["t_compute_s"], 1e-30)
         return {
-            "tok_per_s": n * K * iters / dt,
+            "tok_per_s": tok_per_s,
             "dispatches_per_s": iters / dt,
             # 1 jitted call + 1 readback per block — same crossings-counting
             # definition as Engine.host_dispatches_per_token
             "host_dispatches_per_token": 2.0 / (n * K),
             "k_steps": K,
+            # modeled traffic (TPU roofline target, not a host measurement)
+            "hbm_bytes_per_token": traffic["bytes_per_token"],
+            "moe_expert_bytes_per_token":
+                traffic["moe_expert_bytes_per_token"],
+            "roofline_tok_per_s": roof,
+            "roofline_fraction": tok_per_s / roof,
         }
 
     # ------------------------------------------------------------ internals
@@ -373,8 +441,13 @@ class Engine:
     def bucket_for(self, n: int) -> int:
         """Prefill pad length for an ``n``-token prompt (the jit
         specialization it will compile into). Clamped to ``s_max`` so a
-        bucket never outgrows the slot it is inserted into (``submit``
-        guarantees the prompt itself fits)."""
+        bucket never outgrows the slot it is inserted into; lengths beyond
+        ``s_max`` have no admissible bucket and raise (``submit`` rejects
+        them up front with the full context — this is the fail-closed
+        backstop for callers probing bucket shapes directly)."""
+        if n > self.ec.s_max:
+            raise ValueError(
+                f"no prefill bucket fits {n} tokens (s_max={self.ec.s_max})")
         for b in self._buckets:
             if n <= b:
                 return min(b, self.ec.s_max)

@@ -153,6 +153,87 @@ def test_load_compressed_rejects_plain_checkpoint(tmp_path):
         CKPT.load_compressed(tmp_path)
 
 
+@pytest.fixture(scope="module")
+def compressed_int8():
+    """The same heterogeneous plan executed with weight_dtype='int8'
+    (DESIGN.md §8): suffix tables stored as int8 + per-channel scales."""
+    cfg = configs.get(ARCH).reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    plan = PLAN.CompressionPlan((
+        PLAN.LayerSpec(0, "mergemoe", 4),
+        PLAN.LayerSpec(1, "msmoe", 2),
+    ), weight_dtype="int8")
+    ncfg, nparams, info = CMP.compress_with_plan(cfg, params, plan,
+                                                 batches=calib)
+    return ncfg, nparams, plan, info
+
+
+def test_int8_artifact_roundtrip_bitwise(tmp_path, compressed_int8):
+    """Int8 hetero artifacts store the six qexp leaves unpadded per layer
+    and reload bitwise (int8 rides npy natively; zero pad rows and zero
+    scales re-pad exactly)."""
+    ncfg, nparams, plan, info = compressed_int8
+    d = CKPT.save_compressed(tmp_path, ncfg, nparams, plan=plan, report=info)
+    meta = json.loads((d / "meta.json").read_text())
+    shapes = [tuple(l["shape"]) for l in meta["leaves"]]
+    dtypes = [l["dtype"] for l in meta["leaves"]]
+    f = ncfg.moe.d_ff_expert
+    assert (4, ncfg.d_model, f) in shapes            # layer 0 live rows
+    assert (2, ncfg.d_model, f) in shapes            # layer 1 live rows
+    assert (2, 4, ncfg.d_model, f) not in shapes     # no padded stack on disk
+    assert "int8" in dtypes                          # tables stored as int8
+    cfg2, params2, art = CKPT.load_compressed(tmp_path)
+    assert cfg2 == ncfg
+    moe = params2["stack_c"]["moe"]
+    assert "qexp" in moe and "wg" not in moe
+    assert moe["qexp"]["wg"].dtype == jnp.int8
+    assert moe["qexp"]["wg_scale"].dtype == jnp.float32
+    la, lb = jax.tree.leaves(nparams), jax.tree.leaves(params2)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert PLAN.CompressionPlan.from_json_dict(art["plan"]).weight_dtype \
+        == "int8"
+    assert art["report"]["weight_dtype"] == "int8"
+
+
+def test_int8_artifact_smaller_than_bf16(tmp_path, compressed,
+                                         compressed_int8):
+    """Same merge, int8 storage: the on-disk artifact shrinks (scales are
+    fp32 in npy, int8 tables one byte/weight vs bf16's f32 npy detour —
+    compare the report's live-byte accounting, which is dtype-true)."""
+    _, _, _, info_bf = compressed
+    _, _, _, info_q = compressed_int8
+    assert info_q["bytes_compressed"] < info_bf["bytes_compressed"]
+    assert info_q["compression_ratio"] > info_bf["compression_ratio"]
+
+
+def test_int8_engine_from_checkpoint_token_parity(tmp_path, compressed_int8):
+    """Engine.from_checkpoint serves int8 artifacts directly: the reloaded
+    artifact decodes token-for-token identically to the in-memory quantized
+    model through the gather path."""
+    ncfg, nparams, plan, info = compressed_int8
+    CKPT.save_compressed(tmp_path, ncfg, nparams, plan=plan, report=info)
+    prompts = np.random.default_rng(2).integers(
+        0, ncfg.vocab_size, size=(3, 12), dtype=np.int32)
+    ec = EngineConfig(arch=ARCH, n_slots=2, s_max=48, prefill_buckets=(16,))
+
+    def generate(eng):
+        reqs = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        eng.run()
+        return [r.out_tokens for r in reqs]
+
+    mem = generate(Engine(ec, cfg=ncfg, params=nparams))
+    eng2 = Engine.from_checkpoint(tmp_path, ec=ec)
+    assert eng2.expert_weight_dtypes()[1] == "int8"
+    assert generate(eng2) == mem
+
+
 def test_engine_from_checkpoint_token_parity(tmp_path, compressed):
     """Acceptance: the reloaded artifact decodes token-for-token identically
     to the in-memory compressed model, through the continuous-batching

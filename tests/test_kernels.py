@@ -1,11 +1,16 @@
 """Per-kernel interpret-mode validation against the pure-jnp oracles in
-repro.kernels.ref — shape/dtype sweeps + hypothesis property tests."""
+repro.kernels.ref — shape/dtype sweeps + hypothesis property tests. The
+int8 sweeps assert BITWISE equality with the jnp dequant oracles
+(DESIGN.md §8): the kernels keep the dequantized weights at fp32 with a
+single output-side downcast, so there is no rounding XLA can cancel or
+contract out from under the comparison."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.core import quant as Q
 from repro.kernels import ref
 from repro.kernels import swiglu as K_swiglu
 from repro.kernels import flash_attention as K_fa
@@ -292,6 +297,151 @@ def test_gather_property(T, E, k, seed):
     np.testing.assert_allclose(
         np.asarray(y), np.asarray(ref.gather_swiglu(x, wg, wu, wd, idx, w)),
         atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 kernels (fused dequant) — bitwise vs the jnp dequant oracles
+# ---------------------------------------------------------------------------
+
+def _quant_inputs(T, d, f, E, k, dtype, seed=0, live=None):
+    """Random int8-quantized tables (+ optional hetero zero pad rows beyond
+    ``live``), routing restricted to live rows."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((T, d)) * 0.5, dtype)
+    wg = jnp.asarray(rng.standard_normal((E, d, f)) * 0.2, dtype)
+    wu = jnp.asarray(rng.standard_normal((E, d, f)) * 0.2, dtype)
+    wd = jnp.asarray(rng.standard_normal((E, f, d)) * 0.2, dtype)
+    if live is not None:
+        wg, wu, wd = (w.at[live:].set(0) for w in (wg, wu, wd))
+    qt = Q.quantize_expert_tables(wg, wu, wd)
+    idx = jnp.asarray(rng.integers(0, live or E, (T, k)), jnp.int32)
+    w = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((T, k)), jnp.float32), axis=-1)
+    return x, qt, idx, w
+
+
+@pytest.mark.parametrize("T,d,f,E,k", [
+    (4, 24, 32, 8, 2),      # decode shape: n_slots tokens
+    (1, 16, 16, 4, 1),      # single token, single expert
+    (8, 32, 48, 8, 3),      # k > 2
+    (6, 16, 16, 8, 4),      # k == 4
+    (3, 16, 32, 2, 2),      # tiny expert table
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_swiglu_q_bitwise(T, d, f, E, k, dtype):
+    """Int8 gather kernel == jnp dequant oracle, BIT FOR BIT."""
+    x, qt, idx, w = _quant_inputs(T, d, f, E, k, dtype, seed=T + k)
+    y = K_dm.gather_swiglu_q(x, qt, idx, w, interpret=True)
+    yr = ref.gather_swiglu_q(x, qt, idx, w)
+    assert y.shape == (T, d) and y.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(yr, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_swiglu_q_duplicate_topk_bitwise(dtype):
+    """Duplicate top-k experts (the post-merge remap collision case) stay
+    bitwise: the same expert's contribution enters the fp32 combine once
+    per slot with its own weight."""
+    x, qt, _, w = _quant_inputs(4, 16, 16, 4, 2, dtype, seed=5)
+    idx = jnp.asarray([[1, 1], [2, 0], [3, 3], [0, 0]], jnp.int32)
+    y = K_dm.gather_swiglu_q(x, qt, idx, w, interpret=True)
+    yr = ref.gather_swiglu_q(x, qt, idx, w)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(yr, np.float32))
+    # weights summing on one expert == that expert's full output
+    deq = qt.dequant(dtype)
+    one = ref.gather_swiglu(x[:1], *deq, jnp.asarray([[1]], jnp.int32),
+                            jnp.ones((1, 1), jnp.float32))
+    np.testing.assert_allclose(np.asarray(y[0], np.float32),
+                               np.asarray(one[0], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_swiglu_q_hetero_live_masked_bitwise(dtype):
+    """Hetero live-masked tables: pad rows are zeros with zero scales;
+    routing stays below ``live``. Kernel == oracle bitwise, and a poisoned
+    OOB id clips identically on both sides."""
+    x, qt, idx, w = _quant_inputs(5, 16, 16, 8, 2, dtype, seed=9, live=5)
+    y = K_dm.gather_swiglu_q(x, qt, idx, w, interpret=True)
+    yr = ref.gather_swiglu_q(x, qt, idx, w)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(yr, np.float32))
+    bad = jnp.asarray([[11, 0], [1, -7], [0, 0], [1, 1], [2, 2]], jnp.int32)
+    yb = K_dm.gather_swiglu_q(x, qt, bad, w, interpret=True)
+    yrb = ref.gather_swiglu_q(x, qt, bad, w)
+    assert np.isfinite(np.asarray(yb, np.float32)).all()
+    np.testing.assert_array_equal(np.asarray(yb, np.float32),
+                                  np.asarray(yrb, np.float32))
+
+
+@pytest.mark.parametrize("sizes", [
+    [10, 0, 37, 17],        # empty group
+    [1, 1, 1, 1, 60],       # tiny + dominant groups
+    [40, 0, 24, 0, 16, 0, 8, 0],   # post-merge: absorbed buckets empty
+    [0, 0, 0, 0],           # fully empty (T == 0)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_swiglu_q_bitwise(sizes, dtype):
+    """Int8 grouped kernel == jnp dequant oracle bitwise with the f axis
+    unblocked (block_f >= f), including zero-sized groups."""
+    d, f = 24, 32
+    E = len(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    T = int(gs.sum())
+    x, qt, _, _ = _quant_inputs(max(T, 1), d, f, E, 2, dtype, seed=E)
+    x = x[:T]
+    y = K_gm.grouped_swiglu_q(x, qt, gs, block_t=16, block_f=f,
+                              interpret=True)
+    yr = ref.grouped_swiglu_q(x, qt, gs)
+    assert y.shape == (T, d)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(yr, np.float32))
+
+
+def test_grouped_swiglu_q_blocked_f_allclose():
+    """Blocking the f axis reassociates the fp32 accumulation across
+    f-blocks — allclose, not bitwise (DESIGN.md §8)."""
+    d, f = 16, 32
+    gs = jnp.asarray([5, 3, 0, 8], jnp.int32)
+    x, qt, _, _ = _quant_inputs(16, d, f, 4, 2, jnp.float32, seed=3)
+    y = K_gm.grouped_swiglu_q(x, qt, gs, block_t=8, block_f=16,
+                              interpret=True)
+    yr = ref.grouped_swiglu_q(x, qt, gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gather_q_matches_grouped_q_composition():
+    """Int8 gather == the int8 ragged pipeline (sort, grouped_q kernel,
+    fp32 weighted scatter-add) on the same routing — the §8 extension of
+    the dispatch-parity contract at kernel granularity."""
+    T, d, f, E, k = 6, 24, 32, 8, 2
+    x, qt, idx, w = _quant_inputs(T, d, f, E, k, jnp.float32, seed=13)
+    y = K_dm.gather_swiglu_q(x, qt, idx, w, interpret=True)
+
+    flat = np.asarray(idx).reshape(-1)
+    order = np.argsort(flat, kind="stable")
+    tok_of = order // k
+    xs = x[tok_of]
+    gs = jnp.asarray(np.bincount(flat, minlength=E), jnp.int32)
+    ys = K_gm.grouped_swiglu_q(xs, qt, gs, block_t=8, block_f=f,
+                               interpret=True)
+    wf = np.asarray(w).reshape(-1)[order]
+    out = np.zeros((T, d), np.float32)
+    np.add.at(out, tok_of, np.asarray(ys, np.float32) * wf[:, None])
+    np.testing.assert_allclose(np.asarray(y), out, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(T=st.sampled_from([1, 3, 8]), E=st.sampled_from([2, 8]),
+       k=st.sampled_from([1, 2, 4]), seed=st.integers(0, 100))
+def test_gather_q_property_bitwise(T, E, k, seed):
+    x, qt, idx, w = _quant_inputs(T, 16, 16, E, k, jnp.float32, seed=seed)
+    y = K_dm.gather_swiglu_q(x, qt, idx, w, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.gather_swiglu_q(x, qt, idx, w)))
 
 
 def test_grouped_matches_single_expert_swiglu():

@@ -1,0 +1,255 @@
+"""Int8 expert-weight quantization (repro.core.quant, DESIGN.md §8):
+property tests for the per-channel error bound, zero-channel exactness,
+determinism, tree surgery, and the plan/compress integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import configs
+from repro.core import compress as CMP
+from repro.core import plan as PLAN
+from repro.core import quant as Q
+from repro.models import model as MD
+from repro.models import moe as MoE
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(E=st.sampled_from([1, 3, 8]), rows=st.sampled_from([4, 16, 33]),
+       cols=st.sampled_from([1, 8, 24]),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       scale_pow=st.integers(-6, 6), seed=st.integers(0, 1000))
+def test_quant_dequant_error_bounded_by_half_scale(E, rows, cols, dtype,
+                                                   scale_pow, seed):
+    """|w - dequant(quant(w))| <= scale/2 per (expert, output channel) —
+    the round-to-nearest symmetric-quantization bound, at any shape, input
+    dtype, and magnitude (scales are per-channel, so wildly different
+    channel norms must not leak error across channels)."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((E, rows, cols)) * (2.0 ** scale_pow)
+    # heterogeneous channel norms: scale each output channel independently
+    w = w * (2.0 ** rng.integers(-3, 4, size=(1, 1, cols)))
+    w = jnp.asarray(w, jnp.dtype(dtype))
+    q, s = Q.quantize_channelwise(w)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert q.shape == w.shape and s.shape == (E, 1, cols)
+    deq = np.asarray(Q.dequantize(q, s, jnp.float32))
+    w32 = np.asarray(w, np.float32)
+    bound = np.asarray(s) / 2.0
+    # tiny epsilon absorbs the fp32 rounding of the q*scale product itself
+    assert (np.abs(w32 - deq) <= bound + 1e-6 * np.abs(w32) + 1e-30).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_quant_deterministic_and_symmetric(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((2, 8, 4)), jnp.float32)
+    q1, s1 = Q.quantize_channelwise(w)
+    q2, s2 = Q.quantize_channelwise(w)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # symmetric range: the channel max hits +-127 exactly, never saturates
+    assert int(np.abs(np.asarray(q1)).max()) == 127
+    qn, sn = Q.quantize_channelwise(-w)
+    np.testing.assert_array_equal(np.asarray(qn), -np.asarray(q1))
+    np.testing.assert_array_equal(np.asarray(sn), np.asarray(s1))
+
+
+def test_quant_zero_channels_exact():
+    """All-zero channels (hetero pad rows, DESIGN.md §5) must quantize to
+    q == 0 with scale == 0 and dequantize back to exact zeros — no NaNs
+    from the 0/0 scale."""
+    w = jnp.zeros((3, 4, 5), jnp.bfloat16).at[0, :, 2].set(1.5)
+    q, s = Q.quantize_channelwise(w)
+    assert np.isfinite(np.asarray(s)).all()
+    zero = np.ones((3, 1, 5), bool)
+    zero[0, 0, 2] = False
+    assert (np.asarray(s)[zero] == 0).all()
+    deq = np.asarray(Q.dequantize(q, s, jnp.bfloat16), np.float32)
+    ref = np.asarray(w, np.float32)
+    np.testing.assert_array_equal(deq, ref)   # 1.5 is int8-representable
+
+
+def test_exactly_representable_values_roundtrip():
+    """Values on the quantization grid come back bitwise."""
+    s = 0.25
+    grid = jnp.asarray(np.arange(-127, 128, dtype=np.float32) * s)
+    w = jnp.tile(grid[None, :, None], (2, 1, 3))
+    q, scale = Q.quantize_channelwise(w)
+    np.testing.assert_allclose(np.asarray(scale), s, rtol=1e-6)
+    deq = np.asarray(Q.dequantize(q, scale, jnp.float32))
+    np.testing.assert_allclose(deq, np.asarray(w), rtol=1e-6, atol=1e-7)
+
+
+def test_scale_axes_match_output_channels():
+    """wg/wu reduce over d (scales span f); wd reduces over f (scales span
+    d) — the per-OUTPUT-channel convention the kernels' BlockSpecs encode."""
+    E, d, f = 2, 6, 10
+    wg = jnp.asarray(RNG.standard_normal((E, d, f)), jnp.float32)
+    wd = jnp.asarray(RNG.standard_normal((E, f, d)), jnp.float32)
+    qt = Q.quantize_expert_tables(wg, wg, wd)
+    assert qt.wg_scale.shape == (E, 1, f)
+    assert qt.wd_scale.shape == (E, 1, d)
+    assert qt.n_experts == E
+
+
+# ---------------------------------------------------------------------------
+# tree surgery
+# ---------------------------------------------------------------------------
+
+def _moe_params():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    return cfg, MoE.moe_init(cfg, jax.random.PRNGKey(0))
+
+
+def test_quantize_moe_tree_roundtrip():
+    cfg, p = _moe_params()
+    pq = Q.quantize_moe_tree(p)
+    assert Q.is_quantized(pq) and not Q.is_quantized(p)
+    assert sorted(pq["qexp"].keys()) == sorted(Q.QEXP_KEYS)
+    for k in ("router", "remap", "live"):
+        assert pq[k] is p[k]
+    assert "wg" not in pq
+    # view <-> tree
+    qt = Q.QuantizedExpertTables.from_tree(pq["qexp"])
+    assert qt.to_tree().keys() == pq["qexp"].keys()
+    # dequantize_moe_tree restores table leaves within the quant bound
+    back = Q.dequantize_moe_tree(pq, cfg.param_dtype)
+    assert "qexp" not in back and back["wg"].dtype == cfg.param_dtype
+    err = np.abs(np.asarray(back["wg"], np.float32)
+                 - np.asarray(p["wg"], np.float32))
+    assert err.max() <= np.asarray(pq["qexp"]["wg_scale"]).max()
+    # idempotent
+    assert Q.quantize_moe_tree(pq)["qexp"] is not None
+
+
+def test_quantize_model_experts_covers_both_stacks():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (2, 32),
+                                           0, cfg.vocab_size)}]
+    ncfg, nparams, _ = CMP.compress_model(
+        cfg, params, method="mergemoe",
+        merged_experts=cfg.moe.n_experts // 2, split=1, batches=calib)
+    q = Q.quantize_model_experts(nparams)
+    assert Q.is_quantized(q["stack"]["moe"])
+    assert Q.is_quantized(q["stack_c"]["moe"])
+    # non-moe leaves untouched
+    assert q["embed"] is nparams["embed"]
+
+
+# ---------------------------------------------------------------------------
+# plan + compress integration
+# ---------------------------------------------------------------------------
+
+def test_plan_weight_dtype_roundtrip_and_validation():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    plan = PLAN.uniform(cfg, merged_experts=4, split=0, weight_dtype="int8")
+    again = PLAN.CompressionPlan.from_json(plan.to_json())
+    assert again == plan and again.weight_dtype == "int8"
+    # back-compat: pre-int8 plan files have no weight_dtype -> bf16
+    d = plan.to_json_dict()
+    del d["weight_dtype"]
+    assert PLAN.CompressionPlan.from_json_dict(d).weight_dtype == "bf16"
+    # mesh annotation preserves the dtype
+    assert plan.with_mesh({"data": 2}).weight_dtype == "int8"
+    with pytest.raises(ValueError, match="weight_dtype"):
+        PLAN.CompressionPlan(plan.specs,
+                             weight_dtype="fp4").validate(cfg)
+
+
+def test_compress_with_plan_int8_quantizes_suffix():
+    """weight_dtype='int8' replaces the suffix tables with a qexp subtree;
+    the merge itself is identical to the bf16 plan (solves are
+    deterministic), so dequantized tables sit within one scale step of the
+    bf16 ones and the byte accounting reflects the int8 storage."""
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    specs = tuple(PLAN.LayerSpec(l, "mergemoe", 4 - l)
+                  for l in range(cfg.n_layers))       # hetero M: 4, 3
+    p8 = PLAN.CompressionPlan(specs, weight_dtype="int8").validate(cfg)
+    pbf = PLAN.CompressionPlan(specs, weight_dtype="bf16").validate(cfg)
+    c8, q8, i8 = CMP.compress_with_plan(cfg, params, p8, batches=calib,
+                                        calib_policy="head")
+    cb, qb, ib = CMP.compress_with_plan(cfg, params, pbf, batches=calib,
+                                        calib_policy="head")
+    assert c8 == cb                                    # same config view
+    moe8 = q8["stack_c"]["moe"]
+    assert Q.is_quantized(moe8) and "wg" not in moe8
+    assert moe8["qexp"]["wg"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(moe8["remap"]),
+                                  np.asarray(qb["stack_c"]["moe"]["remap"]))
+    # int8 storage compresses strictly further at identical merge
+    assert i8["weight_dtype"] == "int8" and ib["weight_dtype"] == "bf16"
+    assert i8["bytes_compressed"] < ib["bytes_compressed"]
+    assert i8["compression_ratio"] > ib["compression_ratio"]
+    # dequantized tables within the per-channel bound of the bf16 merge
+    deq = np.asarray(Q.dequantize(moe8["qexp"]["wg"],
+                                  moe8["qexp"]["wg_scale"], jnp.float32))
+    ref = np.asarray(qb["stack_c"]["moe"]["wg"], np.float32)
+    bound = np.asarray(moe8["qexp"]["wg_scale"]) / 2 + 5e-3 * np.abs(ref)
+    assert (np.abs(deq - ref) <= bound + 1e-6).all()
+    # pad rows (hetero layer 1 has M=3 of max 4) quantize to exact zeros
+    assert (np.asarray(moe8["qexp"]["wg"])[1, 3:] == 0).all()
+    assert (np.asarray(moe8["qexp"]["wg_scale"])[1, 3:] == 0).all()
+
+
+def test_expert_bytes_int8_accounting():
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    d, f = cfg.d_model, cfg.moe.d_ff_expert
+    assert PLAN.expert_bytes(cfg) == 3 * d * f * 2
+    assert PLAN.expert_bytes(cfg, "int8") == 3 * d * f + 4 * (2 * f + d)
+    assert PLAN.expert_bytes(cfg, "int8") < PLAN.expert_bytes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-path parity on quantized params
+# ---------------------------------------------------------------------------
+
+def test_int8_gather_matches_int8_ragged_at_moe_level():
+    """The int8 gather and ragged paths consume the same dequantized values
+    through the same fp32 combine — bitwise-identical MoE outputs at decode
+    shape (the §7 dispatch-parity contract, carried over to §8)."""
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    p = Q.quantize_moe_tree(MoE.moe_init(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model),
+                          cfg.param_dtype)
+    out = {}
+    for disp in ("gather", "ragged"):
+        c = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch=disp))
+        out[disp] = np.asarray(MoE.moe_apply(c, p, x, need_aux=False).y,
+                               np.float32)
+    np.testing.assert_array_equal(out["gather"], out["ragged"])
+
+
+def test_int8_dense_path_runs_and_tracks_ragged():
+    """Dense (capacity) dispatch accepts the qexp leaf too — train/dry-run
+    paths keep working on quantized artifacts. Dense is GShard-lossy, so
+    the contract is allclose-on-kept-tokens at generous capacity, not
+    bitwise."""
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = Q.quantize_moe_tree(MoE.moe_init(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 4, cfg.d_model),
+                          cfg.param_dtype)
+    cd = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="dense"))
+    cr = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
+    yd = np.asarray(MoE.moe_apply(cd, p, x).y, np.float32)
+    yr = np.asarray(MoE.moe_apply(cr, p, x).y, np.float32)
+    assert np.isfinite(yd).all()
+    # bf16 intermediates differ between the einsum and kernel-oracle paths
+    # even UNQUANTIZED (~0.1 abs on O(20) outputs); the tolerance covers
+    # that baseline, not quantization error
+    np.testing.assert_allclose(yd, yr, atol=0.3, rtol=0.05)

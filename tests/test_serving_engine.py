@@ -171,6 +171,76 @@ def test_submit_validation(setup):
         eng.submit(np.zeros(0, np.int32), max_new_tokens=1)
 
 
+def test_submit_rejects_unservable_prompts_at_boundaries(setup):
+    """An oversized prompt must fail AT SUBMISSION with a clear error, not
+    be silently clamped into a bucket it cannot fit (regression: bucket_for
+    used to clamp to s_max unconditionally). Boundary sweep: the largest
+    servable length is s_max - max_new_tokens, exactly."""
+    cfg, params, _, _, _ = setup
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
+                              prefill_buckets=(8, 16)), cfg=cfg, params=params)
+    # exactly fits: prompt + max_new == s_max
+    ok = eng.submit(np.ones(28, np.int32), max_new_tokens=4)
+    eng.run()
+    assert len(ok.out_tokens) == 4
+    # one past the slot budget
+    with pytest.raises(ValueError, match="exceeds slot capacity"):
+        eng.submit(np.ones(29, np.int32), max_new_tokens=4)
+    # longer than the slot itself: no bucket can ever fit it — the message
+    # must say so (names the bucket ceiling and s_max)
+    with pytest.raises(ValueError, match="cannot fit any prefill bucket"):
+        eng.submit(np.ones(33, np.int32), max_new_tokens=1)
+    # bucket_for itself fails closed past s_max...
+    with pytest.raises(ValueError, match="no prefill bucket fits"):
+        eng.bucket_for(33)
+    assert eng.bucket_for(32) == 32       # ...and clamps at the boundary
+    # run(requests=...) applies the same contract to hand-built requests,
+    # and rejection is ATOMIC: a bad request anywhere in the batch leaves
+    # the engine untouched — valid requests earlier in the list must not
+    # stay enqueued on a failed call
+    from repro.serving.engine import Request
+    good = Request(uid=98, prompt=np.ones(8, np.int32), max_new_tokens=2)
+    bad = Request(uid=99, prompt=np.ones(40, np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="cannot fit any prefill bucket"):
+        eng.run([good, bad])
+    assert eng.idle                       # nothing leaked into the queue
+    done = eng.run([good])                # the valid request serves cleanly
+    assert [r.uid for r in done] == [98] and len(good.out_tokens) == 2
+
+
+def test_int8_engine_serves_and_matches_ragged(setup):
+    """Quantized expert tables (DESIGN.md §8) serve through the engine:
+    int8 gather == int8 ragged token-for-token on a slot-turnover trace,
+    and the modeled decode traffic reports the int8 byte diet."""
+    from repro.core import quant as Q
+    cfg, params, ncfg, nparams, _ = setup
+    qparams = Q.quantize_model_experts(nparams)
+    rng = np.random.default_rng(4)
+    outs = {}
+    for disp in ("gather", "ragged"):
+        eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=64,
+                                  prefill_buckets=(8, 16, 32),
+                                  dispatch=disp),
+                     cfg=ncfg, params=qparams)
+        rng_l = np.random.default_rng(4)
+        reqs = [eng.submit(rng_l.integers(0, cfg.vocab_size, size=l,
+                                          dtype=np.int32),
+                           max_new_tokens=4 + i)
+                for i, l in enumerate([5, 16, 9, 30])]
+        eng.run()
+        outs[disp] = [r.out_tokens for r in reqs]
+        assert eng.expert_weight_dtypes()[1] == "int8"
+    assert outs["gather"] == outs["ragged"]
+    # int8 engine models strictly fewer expert bytes than the bf16 engine
+    e8 = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=64,
+                             prefill_buckets=(8,)), cfg=ncfg, params=qparams)
+    e16 = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=64,
+                              prefill_buckets=(8,)), cfg=ncfg, params=nparams)
+    t8, t16 = e8.modeled_decode_traffic(), e16.modeled_decode_traffic()
+    assert t8["moe_expert_bytes_per_token"] < t16["moe_expert_bytes_per_token"]
+    assert t8["bytes_per_token"] < t16["bytes_per_token"]
+
+
 def _trace_tokens(cfg, params, prompts, lens, arrivals, **ec_kw):
     """Serve one staggered trace; returns ([out_tokens...], engine)."""
     eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=64,
