@@ -146,6 +146,11 @@ def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
         "mean_latency_steps": round(float(np.mean(lat)), 2),
         "p50_latency_steps": round(float(np.percentile(lat, 50)), 2),
         "p95_latency_steps": round(float(np.percentile(lat, 95)), 2),
+        # trace-guard counters over the post-warmup timed trace: any
+        # nonzero value means a decode retrace or an implicit host
+        # transfer crept into the steady state (DESIGN.md §9)
+        "retraces": int(eng.counters["retraces"]),
+        "implicit_transfers": int(eng.counters["implicit_transfers"]),
     }
     print(f"[{label:>22}] {rec['tok_per_s']:8.1f} tok/s trace  "
           f"{rec['steady_decode_tok_per_s']:8.1f} tok/s steady  "

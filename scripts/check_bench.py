@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Serve-bench parity gate (was an inline CI heredoc; now runnable and
+testable locally).
+
+Usage: ``python scripts/check_bench.py [path/to/BENCH_serve.json]``
+
+Asserts, on a BENCH_serve.json produced by ``benchmarks/serve_bench.py``:
+
+* every bitwise-parity bit is true (fused K-step == step-at-a-time decode,
+  gather == ragged dispatch, batched == serial admission);
+* the int8 rows hold their top-1 parity tolerance vs the bf16 rows and
+  store int8 expert tables (DESIGN.md §8), and the full-scale modeled
+  expert stream clears the reduction gate;
+* the trace-guard counters are zero on every post-warmup row — no decode
+  retraces, no implicit host transfers (DESIGN.md §9).
+
+Exit code 0 when every gate passes; 1 with one line per failure otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def _records(d: dict):
+    """(label, record) pairs for every engine row in the summary."""
+    for tag in ("full", "compressed"):
+        for phase, rec in d.get(tag, {}).items():
+            yield f"{tag}/{phase}", rec
+    for tag in ("full", "compressed"):
+        rec = d.get("int8", {}).get(tag)
+        if rec:
+            yield f"int8/{tag}", rec
+
+
+def check(d: dict) -> List[str]:
+    """All gate violations in the summary dict (empty = pass)."""
+    errs: List[str] = []
+    parity = d.get("parity", {})
+    for key in ("fused_vs_step_bitwise", "gather_vs_ragged_bitwise",
+                "batched_vs_serial_admission_bitwise"):
+        if parity.get(key) is not True:
+            errs.append(f"parity.{key} is {parity.get(key)!r}, not True "
+                        f"(parity={parity})")
+
+    i8 = d.get("int8", {})
+    if i8.get("parity_ok") is not True:
+        errs.append(
+            f"int8 top-1 match {i8.get('top1_match_full')}/"
+            f"{i8.get('top1_match_compressed')} below tolerance "
+            f"{i8.get('tolerance')}")
+    for tag in ("full", "compressed"):
+        dt = i8.get(tag, {}).get("weight_dtype")
+        if dt != "int8":
+            errs.append(f"int8.{tag}.weight_dtype is {dt!r}, not 'int8'")
+    if i8.get("expert_stream_ok") is not True:
+        errs.append(f"int8 expert-stream gate failed: "
+                    f"{i8.get('modeled_full_scale')}")
+
+    for label, rec in _records(d):
+        for c in ("retraces", "implicit_transfers"):
+            v = rec.get(c, 0)
+            if v:
+                errs.append(f"{label}: counters[{c!r}] == {v}, expected 0 "
+                            f"(steady-state purity regression)")
+    return errs
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    path = args[0] if args else "benchmarks/BENCH_serve.json"
+    with open(path) as f:
+        d = json.load(f)
+    errs = check(d)
+    for e in errs:
+        print(f"check_bench FAIL: {e}")
+    if errs:
+        return 1
+    i8 = d["int8"]
+    print("serve-bench parity OK:", d["parity"])
+    print("int8 parity-tolerance OK:", i8["top1_match_full"],
+          i8["top1_match_compressed"], ">=", i8["tolerance"])
+    print("int8 expert-stream gate OK (>=", i8["expert_stream_gate"],
+          "x vs bf16 M=N/2)")
+    print("trace-guard counters OK: 0 retraces / 0 implicit transfers "
+          "across", len(list(_records(d))), "rows")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

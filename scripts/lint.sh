@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Static analysis entry point (DESIGN.md §9):
+#
+#   scripts/lint.sh                   # AST lint + kernel contracts
+#   scripts/lint.sh --no-contracts    # AST rules only (fast)
+#   scripts/lint.sh --arch qwen3-moe-30b-a3b   # contracts on one config
+#
+# Extra arguments are passed through to `python -m repro.analysis`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

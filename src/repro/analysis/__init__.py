@@ -1,0 +1,18 @@
+"""Static analysis for the repro tree (DESIGN.md §9).
+
+Three legs: the AST hot-path linter (:mod:`repro.analysis.lint` +
+:mod:`repro.analysis.rules`), the Pallas kernel contract checker
+(:mod:`repro.analysis.kernel_contracts`), and the runtime retrace/transfer
+guard (:mod:`repro.analysis.trace_guard`). ``python -m repro.analysis``
+runs the first two and exits non-zero on any finding.
+"""
+from repro.analysis.lint import Finding, LintReport, run_lint
+from repro.analysis.kernel_contracts import (ContractFinding, ContractReport,
+                                             check_kernel_contracts)
+from repro.analysis.trace_guard import TraceGuard, TraceGuardError
+
+__all__ = [
+    "Finding", "LintReport", "run_lint",
+    "ContractFinding", "ContractReport", "check_kernel_contracts",
+    "TraceGuard", "TraceGuardError",
+]

@@ -1,0 +1,58 @@
+"""CLI: ``python -m repro.analysis`` — lint + kernel contracts, exit
+non-zero on any finding. ``--root DIR`` lints a different source tree
+(used by the fixture tests); ``--no-contracts`` / ``--no-lint`` run one
+leg only."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas hot-path linter + kernel contract checker")
+    p.add_argument("--root", default=None,
+                   help="directory containing the `repro` package to lint "
+                        "(default: the installed tree)")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule-id allowlist (e.g. RA001,RA007)")
+    p.add_argument("--no-lint", action="store_true")
+    p.add_argument("--no-contracts", action="store_true")
+    p.add_argument("--arch", action="append", default=None,
+                   help="restrict contract checks to these arch ids "
+                        "(repeatable; default: all)")
+    args = p.parse_args(argv)
+
+    failed = False
+    if not args.no_lint:
+        from repro.analysis.lint import run_lint
+        rules = args.rules.split(",") if args.rules else None
+        report = run_lint(root=args.root, rules=rules)
+        for f in report.findings:
+            print(f.format())
+        if report.suppressed:
+            print(f"[lint] {len(report.suppressed)} suppressed finding(s):")
+            for f in report.suppressed:
+                print(f"  {f.format()} — {f.reason}")
+        print(f"[lint] {len(report.findings)} finding(s)")
+        failed |= not report.ok
+
+    if not args.no_contracts:
+        from repro.analysis.kernel_contracts import check_kernel_contracts
+        report = check_kernel_contracts(arch_ids=args.arch)
+        for f in report.findings:
+            print(f.format())
+        if report.waived:
+            print(f"[contracts] {len(report.waived)} waived finding(s):")
+            for f in report.waived:
+                print(f"  {f.format()}")
+        print(f"[contracts] {len(report.findings)} finding(s) over "
+              f"{len(report.checked)} (kernel, config) pairs")
+        failed |= not report.ok
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

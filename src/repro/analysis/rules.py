@@ -1,0 +1,422 @@
+"""Lint rule catalog (DESIGN.md §9).
+
+Each rule is a small object with ``rule_id``, ``doc`` and
+``check(module, analyzer) -> Iterable[Finding]``. Rules RA001–RA004 and
+RA006 fire only inside jit-reachable functions (see ``lint.Analyzer``);
+RA005/RA007/RA008 are whole-tree hygiene rules.
+
+Taint model: within a reachable function, a value is "traced" when it is
+produced by a ``jnp.``/``jax.``/``lax.`` call (or by a ``pl.load``/ref
+subscript inside a kernel), or derived from such a value through
+assignment, arithmetic, subscripting, or tuple unpacking. Function
+parameters are NOT assumed traced: this tree's makers close over static
+Python config (``moe._capacity`` computes ``int(...)`` on config floats
+inside a jit-reachable helper, and that is fine). The cost is that a
+host-sync on a *parameter* escapes RA002/RA003 — acceptable, because the
+dynamic trace guard (leg 3) catches the resulting retrace/transfer at
+test time, and the fixture tests pin the positives we do promise to catch.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.lint import Analyzer, Finding, ModuleInfo, _dotted
+
+__all__ = ["RULES", "TaintTracker"]
+
+_TRACED_PREFIXES = ("jnp.", "jax.", "lax.", "pl.", "pltpu.")
+# np.* calls that are static/host-safe even in traced code
+_NP_ALLOWED = {
+    "np.iinfo", "np.finfo", "np.dtype", "np.float32", "np.float16",
+    "np.int8", "np.int32", "np.int64", "np.bool_", "np.pi", "np.inf",
+    "np.prod", "np.log2", "np.ceil", "np.sqrt",  # scalar math on config
+}
+_HOST_CASTS = {"int", "float", "bool"}
+_SYNC_METHODS = {"item", "tolist", "to_py"}
+# jnp/jax calls that return STATIC host values, not arrays
+_NONARRAY_CALLS = {
+    "jnp.dtype", "jnp.shape", "jnp.ndim", "jnp.issubdtype", "jnp.iinfo",
+    "jnp.finfo", "jax.dtypes.canonicalize_dtype", "jax.eval_shape",
+    "jax.tree_util.tree_structure", "jax.default_backend",
+}
+# attribute reads that are static under tracing even on a traced value
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+
+class TaintTracker(ast.NodeVisitor):
+    """Single-pass, order-sensitive taint over one function body.
+
+    Visits statements in source order; names assigned from traced
+    expressions become tainted for subsequent statements. One pass is
+    enough in practice — hot-path functions here are straight-line or
+    loop bodies whose carried values are assigned before use.
+    """
+
+    def __init__(self, mod: ModuleInfo, fn: ast.AST):
+        self.mod = mod
+        self.tainted: Set[str] = set()
+        # ref-style params of pallas kernels (x_ref, o_ref, acc_ref) are
+        # traced by construction
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in args.args + args.kwonlyargs:
+                if a.arg.endswith("_ref") or a.arg.endswith("_refs"):
+                    self.tainted.add(a.arg)
+        for node in self._body_nodes(fn):
+            if isinstance(node, ast.Assign):
+                if self.is_traced(node.value):
+                    for t in node.targets:
+                        self._taint_target(t)
+            elif isinstance(node, ast.AugAssign):
+                if self.is_traced(node.value) or self.is_traced(node.target):
+                    self._taint_target(node.target)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if self.is_traced(node.value):
+                    self._taint_target(node.target)
+            elif isinstance(node, ast.For):
+                if self.is_traced(node.iter):
+                    self._taint_target(node.target)
+
+    @staticmethod
+    def _body_nodes(fn: ast.AST) -> Iterable[ast.AST]:
+        stack = list(ast.iter_child_nodes(fn))
+        out = []
+        while stack:
+            node = stack.pop(0)
+            out.append(node)
+            for child in ast.iter_child_nodes(node):
+                if not isinstance(child,
+                                  (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                    stack.append(child)
+        return out
+
+    def _taint_target(self, t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            self.tainted.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._taint_target(e)
+        elif isinstance(t, ast.Starred):
+            self._taint_target(t.value)
+
+    def is_traced(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            if dotted:
+                full = self.mod.expand(dotted)
+                if dotted in _NONARRAY_CALLS or full in _NONARRAY_CALLS:
+                    return False
+                if full.startswith(("jax.numpy.", "jax.lax.")) or any(
+                        dotted.startswith(p) for p in _TRACED_PREFIXES) or \
+                        full.startswith("jax."):
+                    # jax.* producers yield arrays; a few (tree_util etc.)
+                    # don't, but treating them as traced only adds caution
+                    return True
+            # method call on a traced object (x.astype(...), x.sum())
+            if isinstance(node.func, ast.Attribute) and self.is_traced(
+                    node.func.value):
+                return True
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            # x.shape / x.dtype are trace-static even when x is traced
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_traced(node.left) or self.is_traced(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_traced(node.operand)
+        if isinstance(node, ast.Compare):
+            # identity tests (`x is None`) return a host bool, never a tracer
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.is_traced(node.left) or any(
+                self.is_traced(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_traced(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.is_traced(node.body) or self.is_traced(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_traced(e) for e in node.elts)
+        return False
+
+
+def _reachable_funcs(mod: ModuleInfo, analyzer: Analyzer):
+    for q, fn in mod.funcs.items():
+        if (mod.name, q) in analyzer.reachable:
+            yield q, fn
+
+
+def _own_stmts(fn: ast.AST) -> Iterable[ast.AST]:
+    """Nodes of fn excluding nested defs/lambdas (linted separately if
+    reachable)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+                stack.append(child)
+
+
+class _Rule:
+    rule_id = "RA000"
+    doc = ""
+
+    def check(self, mod: ModuleInfo,
+              analyzer: Analyzer) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def _f(self, mod: ModuleInfo, node: ast.AST, msg: str) -> Finding:
+        return Finding(self.rule_id, mod.path, node.lineno,
+                       node.col_offset, msg)
+
+
+class HostSyncMethod(_Rule):
+    rule_id = "RA001"
+    doc = (".item()/.tolist() in jit-reachable code forces a device→host "
+           "sync and a trace-time concretization error")
+
+    def check(self, mod, analyzer):
+        for q, fn in _reachable_funcs(mod, analyzer):
+            for node in _own_stmts(fn):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SYNC_METHODS
+                        and not node.args and not node.keywords):
+                    yield self._f(
+                        mod, node,
+                        f"host-sync `.{node.func.attr}()` inside "
+                        f"jit-reachable `{q}`")
+
+
+class HostCastOnTraced(_Rule):
+    rule_id = "RA002"
+    doc = ("int()/float()/bool() on a traced value concretizes the tracer "
+           "(ConcretizationTypeError under jit, silent sync outside)")
+
+    def check(self, mod, analyzer):
+        for q, fn in _reachable_funcs(mod, analyzer):
+            taint = TaintTracker(mod, fn)
+            for node in _own_stmts(fn):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in _HOST_CASTS
+                        and node.args
+                        and taint.is_traced(node.args[0])):
+                    yield self._f(
+                        mod, node,
+                        f"`{node.func.id}()` on traced value inside "
+                        f"jit-reachable `{q}`")
+
+
+class TracerBranch(_Rule):
+    rule_id = "RA003"
+    doc = ("if/while/assert on a traced value calls __bool__ on a tracer; "
+           "use lax.cond / lax.select / jnp.where")
+
+    def check(self, mod, analyzer):
+        for q, fn in _reachable_funcs(mod, analyzer):
+            taint = TaintTracker(mod, fn)
+            for node in _own_stmts(fn):
+                test = None
+                kind = None
+                if isinstance(node, ast.If):
+                    test, kind = node.test, "if"
+                elif isinstance(node, ast.While):
+                    test, kind = node.test, "while"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                if test is not None and taint.is_traced(test):
+                    yield self._f(
+                        mod, node,
+                        f"Python `{kind}` on traced value inside "
+                        f"jit-reachable `{q}`; use lax.cond/jnp.where")
+
+
+class NumpyOnTraced(_Rule):
+    rule_id = "RA004"
+    doc = ("np.* on traced values inside jit-reachable code triggers "
+           "device→host transfer at trace time; use jnp")
+
+    def check(self, mod, analyzer):
+        np_alias = {a for a, full in mod.import_alias.items()
+                    if full == "numpy"}
+        if not np_alias:
+            return
+        for q, fn in _reachable_funcs(mod, analyzer):
+            taint = TaintTracker(mod, fn)
+            for node in _own_stmts(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = _dotted(node.func)
+                if not dotted:
+                    continue
+                root = dotted.split(".", 1)[0]
+                if root not in np_alias:
+                    continue
+                canon = "np." + dotted.split(".", 1)[1] if "." in dotted \
+                    else "np"
+                if canon in _NP_ALLOWED:
+                    continue
+                arg_traced = any(taint.is_traced(a) for a in node.args) or \
+                    any(taint.is_traced(kw.value) for kw in node.keywords)
+                if arg_traced:
+                    yield self._f(
+                        mod, node,
+                        f"`{dotted}` on traced value inside jit-reachable "
+                        f"`{q}`; use jnp")
+
+
+class DebugLeftIn(_Rule):
+    rule_id = "RA005"
+    doc = ("jax.debug.print / pdb / breakpoint() left in library code "
+           "(kernels and serving paths must stay clean)")
+
+    def check(self, mod, analyzer):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                if dotted is None:
+                    continue
+                full = mod.expand(dotted)
+                if full.startswith("jax.debug.") or \
+                        dotted.startswith("jax.debug."):
+                    yield self._f(mod, node,
+                                  f"`{dotted}` left in library code")
+                elif dotted in ("breakpoint", "pdb.set_trace",
+                                "ipdb.set_trace"):
+                    yield self._f(mod, node,
+                                  f"debugger call `{dotted}` left in "
+                                  f"library code")
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                names = [a.name for a in node.names]
+                modname = getattr(node, "module", None)
+                if "pdb" in names or "ipdb" in names or modname in (
+                        "pdb", "ipdb"):
+                    yield self._f(mod, node, "pdb import left in "
+                                  "library code")
+
+
+class ShapeBranchNotStatic(_Rule):
+    rule_id = "RA006"
+    doc = ("directly-jitted function branches on a parameter that is not "
+           "in static_argnames — every distinct value retraces or fails")
+
+    def check(self, mod, analyzer):
+        for key, statics in analyzer.jit_statics.items():
+            m, q = key
+            if m != mod.name:
+                continue
+            fn = mod.funcs.get(q)
+            if fn is None:
+                continue
+            params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+            dyn = params - statics - {"self"}
+            for node in _own_stmts(fn):
+                test = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test = node.test
+                if test is None:
+                    continue
+                if isinstance(test, ast.Compare) and all(
+                        isinstance(op, (ast.Is, ast.IsNot))
+                        for op in test.ops):
+                    continue  # identity checks resolve at trace time
+                for sub in ast.walk(test):
+                    if isinstance(sub, ast.Name) and sub.id in dyn:
+                        # only flag scalar-looking branch params; x.shape /
+                        # x.ndim are trace-static and fine
+                        if self._shape_derived(test, sub.id):
+                            continue
+                        yield self._f(
+                            mod, node,
+                            f"jitted `{q}` branches on parameter "
+                            f"`{sub.id}` not listed in static_argnames")
+                        break
+
+    @staticmethod
+    def _shape_derived(test: ast.AST, name: str) -> bool:
+        """True when every use of ``name`` in the test goes through
+        .shape/.ndim/.dtype/len() — those are static under tracing."""
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id == name:
+                return False
+            if isinstance(sub, ast.Attribute) and sub.attr in (
+                    "shape", "ndim", "dtype", "size") and isinstance(
+                        sub.value, ast.Name) and sub.value.id == name:
+                # strip this branch by not descending: crude — accept
+                return True
+            if isinstance(sub, ast.Call) and isinstance(
+                    sub.func, ast.Name) and sub.func.id == "len":
+                if any(isinstance(a, ast.Name) and a.id == name
+                       for a in sub.args):
+                    return True
+        return False
+
+
+class RawPallasCall(_Rule):
+    rule_id = "RA007"
+    doc = ("pl.pallas_call outside repro/kernels bypasses the "
+           "pallas_dispatch policy (oracle fallback, interpret flag, "
+           "contract registration)")
+
+    def check(self, mod, analyzer):
+        if mod.name.startswith("repro.kernels"):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                if dotted and dotted.rsplit(".", 1)[-1] == "pallas_call":
+                    yield self._f(
+                        mod, node,
+                        "direct pallas_call outside repro/kernels; route "
+                        "through pallas_dispatch in kernels/ops.py")
+
+
+class KernelImplImport(_Rule):
+    rule_id = "RA008"
+    doc = ("importing kernel impl modules (repro.kernels.* other than ops) "
+           "outside the kernels package bypasses dispatch policy")
+
+    def check(self, mod, analyzer):
+        if mod.name.startswith(("repro.kernels", "repro.analysis")):
+            return
+        for node in ast.walk(mod.tree):
+            targets: List[str] = []
+            if isinstance(node, ast.Import):
+                targets = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module == "repro.kernels":
+                    targets = [f"repro.kernels.{a.name}"
+                               for a in node.names]
+                else:
+                    targets = [node.module]
+            for t in targets:
+                if t.startswith("repro.kernels") and t not in (
+                        "repro.kernels", "repro.kernels.ops"):
+                    yield self._f(
+                        mod, node,
+                        f"import of kernel impl `{t}` outside the kernels "
+                        f"package; use repro.kernels.ops")
+
+
+RULES = [
+    HostSyncMethod(),
+    HostCastOnTraced(),
+    TracerBranch(),
+    NumpyOnTraced(),
+    DebugLeftIn(),
+    ShapeBranchNotStatic(),
+    RawPallasCall(),
+    KernelImplImport(),
+]

@@ -10,9 +10,11 @@ one decorated two-liner, not a fifth copy of the policy.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import importlib
 import inspect
+from typing import Any, Callable, Dict, Optional
 
 import jax
 
@@ -23,7 +25,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def pallas_dispatch(kernel_module: str, extra_static: tuple = ()):
+@dataclasses.dataclass(frozen=True)
+class KernelInfo:
+    """Registry entry for one dispatched kernel: where its Pallas impl
+    lives and the contract the static checker
+    (``repro.analysis.kernel_contracts``) validates against every config."""
+    name: str
+    module: str                      # module under repro.kernels
+    fn: Callable                     # the public dispatch wrapper
+    extra_static: tuple
+    contract: Optional[Dict[str, Any]]
+
+
+#: every ``pallas_dispatch``-decorated kernel, by public name. The analysis
+#: layer iterates this — registration IS the opt-in to contract checking.
+KERNEL_REGISTRY: Dict[str, KernelInfo] = {}
+
+
+def pallas_dispatch(kernel_module: str, extra_static: tuple = (),
+                    contract: Optional[Dict[str, Any]] = None):
     """Decorator factory implementing the interpret/TPU dispatch policy.
 
     ``kernel_module``: module under ``repro.kernels`` holding the Pallas
@@ -35,7 +55,9 @@ def pallas_dispatch(kernel_module: str, extra_static: tuple = ()):
     them as static kwargs (the pre-decorator wrappers accepted positional
     ``causal``; silently tracing it would turn ``if causal:`` into a
     TracerBoolConversionError). The decorated body is the jnp-oracle
-    fallback.
+    fallback. ``contract``: shape/dtype contract metadata consumed by the
+    static kernel checker — ``kind`` names the shape family the configs
+    induce, ``quantized`` marks int8-table kernels.
     """
     def deco(oracle_fn):
         name = oracle_fn.__name__
@@ -50,10 +72,16 @@ def pallas_dispatch(kernel_module: str, extra_static: tuple = ()):
                                           **kw)
             return oracle_fn(*args, **kw)
 
+        def _register(public):
+            KERNEL_REGISTRY[name] = KernelInfo(
+                name=name, module=kernel_module, fn=public,
+                extra_static=extra_static, contract=contract)
+            return public
+
         if not extra_static:
             jitted.__name__ = name
             jitted.__doc__ = oracle_fn.__doc__
-            return jitted
+            return _register(jitted)
 
         def wrapper(*args, **kw):
             # keywordize everything from the first positionally-passed
@@ -66,37 +94,42 @@ def pallas_dispatch(kernel_module: str, extra_static: tuple = ()):
 
         wrapper.__name__ = name
         wrapper.__doc__ = oracle_fn.__doc__
-        return wrapper
+        return _register(wrapper)
     return deco
 
 
-@pallas_dispatch("swiglu")
+@pallas_dispatch("swiglu", contract={"kind": "swiglu", "quantized": False})
 def swiglu_mlp(x, wg, wu, wd):
     return ref.swiglu_mlp(x, wg, wu, wd)
 
 
-@pallas_dispatch("grouped_mlp")
+@pallas_dispatch("grouped_mlp", contract={"kind": "grouped",
+                                          "quantized": False})
 def grouped_swiglu(x, wg, wu, wd, group_sizes):
     return ref.grouped_swiglu(x, wg, wu, wd, group_sizes)
 
 
-@pallas_dispatch("decode_moe")
+@pallas_dispatch("decode_moe", contract={"kind": "gather",
+                                         "quantized": False})
 def gather_swiglu(x, wg, wu, wd, idx, w):
     return ref.gather_swiglu(x, wg, wu, wd, idx, w)
 
 
-@pallas_dispatch("grouped_mlp")
+@pallas_dispatch("grouped_mlp", contract={"kind": "grouped_q",
+                                          "quantized": True})
 def grouped_swiglu_q(x, qt, group_sizes):
     """Int8 grouped SwiGLU over a ``QuantizedExpertTables`` (DESIGN.md §8)."""
     return ref.grouped_swiglu_q(x, qt, group_sizes)
 
 
-@pallas_dispatch("decode_moe")
+@pallas_dispatch("decode_moe", contract={"kind": "gather_q",
+                                         "quantized": True})
 def gather_swiglu_q(x, qt, idx, w):
     """Int8 decode-mode gather SwiGLU over a ``QuantizedExpertTables``."""
     return ref.gather_swiglu_q(x, qt, idx, w)
 
 
-@pallas_dispatch("flash_attention", extra_static=("causal",))
+@pallas_dispatch("flash_attention", extra_static=("causal",),
+                 contract={"kind": "flash", "quantized": False})
 def flash_attention(q, k, v, causal: bool = True):
     return ref.flash_attention(q, k, v, causal=causal)

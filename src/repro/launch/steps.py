@@ -98,6 +98,29 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
 # continuous-batching (slotted) serving
 # ---------------------------------------------------------------------------
 
+def admit_trace_budget(buckets, s_max: int, n_slots: int) -> int:
+    """Upper bound on legitimate jit specializations of ``slot_admit``.
+
+    The engine pads every admission group to (bucket length, pow2 group
+    size); distinct bucket lengths are the declared buckets clamped to
+    ``s_max`` plus the big-bucket multiples ``Engine.bucket_for`` emits for
+    overflow prompts, and group sizes are the powers of two up to the next
+    pow2 >= ``n_slots``. Anything beyond this product is a RETRACE — some
+    shape leaked past the padding policy (the trace guard counts it)."""
+    declared = sorted({min(int(b), int(s_max)) for b in buckets}) or [1]
+    big = declared[-1]
+    shapes = set(declared)
+    m = 1
+    while m * big < s_max:
+        m += 1
+        shapes.add(min(m * big, s_max))
+    sizes, p = 1, 1
+    while p < n_slots:
+        p *= 2
+        sizes += 1
+    return len(shapes) * sizes
+
+
 def make_slot_decode(cfg: ModelConfig) -> Callable:
     """slot_decode(params, cache, token [B], active [B]) ->
     (logits [B, V], greedy [B] int32, cache). The greedy argmax is computed

@@ -94,6 +94,11 @@ class EngineConfig:
     # prefill all due same-bucket requests as one batch (False = the
     # batch-of-1 admission loop, kept as the parity reference)
     batch_admission: bool = True
+    # retrace/implicit-transfer guard mode (repro.analysis.trace_guard):
+    # "count" surfaces violations in counters["retraces"] /
+    # counters["implicit_transfers"], "strict" raises TraceGuardError,
+    # "off" disables (plain jax.jit)
+    trace_guard: str = "count"
 
 
 class Engine:
@@ -126,13 +131,30 @@ class Engine:
         self.params = params if params is not None else MD.init(
             cfg, jax.random.PRNGKey(ec.seed))
 
-        self._admit_step = jax.jit(ST.make_slot_admit(cfg))
-        self._decode = jax.jit(ST.make_slot_decode(cfg))
-        self._decode_multi = jax.jit(ST.make_slot_decode_multi(
-            cfg, ec.decode_block, ec.temperature))
+        # host<->device crossing telemetry: device_calls counts jitted
+        # dispatches, host_syncs counts device->host readbacks, tokens_out
+        # counts generated tokens (dispatches-per-token = their ratio);
+        # retraces/implicit_transfers are maintained by the trace guard
+        # (DESIGN.md §9: both must stay 0 after warmup)
+        self.counters: Dict[str, int] = {
+            "device_calls": 0, "host_syncs": 0, "tokens_out": 0}
+        from repro.analysis.trace_guard import TraceGuard
+        self._guard = TraceGuard(ec.trace_guard, counters=self.counters)
+        self._buckets = tuple(sorted(set(int(b) for b in ec.prefill_buckets)))
+        # admission legitimately compiles one specialization per
+        # (bucket, pow2-group) pair; decode entry points get exactly ONE
+        self._admit_step = self._guard.wrap_jit(
+            "slot_admit", ST.make_slot_admit(cfg),
+            expected_traces=ST.admit_trace_budget(
+                self._buckets, ec.s_max, ec.n_slots))
+        self._decode = self._guard.wrap_jit(
+            "slot_decode", ST.make_slot_decode(cfg), expected_traces=1)
+        self._decode_multi = self._guard.wrap_jit(
+            "slot_decode_multi",
+            ST.make_slot_decode_multi(cfg, ec.decode_block, ec.temperature),
+            expected_traces=1)
         self.cache = MD.init_slot_cache(cfg, ec.n_slots, ec.s_max)
 
-        self._buckets = tuple(sorted(set(int(b) for b in ec.prefill_buckets)))
         self._slot_req: List[Optional[Request]] = [None] * ec.n_slots
         self._last_tok = np.zeros((ec.n_slots,), np.int32)
         self._active = np.zeros((ec.n_slots,), bool)
@@ -148,11 +170,6 @@ class Engine:
         self._t0: Optional[float] = None
         self._rng = np.random.default_rng(ec.seed)
         self._key = jax.random.PRNGKey(ec.seed + 1)   # fused-loop sampling
-        # host<->device crossing telemetry: device_calls counts jitted
-        # dispatches, host_syncs counts device->host readbacks, tokens_out
-        # counts generated tokens (dispatches-per-token = their ratio)
-        self.counters: Dict[str, int] = {
-            "device_calls": 0, "host_syncs": 0, "tokens_out": 0}
         # plan/report extras when booted via from_checkpoint
         self.artifact: Optional[dict] = None
 
@@ -245,10 +262,13 @@ class Engine:
         now = self._now() if now is None else now
         finished = self._admit(now)
         if self._active.any():
+            # host->device conversions happen HERE, before the guard arms:
+            # inside the guarded call every argument is already device-side
             toks = jnp.asarray(self._last_tok)
             act = jnp.asarray(self._active)
-            logits, greedy, self.cache = self._decode(
-                self.params, self.cache, toks, act)
+            logits, greedy, self.cache = self._guard.run(
+                "slot_decode", self._decode, self.params, self.cache, toks,
+                act)
             self.counters["device_calls"] += 1
             next_toks = self._sample(logits, greedy)
             self.counters["host_syncs"] += 1
@@ -286,10 +306,13 @@ class Engine:
             rem[s] = req.max_new_tokens - len(req.out_tokens)
             eos[s] = -1 if req.eos_token is None else req.eos_token
         self._key, sub = jax.random.split(self._key)
-        block, _, self.cache = self._decode_multi(
-            self.params, self.cache, jnp.asarray(self._last_tok),
-            jnp.asarray(self._active), jnp.asarray(rem), jnp.asarray(eos),
-            sub)
+        # convert np inputs OUTSIDE the guarded region (explicit H2D); the
+        # guarded fused block itself must touch the host zero times
+        args = (self.params, self.cache, jnp.asarray(self._last_tok),
+                jnp.asarray(self._active), jnp.asarray(rem),
+                jnp.asarray(eos), sub)
+        block, _, self.cache = self._guard.run(
+            "slot_decode_multi", self._decode_multi, *args)
         self.counters["device_calls"] += 1
         block_np = np.asarray(block)        # ONE readback: [K, B, (tok, emit)]
         self.counters["host_syncs"] += 1
@@ -403,11 +426,16 @@ class Engine:
         key = jax.random.PRNGKey(0)
         out, _, cache = fn(self.params, cache, toks, act, rem, eos, key)
         jax.block_until_ready(out)                                   # warm
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out, _, cache = fn(self.params, cache, toks, act, rem, eos, key)
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
+        # the timed loop runs under transfer_guard("disallow"): a benchmark
+        # number that silently included an implicit host transfer per block
+        # would overstate dispatch savings — better to fail loudly here
+        with jax.transfer_guard("disallow"):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out, _, cache = fn(self.params, cache, toks, act, rem, eos,
+                                   key)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
         tok_per_s = n * K * iters / dt
         from repro.launch.hlo_analysis import roofline_terms
         traffic = self.modeled_decode_traffic()

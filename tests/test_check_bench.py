@@ -1,0 +1,129 @@
+"""scripts/check_bench.py — the serve-bench parity gate shared by the fast
+and slow CI lanes. Exercises check() on good/mutated summary dicts and the
+CLI exit codes on real JSON files."""
+import copy
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, "scripts")
+from check_bench import _records, check, main  # noqa: E402
+
+
+def _rec(**over):
+    rec = {"weight_dtype": "bfloat16", "retraces": 0,
+           "implicit_transfers": 0, "moe_expert_bytes_per_token": 1.0}
+    rec.update(over)
+    return rec
+
+
+@pytest.fixture()
+def good():
+    """Minimal summary with the same shape serve_bench.py writes."""
+    return {
+        "full": {"before": _rec(), "after": _rec()},
+        "compressed": {"before": _rec(), "after": _rec()},
+        "int8": {
+            "full": _rec(weight_dtype="int8"),
+            "compressed": _rec(weight_dtype="int8"),
+            "top1_match_full": 0.97, "top1_match_compressed": 0.95,
+            "tolerance": 0.85, "parity_ok": True,
+            "expert_stream_gate": 3.0, "expert_stream_ok": True,
+            "modeled_full_scale": {"int8_full": {
+                "expert_stream_reduction_vs_bf16_half": 3.9}},
+        },
+        "parity": {"fused_vs_step_bitwise": True,
+                   "gather_vs_ragged_bitwise": True,
+                   "batched_vs_serial_admission_bitwise": True},
+    }
+
+
+def test_good_summary_passes(good):
+    assert check(good) == []
+
+
+def test_records_enumerates_all_rows(good):
+    labels = [label for label, _ in _records(good)]
+    assert labels == ["full/before", "full/after", "compressed/before",
+                      "compressed/after", "int8/full", "int8/compressed"]
+
+
+def test_parity_bit_false_fails(good):
+    for key in good["parity"]:
+        bad = copy.deepcopy(good)
+        bad["parity"][key] = False
+        errs = check(bad)
+        assert len(errs) == 1 and key in errs[0]
+
+
+def test_parity_bit_missing_fails(good):
+    bad = copy.deepcopy(good)
+    del bad["parity"]["gather_vs_ragged_bitwise"]
+    assert any("gather_vs_ragged" in e for e in check(bad))
+
+
+def test_int8_quality_gate(good):
+    bad = copy.deepcopy(good)
+    bad["int8"]["parity_ok"] = False
+    errs = check(bad)
+    assert any("below tolerance" in e for e in errs)
+
+
+def test_int8_dtype_gate(good):
+    bad = copy.deepcopy(good)
+    bad["int8"]["compressed"]["weight_dtype"] = "bfloat16"
+    errs = check(bad)
+    assert any("int8.compressed.weight_dtype" in e for e in errs)
+
+
+def test_int8_expert_stream_gate(good):
+    bad = copy.deepcopy(good)
+    bad["int8"]["expert_stream_ok"] = False
+    assert any("expert-stream" in e for e in check(bad))
+
+
+def test_nonzero_retrace_fails_that_row_only(good):
+    bad = copy.deepcopy(good)
+    bad["compressed"]["after"]["retraces"] = 2
+    errs = check(bad)
+    assert len(errs) == 1
+    assert "compressed/after" in errs[0] and "'retraces'] == 2" in errs[0]
+
+
+def test_nonzero_implicit_transfer_fails(good):
+    bad = copy.deepcopy(good)
+    bad["int8"]["full"]["implicit_transfers"] = 1
+    assert any("int8/full" in e and "implicit_transfers" in e
+               for e in check(bad))
+
+
+def test_missing_counters_pass(good):
+    """Counters absent (older JSON) defaults to 0 — the gate is on
+    regressions, not on schema presence."""
+    old = copy.deepcopy(good)
+    for _, rec in _records(old):
+        rec.pop("retraces"), rec.pop("implicit_transfers")
+    assert check(old) == []
+
+
+def test_multiple_failures_all_reported(good):
+    bad = copy.deepcopy(good)
+    bad["parity"]["fused_vs_step_bitwise"] = False
+    bad["int8"]["full"]["weight_dtype"] = "float32"
+    bad["full"]["before"]["retraces"] = 1
+    assert len(check(bad)) == 3
+
+
+def test_main_exit_codes(good, tmp_path, capsys):
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(good))
+    assert main([str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "parity OK" in out and "trace-guard counters OK" in out
+
+    bad = copy.deepcopy(good)
+    bad["parity"]["fused_vs_step_bitwise"] = False
+    p.write_text(json.dumps(bad))
+    assert main([str(p)]) == 1
+    assert "check_bench FAIL" in capsys.readouterr().out

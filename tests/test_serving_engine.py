@@ -332,6 +332,42 @@ def test_engine_counters_track_tokens():
     assert eng.host_dispatches_per_token > 0
 
 
+def test_no_retraces_or_implicit_transfers_after_warmup():
+    """DESIGN.md §9 acceptance: over a multi-block decode after warmup the
+    trace guard proves the steady state is pure — zero retraces of the
+    fused entry point and zero implicit host<->device transfers."""
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=48,
+                              prefill_buckets=(8,), decode_block=4))
+    # warmup: compile admission + the fused decode block once
+    eng.submit(np.ones(8, np.int32), max_new_tokens=4)
+    eng.run()
+    assert eng._guard.warmed("slot_decode_multi")
+    # steady state: several fresh admissions, many fused blocks — all
+    # running under transfer_guard("disallow")
+    for i in range(3):
+        eng.submit(np.arange(1, 9, dtype=np.int32) + i, max_new_tokens=12)
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.out_tokens) == 12 for r in done)
+    assert eng.counters["retraces"] == 0
+    assert eng.counters["implicit_transfers"] == 0
+    # the fused decode entry point compiled exactly once, ever
+    assert eng._guard.traces["slot_decode_multi"] == 1
+
+
+def test_strict_trace_guard_serves_clean():
+    """Strict mode (violations raise) is a no-op on a healthy engine —
+    the same guarantee the count-mode counters assert, enforced inline."""
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=32,
+                              prefill_buckets=(8,), decode_block=2,
+                              trace_guard="strict"))
+    for _ in range(2):
+        eng.submit(np.ones(8, np.int32), max_new_tokens=6)
+    done = eng.run()
+    assert len(done) == 2
+    assert eng.counters["retraces"] == 0
+    assert eng.counters["implicit_transfers"] == 0
+
+
 def test_poisson_trace_deterministic():
     a = poisson_trace(16, rate=0.5, seed=9)
     b = poisson_trace(16, rate=0.5, seed=9)

@@ -1,0 +1,90 @@
+"""StragglerMonitor: warmup gating, rolling-median ratio, window hygiene
+(slow steps must not poison the median), patience/consecutive accounting,
+and the start/end timing wrapper."""
+import pytest
+
+from repro.distributed.straggler import StragglerMonitor
+
+
+def test_warmup_never_flags():
+    m = StragglerMonitor(warmup=3, threshold=2.0)
+    # even a 100x outlier is unflagged until warmup observations are banked
+    for dur in (0.1, 10.0, 0.1):
+        rep = m.observe(dur)
+        assert not rep.is_straggler and rep.ratio == 1.0
+        assert rep.median_s == dur  # pre-warmup: median is the sample itself
+
+
+def test_flags_above_threshold_ratio():
+    m = StragglerMonitor(warmup=3, threshold=2.0)
+    for _ in range(5):
+        m.observe(0.1)
+    ok = m.observe(0.19)
+    assert not ok.is_straggler and ok.ratio == pytest.approx(1.9)
+    bad = m.observe(0.25)
+    assert bad.is_straggler and bad.ratio == pytest.approx(2.5)
+    assert bad.median_s == pytest.approx(0.1)
+
+
+def test_slow_steps_excluded_from_window():
+    """A sustained stall must keep ratios measured against the HEALTHY
+    median — if flagged steps entered the window the median would drift up
+    and the detector would acquit the straggler."""
+    m = StragglerMonitor(warmup=3, threshold=2.0, patience=100)
+    for _ in range(10):
+        m.observe(0.1)
+    for _ in range(20):
+        rep = m.observe(0.5)
+        assert rep.is_straggler
+        assert rep.median_s == pytest.approx(0.1)
+    assert max(m.window) == pytest.approx(0.1)
+
+
+def test_patience_and_consecutive_reset():
+    m = StragglerMonitor(warmup=3, threshold=2.0, patience=3)
+    for _ in range(5):
+        m.observe(0.1)
+    assert m.observe(0.5).consecutive == 1
+    assert m.observe(0.5).consecutive == 2
+    # one clean step resets the streak: transient blips never restart
+    assert m.observe(0.1).consecutive == 0
+    m.observe(0.5), m.observe(0.5)
+    rep = m.observe(0.5)
+    assert rep.consecutive == 3 and rep.should_restart
+    # restart stays recommended while the stall persists
+    assert m.observe(0.5).should_restart
+
+
+def test_no_restart_below_patience():
+    m = StragglerMonitor(warmup=3, threshold=2.0, patience=5)
+    for _ in range(5):
+        m.observe(0.1)
+    for i in range(4):
+        rep = m.observe(0.5)
+        assert not rep.should_restart, f"restart after only {i + 1} flags"
+
+
+def test_window_is_bounded_and_rolls():
+    # a sub-threshold regime shift (1.8x < 2.0x) is absorbed: the steps are
+    # unflagged, enter the window, and roll the old regime out
+    m = StragglerMonitor(window=4, warmup=2, threshold=2.0)
+    for dur in (0.1, 0.1, 0.1, 0.1, 0.18, 0.18, 0.18, 0.18):
+        assert not m.observe(dur).is_straggler
+    assert len(m.window) == 4
+    assert m.observe(0.2).median_s == pytest.approx(0.18)
+
+
+def test_step_counter_and_report_fields():
+    m = StragglerMonitor(warmup=1)
+    r1, r2 = m.observe(0.1), m.observe(0.1)
+    assert (r1.step, r2.step) == (1, 2)
+    assert r2.duration_s == pytest.approx(0.1)
+
+
+def test_start_end_step_times_the_interval():
+    m = StragglerMonitor(warmup=3)
+    m.start_step()
+    rep = m.end_step()
+    assert rep.duration_s >= 0.0 and rep.step == 1
+    with pytest.raises(AssertionError, match="start_step"):
+        m.end_step()  # timer is single-shot: must re-arm
