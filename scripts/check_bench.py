@@ -11,6 +11,13 @@ Asserts, on a BENCH_serve.json produced by ``benchmarks/serve_bench.py``:
 * the int8 rows hold their top-1 parity tolerance vs the bf16 rows and
   store int8 expert tables (DESIGN.md §8), and the full-scale modeled
   expert stream clears the reduction gate;
+* the speculative-decode rows (DESIGN.md §10) are token-for-token identical
+  to the fused full-model reference (greedy AND temperature-0.7), every
+  row's measured acceptance clears its floor (same-weights draft >= the
+  self floor, merged drafts >= the above-chance floor), and the modeled
+  deployment speedup at the recorded reference acceptance clears the gate —
+  the acceptance/speedup numbers are re-checked against the recorded
+  floors, not just the summary's *_ok booleans;
 * the trace-guard counters are zero on every post-warmup row — no decode
   retraces, no implicit host transfers (DESIGN.md §9).
 
@@ -32,6 +39,8 @@ def _records(d: dict):
         rec = d.get("int8", {}).get(tag)
         if rec:
             yield f"int8/{tag}", rec
+    for key, rec in d.get("spec", {}).get("rows", {}).items():
+        yield f"spec/{key}", rec
 
 
 def check(d: dict) -> List[str]:
@@ -58,6 +67,32 @@ def check(d: dict) -> List[str]:
         errs.append(f"int8 expert-stream gate failed: "
                     f"{i8.get('modeled_full_scale')}")
 
+    sp = d.get("spec")
+    if not isinstance(sp, dict) or not sp.get("rows"):
+        errs.append("spec section missing (no speculative-decode rows)")
+        sp = {}
+    for key in ("parity_greedy_bitwise", "parity_t07_bitwise"):
+        if sp and sp.get(key) is not True:
+            errs.append(f"spec.{key} is {sp.get(key)!r}, not True (the "
+                        f"speculative engine must match the fused "
+                        f"full-model engine token-for-token)")
+    for key, rec in sp.get("rows", {}).items():
+        floor = (sp.get("acceptance_floor_self", 1.0)
+                 if rec.get("draft") == "int8_full"
+                 else sp.get("acceptance_floor_merged", 1.0))
+        acc = rec.get("acceptance_rate", 0.0)
+        if acc < floor:
+            errs.append(f"spec/{key}: acceptance_rate {acc} below its "
+                        f"floor {floor} (draft={rec.get('draft')!r})")
+    if sp:
+        spd = sp.get("modeled_speedup_at_reference", 0.0)
+        gate = sp.get("speedup_gate", 1.0)
+        if spd < gate:
+            errs.append(
+                f"spec modeled speedup {spd}x at {sp.get('gate_slots')} "
+                f"slots / acceptance {sp.get('reference_acceptance')} "
+                f"below gate {gate}x")
+
     for label, rec in _records(d):
         for c in ("retraces", "implicit_transfers"):
             v = rec.get(c, 0)
@@ -83,6 +118,16 @@ def main(argv=None) -> int:
           i8["top1_match_compressed"], ">=", i8["tolerance"])
     print("int8 expert-stream gate OK (>=", i8["expert_stream_gate"],
           "x vs bf16 M=N/2)")
+    sp = d["spec"]
+    print("spec parity OK: greedy and t0.7 bitwise vs the fused reference")
+    print("spec acceptance OK:",
+          {k: r["acceptance_rate"] for k, r in sp["rows"].items()},
+          "(self floor", sp["acceptance_floor_self"],
+          "/ merged floor", sp["acceptance_floor_merged"], ")")
+    print("spec modeled-speedup gate OK:",
+          sp["modeled_speedup_at_reference"], "x >=", sp["speedup_gate"],
+          "x at", sp["gate_slots"], "slots / acceptance",
+          sp["reference_acceptance"])
     print("trace-guard counters OK: 0 retraces / 0 implicit transfers "
           "across", len(list(_records(d))), "rows")
     return 0

@@ -50,6 +50,11 @@ JIT_WRAPPERS = {
     "jax.experimental.pallas.pallas_call",
     "jax.experimental.shard_map.shard_map",
 }
+# method names that jit their function argument regardless of receiver:
+# TraceGuard.wrap_jit(name, fn, ...) is the engine's registration point for
+# every hot entry, so a body handed to it is a traced body even when the
+# receiver (`self._guard`) can't be resolved statically
+JIT_WRAPPER_METHODS = {"wrap_jit"}
 # decorators that mark a def as a traced body outright
 JIT_DECORATORS = {"jax.jit", "pallas_dispatch"}
 
@@ -304,8 +309,8 @@ class Analyzer:
                         continue
                     full = mod.expand(dotted)
                     short = dotted.rsplit(".", 1)[-1]
-                    if full in JIT_WRAPPERS or (
-                            short == "pallas_call" and "pallas" in full):
+                    if full in JIT_WRAPPERS or short in JIT_WRAPPER_METHODS \
+                            or (short == "pallas_call" and "pallas" in full):
                         for arg in list(node.args) + [
                                 kw.value for kw in node.keywords]:
                             self._mark_body(mod, scope, arg, assigns)

@@ -396,7 +396,8 @@ def expected_distinct_experts(n_experts: int, draws: int) -> float:
 
 def decode_traffic_model(cfg, *, n_slots: int, pos: int,
                          weight_dtype: str = "bf16",
-                         prefix_weight_dtype: str = "bf16"
+                         prefix_weight_dtype: str = "bf16",
+                         tokens_per_slot: int = 1
                          ) -> Dict[str, float]:
     """Modeled HBM bytes for ONE decode step of ``n_slots`` tokens at cache
     position ``pos`` (gather-dispatch serving path), per device.
@@ -410,6 +411,13 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     of the expert tables (of the merged suffix when ``cfg`` is compressed —
     ``prefix_weight_dtype`` then covers the untouched prefix stack).
 
+    ``tokens_per_slot`` > 1 models a MULTI-POSITION forward (the
+    speculative-decoding verify pass, ``model.verify_step_slots``): routing
+    draws scale to ``n_slots·tokens_per_slot·top_k``, each slot writes and
+    reads ``tokens_per_slot`` fresh KV rows, and the non-expert weights
+    STILL stream once — that amortization is the entire economics of
+    verify-in-one-pass (DESIGN.md §10).
+
     Returns a component breakdown plus ``bytes_per_token`` and
     ``flops_per_token``; feed those to :func:`roofline_terms` for the
     bandwidth-bound tok/s ceiling (``1 / t_memory_s``). Numbers target the
@@ -421,7 +429,7 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     pb = cfg.param_dtype.itemsize
     m = cfg.moe
     L = cfg.n_layers
-    draws = n_slots * (m.top_k if m else 0)
+    draws = n_slots * tokens_per_slot * (m.top_k if m else 0)
 
     # per-layer live expert counts + storage dtype
     layers = []                                   # (live, dtype) per layer
@@ -446,9 +454,11 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     if cfg.moe is None:
         attn_b += L * cfg.dense_mlp_params_per_layer() * pb
     head_b = float(cfg.vocab_size * cfg.d_model * pb)      # lm head read
-    kv_b = float(L * n_slots * (pos + 1) * cfg.n_kv_heads * cfg.hd * 2 * pb)
+    kv_b = float(L * n_slots * (pos + tokens_per_slot)
+                 * cfg.n_kv_heads * cfg.hd * 2 * pb)
 
     step = moe_b + router_b + shared_b + attn_b + head_b + kv_b
+    tokens = max(n_slots * tokens_per_slot, 1)
     return {
         "n_slots": float(n_slots),
         "pos": float(pos),
@@ -459,8 +469,73 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
         "lm_head_bytes_per_step": head_b,
         "kv_bytes_per_step": kv_b,
         "bytes_per_step": step,
-        "bytes_per_token": step / max(n_slots, 1),
-        "moe_expert_bytes_per_token": moe_b / max(n_slots, 1),
+        "bytes_per_token": step / tokens,
+        "moe_expert_bytes_per_token": moe_b / tokens,
         # 2 FLOPs per active weight per token (napkin 2·N_active·D)
         "flops_per_token": 2.0 * cfg.param_count(active_only=True),
+    }
+
+
+def spec_decode_traffic_model(cfg, draft_cfg, *, k_draft: int, n_slots: int,
+                              pos: int, mean_committed: float,
+                              weight_dtype: str = "bf16",
+                              prefix_weight_dtype: str = "bf16",
+                              draft_weight_dtype: str = "bf16",
+                              draft_prefix_weight_dtype: str = "bf16"
+                              ) -> Dict[str, float]:
+    """Modeled HBM bytes per COMMITTED token for one speculative
+    draft/verify round (DESIGN.md §10).
+
+    A round is ``k_draft`` decode steps of the DRAFT config (each modeled
+    by :func:`decode_traffic_model` at the draft's live-expert counts and
+    storage dtypes) plus ONE full-model verify forward over
+    ``k_draft + 1`` positions per slot (``tokens_per_slot`` above: the full
+    model's non-expert weights stream ONCE for all K+1 positions — the
+    amortization spec decode banks on — while its expert stream scales
+    with the extra routing draws). Dividing round bytes by
+    ``n_slots · mean_committed`` (the MEASURED tokens committed per slot
+    per round) gives bytes per committed token; ``modeled_speedup`` is the
+    plain full-model decode step's bytes/token over it, i.e. the
+    bandwidth-roofline tok/s ratio.
+
+    Two honest caveats the numbers surface rather than hide: acceptance is
+    an input (measured, not assumed), and the verify pass's expert stream
+    GROWS with ``k_draft·top_k`` extra draws per slot — on a many-expert
+    MoE the speedup only materializes once the batch is near expert-stream
+    saturation (``expected_distinct_experts`` ≈ all live experts), which
+    is why callers model deployment ``n_slots``, not the smoke batch.
+    """
+    draft = decode_traffic_model(
+        draft_cfg, n_slots=n_slots, pos=pos,
+        weight_dtype=draft_weight_dtype,
+        prefix_weight_dtype=draft_prefix_weight_dtype)
+    verify = decode_traffic_model(
+        cfg, n_slots=n_slots, pos=pos, weight_dtype=weight_dtype,
+        prefix_weight_dtype=prefix_weight_dtype,
+        tokens_per_slot=k_draft + 1)
+    baseline = decode_traffic_model(
+        cfg, n_slots=n_slots, pos=pos, weight_dtype=weight_dtype,
+        prefix_weight_dtype=prefix_weight_dtype)
+
+    draft_round = k_draft * draft["bytes_per_step"]
+    round_bytes = draft_round + verify["bytes_per_step"]
+    committed = max(n_slots * mean_committed, 1e-9)
+    bytes_per_token = round_bytes / committed
+    # FLOPs per committed token: K draft + (K+1) verify forwards per slot
+    flops = (k_draft * draft["flops_per_token"]
+             + (k_draft + 1) * baseline["flops_per_token"]) / max(
+                 mean_committed, 1e-9)
+    return {
+        "n_slots": float(n_slots),
+        "pos": float(pos),
+        "k_draft": float(k_draft),
+        "mean_committed": float(mean_committed),
+        "draft_bytes_per_round": draft_round,
+        "verify_bytes_per_round": verify["bytes_per_step"],
+        "bytes_per_round": round_bytes,
+        "bytes_per_token": bytes_per_token,
+        "flops_per_token": flops,
+        "baseline_bytes_per_token": baseline["bytes_per_token"],
+        # bandwidth-roofline tok/s ratio, spec vs plain full-model decode
+        "modeled_speedup": baseline["bytes_per_token"] / bytes_per_token,
     }

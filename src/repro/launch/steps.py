@@ -151,38 +151,76 @@ def make_slot_admit(cfg: ModelConfig) -> Callable:
     return slot_admit
 
 
+def sample_tokens(logits: jax.Array, temperature: float, keys: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Sample one token per row of ``logits`` [B, V] -> [B] int32.
+
+    ``temperature <= 0``: greedy argmax (``keys``/``positions`` unused).
+    ``temperature > 0``: Gumbel-max with a POSITION-INDEXED key schedule —
+    the noise added to row ``b``'s logits is
+    ``gumbel(fold_in(keys[b], positions[b]))`` where ``positions[b]`` is
+    the sequence position the sampled token will OCCUPY in slot ``b``'s
+    cache. The noise therefore depends only on (sampling key, token
+    position), never on which program computes it or how the engine
+    scheduled the request. Both sampling contracts hang off that one
+    property (DESIGN.md §10):
+
+    * device == host: the fused decode loops and the engine's host-side
+      fallback (``Engine._sample``) run this same function on the same
+      (key, position) pairs, so they agree bitwise;
+    * draft == verify (speculative decoding): the draft model proposing
+      the token at position ``q`` and the full model verifying position
+      ``q`` add IDENTICAL noise to their own logits, so a draft proposal
+      is accepted exactly when the full model would have sampled the same
+      token — accepted tokens are bitwise the full model's samples.
+
+    keys: [B, 2] uint32 per-slot PRNG keys (the engine derives them from
+    the request uid, so they travel with the request across slots and
+    engine modes); positions: [B] int32.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    vocab = logits.shape[-1]
+
+    def noise(key, q):
+        return jax.random.gumbel(jax.random.fold_in(key, q), (vocab,), F32)
+
+    g = jax.vmap(noise)(keys, positions)
+    return jnp.argmax(logits.astype(F32) / temperature + g,
+                      axis=-1).astype(jnp.int32)
+
+
 def make_slot_decode_multi(cfg: ModelConfig, k_steps: int,
                            temperature: float = 0.0) -> Callable:
     """Fused K-step decode: the device, not Python, drives steady-state
     decode (DESIGN.md §7).
 
     slot_decode_multi(params, cache, token [B], active [B], remaining [B],
-    eos [B], key) -> (block [K, B, 2] int32, active [B] bool, cache), where
-    ``block[s, b] = (token, emitted)`` — tokens and their emitted flags are
-    PACKED into one array so the engine's per-block device->host readback is
-    a single transfer.
+    eos [B], keys [B, 2]) -> (block [K, B, 2] int32, active [B] bool,
+    cache), where ``block[s, b] = (token, emitted)`` — tokens and their
+    emitted flags are PACKED into one array so the engine's per-block
+    device->host readback is a single transfer.
 
     ``lax.scan`` runs ``k_steps`` decode steps inside ONE jitted call:
-    sampling (greedy argmax, or Gumbel-max at ``temperature`` > 0 from a
-    per-step fold of ``key``) happens on device, and per-slot stop flags
-    freeze finished slots in place — a slot whose sampled token hits its
-    ``eos`` entry (-1 = none) or exhausts ``remaining`` stops advancing
-    ``pos`` and stops emitting, but rides along in the batch (static
-    shapes). ``emitted[s, b]`` marks which of the K tokens are real; the
-    host replays only those. When every slot is frozen the remaining scan
-    tail skips the forward entirely (``lax.cond``), so an early-finishing
-    block costs control flow, not FLOPs. Host syncs drop from one per token
-    to one per K tokens."""
-    def slot_decode_multi(params, cache, token, active, remaining, eos, key):
-        def step(carry, key_s):
+    sampling (:func:`sample_tokens` — greedy argmax, or Gumbel-max at
+    ``temperature`` > 0 under the position-indexed key schedule) happens
+    on device, and per-slot stop flags freeze finished slots in place — a
+    slot whose sampled token hits its ``eos`` entry (-1 = none) or
+    exhausts ``remaining`` stops advancing ``pos`` and stops emitting, but
+    rides along in the batch (static shapes). ``emitted[s, b]`` marks
+    which of the K tokens are real; the host replays only those. When
+    every slot is frozen the remaining scan tail skips the forward
+    entirely (``lax.cond``), so an early-finishing block costs control
+    flow, not FLOPs. Host syncs drop from one per token to one per K
+    tokens."""
+    def slot_decode_multi(params, cache, token, active, remaining, eos, keys):
+        def step(carry):
             cache, tok, act, rem = carry
             logits, cache = MD.decode_step_slots(cfg, params, cache, tok, act)
-            if temperature > 0.0:
-                g = jax.random.gumbel(key_s, logits.shape, F32)
-                nxt = jnp.argmax(logits.astype(F32) / temperature + g,
-                                 axis=-1).astype(jnp.int32)
-            else:
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # cache["pos"] already advanced for active slots = the position
+            # the sampled token will occupy (frozen rows sample garbage
+            # that is never emitted)
+            nxt = sample_tokens(logits, temperature, keys, cache["pos"])
             emitted = act
             rem = rem - act.astype(jnp.int32)
             done = (nxt == eos) | (rem <= 0)
@@ -190,17 +228,39 @@ def make_slot_decode_multi(cfg: ModelConfig, k_steps: int,
             tok = jnp.where(emitted, nxt, tok)
             return (cache, tok, act, rem), (nxt, emitted)
 
-        def body(carry, key_s):
+        def body(carry, _):
             cache, tok, act, rem = carry
             return jax.lax.cond(
                 jnp.any(act),
-                lambda c: step(c, key_s),
+                lambda c: step(c),
                 lambda c: (c, (c[1], jnp.zeros_like(c[2]))),
                 (cache, tok, act, rem))
 
-        keys = jax.random.split(key, k_steps)
         (cache, tok, act, rem), (toks, emits) = jax.lax.scan(
-            body, (cache, token, active, remaining), keys)
+            body, (cache, token, active, remaining), None, length=k_steps)
         block = jnp.stack([toks, emits.astype(jnp.int32)], axis=-1)
         return block, act, cache
     return slot_decode_multi
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding (draft = MergeMoE-compressed, verify = full)
+# ---------------------------------------------------------------------------
+
+def make_slot_decode_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
+                          k_draft: int, temperature: float = 0.0) -> Callable:
+    """One fused draft/verify round (DESIGN.md §10): the compressed model
+    proposes ``k_draft`` tokens per slot, the full model scores every
+    proposal in ONE multi-position forward, and accept/rollback happens on
+    device. Built in ``repro.serving.spec`` (the import is lazy so the
+    serving package can keep importing ``launch.steps``)."""
+    from repro.serving.spec import build_slot_decode_spec
+    return build_slot_decode_spec(cfg, draft_cfg, k_draft, temperature)
+
+
+def make_slot_admit_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
+                         temperature: float = 0.0) -> Callable:
+    """Fused dual-model admission for speculative serving: both prefills +
+    both slot inserts + the full model's first token in one jitted call."""
+    from repro.serving.spec import build_slot_admit_spec
+    return build_slot_admit_spec(cfg, draft_cfg, temperature)

@@ -236,6 +236,43 @@ def attn_decode_slots(cfg: ModelConfig, p: dict, x: jax.Array, cache_k,
     return out, cache_k, cache_v
 
 
+def attn_verify_slots(cfg: ModelConfig, p: dict, x: jax.Array, cache_k,
+                      cache_v, pos: jax.Array, *, inv_freq):
+    """T-token attention with PER-SLOT positions (speculative verify).
+
+    The multi-position sibling of :func:`attn_decode_slots`: slot ``b``'s
+    ``T`` input tokens occupy sequence positions ``pos[b] .. pos[b]+T-1``,
+    their KV is scattered into those cache rows, and query ``i`` attends
+    rows ``<= pos[b]+i`` (the committed prefix plus the draft prefix up to
+    itself). Writes past ``s_max`` fall out of bounds and are DROPPED by
+    JAX scatter semantics — such rows belong to draft positions that can
+    never be committed (admission enforces prompt + max_new_tokens <=
+    s_max), so their garbage logits are never sampled from. Rows past the
+    written window carry stale KV from evicted requests or rolled-back
+    drafts; the per-slot mask hides them, same as the decode path.
+
+    x: [B, T, d]; cache_k/v: [B, S_max, nkv, hd]; pos: [B] int32.
+    Returns (out [B,T,d], new_cache_k, new_cache_v).
+    """
+    B, T, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x)
+    positions = pos[:, None] + jnp.arange(T)[None, :]     # [B, T]
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    b_iota = jnp.arange(B)[:, None]
+    cache_k = cache_k.at[b_iota, positions].set(k.astype(cache_k.dtype))
+    cache_v = cache_v.at[b_iota, positions].set(v.astype(cache_v.dtype))
+    S_max = cache_k.shape[1]
+    valid = (jnp.arange(S_max)[None, None, :]
+             <= positions[:, :, None])[:, None, :, :]     # [B, 1, T, S_max]
+    out = _sdpa(q, cache_k, cache_v, valid, n_rep)
+    out = out.reshape(B, T, cfg.n_heads * cfg.hd)
+    out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+    return out, cache_k, cache_v
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -400,6 +400,50 @@ def decode_step_slots(cfg: ModelConfig, params: dict, cache: dict,
     return logits, new_cache
 
 
+def verify_step_slots(cfg: ModelConfig, params: dict, cache: dict,
+                      tokens: jax.Array):
+    """Multi-position forward across all serving slots (speculative verify).
+
+    tokens: [B, T] int32 — slot b's last committed token followed by its
+    draft proposals. One forward scores all T positions of every slot at
+    once (prefill-shaped: with T > 1 the MoE layers always take the
+    grouped/ragged path, never the T == 1 gather specialization), writing
+    KV into rows pos[b] .. pos[b]+T-1 of the slot cache. ``pos`` is NOT
+    advanced here: how many of the T positions become committed is the
+    acceptance rule's decision (``repro.serving.spec``), which rewinds or
+    advances ``pos`` for both caches after sampling. Returns
+    (logits [B, T, V], cache).
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"slotted verify is token-only (dense/moe), not {cfg.family}")
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    x = L.embed_apply(params["embed"], tokens)
+    pos = cache["pos"]
+
+    if "stack_c" in params and "stack" in params:
+        split = cfg.moe_split
+        x, nk1, nv1 = T.stack_verify_slots(cfg, params["stack"], x,
+                                           cache["k"][:split],
+                                           cache["v"][:split],
+                                           pos, inv_freq=inv_freq)
+        x, nk2, nv2 = T.stack_verify_slots(cfg, params["stack_c"], x,
+                                           cache["k"][split:],
+                                           cache["v"][split:],
+                                           pos, inv_freq=inv_freq)
+        nk = jnp.concatenate([nk1, nk2], axis=0)
+        nv = jnp.concatenate([nv1, nv2], axis=0)
+    else:
+        stack = params.get("stack", params.get("stack_c"))
+        x, nk, nv = T.stack_verify_slots(cfg, stack, x,
+                                         cache["k"], cache["v"], pos,
+                                         inv_freq=inv_freq)
+    new_cache = {"k": nk, "v": nv, "pos": pos}
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = L.lm_head(cfg, params["embed"], x)
+    return logits, new_cache
+
+
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
     """One decode step. token: [B] int32. Returns (logits [B, V], cache)."""
     inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)

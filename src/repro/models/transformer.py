@@ -153,6 +153,33 @@ def stack_decode_slots(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v,
     return y, nk, nv
 
 
+def stack_verify_slots(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v,
+                       pos, *, inv_freq):
+    """T-token forward with per-slot positions (speculative verify).
+
+    Same layer body as :func:`stack_decode_slots` but over T positions per
+    slot via ``attn_verify_slots``; x: [B, T, d]. With T > 1 the MoE
+    sub-block sees B*T tokens, so it always takes the grouped/ragged path —
+    the T == 1 gather specialization never applies to a verify forward.
+    Returns (y [B, T, d], new_k, new_v)."""
+    def body(h, xs):
+        layer_p, ck, cv = xs
+        hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+        a, ck, cv = L.attn_verify_slots(cfg, layer_p["attn"], hn, ck, cv, pos,
+                                        inv_freq=inv_freq)
+        h = h + a
+        hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+        if cfg.moe is not None:
+            out = M.moe_apply(cfg, layer_p["moe"], hn, need_aux=False)
+            h = h + out.y
+        else:
+            h = h + L.mlp_apply(layer_p["mlp"], hn)
+        return h, (ck, cv)
+
+    y, (nk, nv) = jax.lax.scan(body, x, (stacked, cache_k, cache_v))
+    return y, nk, nv
+
+
 def stack_prefill(cfg: ModelConfig, stacked: dict, x, *, inv_freq):
     """Full-sequence forward that also emits per-layer (k, v) decode caches.
     Returns (y, cache_k [L,B,S,nkv,hd], cache_v)."""

@@ -1,7 +1,10 @@
-"""Request-level serving: continuous batching over the slotted KV cache."""
+"""Request-level serving: continuous batching over the slotted KV cache,
+plus self-speculative decoding (draft = MergeMoE-compressed, verify = full;
+DESIGN.md §10)."""
 from repro.serving.engine import (  # noqa: F401
     Engine,
     EngineConfig,
     Request,
     poisson_trace,
 )
+from repro.serving.spec import accept_drafts  # noqa: F401

@@ -30,10 +30,24 @@ Design (decode dataflow details in DESIGN.md §7):
 * **Stop conditions.** Per-request ``max_new_tokens`` and optional
   ``eos_token``, evaluated on device inside the fused block; freed slots
   admit at the next block boundary.
+* **Speculative decoding.** With ``spec_draft`` (or direct
+  ``draft_cfg``/``draft_params``) the engine runs dual-artifact
+  draft-then-verify rounds (DESIGN.md §10): the MergeMoE-compressed draft
+  proposes ``spec_k`` tokens per slot, the full model verifies them in one
+  multi-position forward, and acceptance/rollback happens on device — all
+  inside ONE jitted call per round. Committed tokens are always full-model
+  samples, so spec mode is token-for-token identical to full-model decode
+  at any temperature.
 
 The clock is pluggable: ``clock='steps'`` interprets ``arrival_time`` in
 decode-step units (deterministic — used by tests and the CPU benchmark),
 ``clock='wall'`` in seconds.
+
+Sampling keys: every request gets the key ``fold_in(PRNGKey(seed+1), uid)``
+at admission and tokens draw Gumbel noise indexed by their own sequence
+position (``steps.sample_tokens``), so the sampled stream for a given
+(seed, uid, prompt) is IDENTICAL across engine modes — step loop, fused
+block, and speculative — and across scheduling differences between them.
 """
 from __future__ import annotations
 
@@ -52,6 +66,7 @@ from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.models.numerics import set_activation_mesh
+from repro.serving.spec import build_slot_admit_spec, build_slot_decode_spec
 
 
 @dataclasses.dataclass
@@ -99,18 +114,32 @@ class EngineConfig:
     # counters["implicit_transfers"], "strict" raises TraceGuardError,
     # "off" disables (plain jax.jit)
     trace_guard: str = "count"
+    # self-speculative decoding (DESIGN.md §10): directory of a
+    # ``save_compressed`` DRAFT artifact (the MergeMoE-merged model). None
+    # disables spec mode; tests may instead hand (draft_cfg, draft_params)
+    # straight to the Engine constructor.
+    spec_draft: Optional[str] = None
+    # draft proposals per verify round; each round commits 1..spec_k tokens
+    spec_k: int = 4
 
 
 class Engine:
     """Continuous-batching engine over a slotted KV cache."""
 
-    def __init__(self, ec: EngineConfig, cfg=None, params=None):
+    def __init__(self, ec: EngineConfig, cfg=None, params=None,
+                 draft_cfg=None, draft_params=None):
         self.ec = ec
         cfg = cfg if cfg is not None else (
             configs.get(ec.arch).reduced() if ec.reduced
             else configs.get(ec.arch))
-        if cfg.moe is not None and ec.dispatch is not None:
-            moe = dataclasses.replace(cfg.moe, dispatch=ec.dispatch)
+
+        def _serve_dispatch(c):
+            """Apply the engine's MoE dispatch override to a ModelConfig
+            (shared by the full and draft configs so both artifacts serve
+            under the same kernel policy)."""
+            if c.moe is None or ec.dispatch is None:
+                return c
+            moe = dataclasses.replace(c.moe, dispatch=ec.dispatch)
             if ec.dispatch == "gather":
                 # the gather ceiling must cover the decode token count
                 # (T = n_slots) or big-slot engines would silently fall back
@@ -118,7 +147,9 @@ class Engine:
                 moe = dataclasses.replace(
                     moe, gather_max_tokens=max(moe.gather_max_tokens,
                                                ec.n_slots))
-            cfg = cfg.replace(moe=moe)
+            return c.replace(moe=moe)
+
+        cfg = _serve_dispatch(cfg)
         if cfg.family not in ("dense", "moe"):
             raise NotImplementedError(
                 f"continuous batching serves token-only families "
@@ -134,10 +165,14 @@ class Engine:
         # host<->device crossing telemetry: device_calls counts jitted
         # dispatches, host_syncs counts device->host readbacks, tokens_out
         # counts generated tokens (dispatches-per-token = their ratio);
-        # retraces/implicit_transfers are maintained by the trace guard
-        # (DESIGN.md §9: both must stay 0 after warmup)
+        # tokens_drafted/accepted/rolled_back are spec-round bookkeeping
+        # (zero outside spec mode); retraces/implicit_transfers are
+        # maintained by the trace guard (DESIGN.md §9: both must stay 0
+        # after warmup)
         self.counters: Dict[str, int] = {
-            "device_calls": 0, "host_syncs": 0, "tokens_out": 0}
+            "device_calls": 0, "host_syncs": 0, "tokens_out": 0,
+            "tokens_drafted": 0, "tokens_accepted": 0,
+            "tokens_rolled_back": 0}
         from repro.analysis.trace_guard import TraceGuard
         self._guard = TraceGuard(ec.trace_guard, counters=self.counters)
         self._buckets = tuple(sorted(set(int(b) for b in ec.prefill_buckets)))
@@ -155,6 +190,44 @@ class Engine:
             expected_traces=1)
         self.cache = MD.init_slot_cache(cfg, ec.n_slots, ec.s_max)
 
+        # ---- speculative decoding (dual artifact, DESIGN.md §10) ----
+        self.draft_artifact: Optional[dict] = None
+        if ec.spec_draft is not None and draft_params is None:
+            from repro.ckpt import checkpoint as CKPT
+            draft_cfg, draft_params, self.draft_artifact = \
+                CKPT.load_compressed(ec.spec_draft)
+        self.spec = draft_params is not None
+        self.draft_cfg = self.draft_params = None
+        self.cache_draft = None
+        if self.spec:
+            if draft_cfg is None:
+                raise ValueError("draft_params given without draft_cfg")
+            draft_cfg = _serve_dispatch(draft_cfg)
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != full model vocab "
+                    f"{cfg.vocab_size}: the draft must be a compression of "
+                    f"the served model, not a different tokenizer")
+            if ec.spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            self.draft_cfg, self.draft_params = draft_cfg, draft_params
+            self.cache_draft = MD.init_slot_cache(draft_cfg, ec.n_slots,
+                                                  ec.s_max)
+            # the builders are wrapped directly (not via the steps.make_*
+            # aliases) so the lint analyzer's maker-root walk sees the
+            # closure bodies; one spec round per trace, same budget as the
+            # single-model entries
+            self._decode_spec = self._guard.wrap_jit(
+                "slot_decode_spec",
+                build_slot_decode_spec(cfg, draft_cfg, ec.spec_k,
+                                       ec.temperature),
+                expected_traces=1)
+            self._admit_spec = self._guard.wrap_jit(
+                "slot_admit_spec",
+                build_slot_admit_spec(cfg, draft_cfg, ec.temperature),
+                expected_traces=ST.admit_trace_budget(
+                    self._buckets, ec.s_max, ec.n_slots))
+
         self._slot_req: List[Optional[Request]] = [None] * ec.n_slots
         self._last_tok = np.zeros((ec.n_slots,), np.int32)
         self._active = np.zeros((ec.n_slots,), bool)
@@ -168,8 +241,11 @@ class Engine:
         self._next_uid = 0
         self._step_count = 0
         self._t0: Optional[float] = None
-        self._rng = np.random.default_rng(ec.seed)
-        self._key = jax.random.PRNGKey(ec.seed + 1)   # fused-loop sampling
+        # per-slot sampling keys: fold_in(base, uid) assigned at admission,
+        # so the key travels with the REQUEST — the sampled stream for a
+        # (seed, uid, prompt) is identical across engine modes/scheduling
+        self._key_base = jax.random.PRNGKey(ec.seed + 1)
+        self._slot_keys = np.zeros((ec.n_slots, 2), np.uint32)
         # plan/report extras when booted via from_checkpoint
         self.artifact: Optional[dict] = None
 
@@ -270,7 +346,8 @@ class Engine:
                 "slot_decode", self._decode, self.params, self.cache, toks,
                 act)
             self.counters["device_calls"] += 1
-            next_toks = self._sample(logits, greedy)
+            next_toks = self._sample(logits, greedy, self._slot_keys,
+                                     self._positions())
             self.counters["host_syncs"] += 1
             for slot in np.flatnonzero(self._active):
                 req = self._slot_req[slot]
@@ -305,12 +382,11 @@ class Engine:
             req = self._slot_req[s]
             rem[s] = req.max_new_tokens - len(req.out_tokens)
             eos[s] = -1 if req.eos_token is None else req.eos_token
-        self._key, sub = jax.random.split(self._key)
         # convert np inputs OUTSIDE the guarded region (explicit H2D); the
         # guarded fused block itself must touch the host zero times
         args = (self.params, self.cache, jnp.asarray(self._last_tok),
                 jnp.asarray(self._active), jnp.asarray(rem),
-                jnp.asarray(eos), sub)
+                jnp.asarray(eos), jnp.asarray(self._slot_keys))
         block, _, self.cache = self._guard.run(
             "slot_decode_multi", self._decode_multi, *args)
         self.counters["device_calls"] += 1
@@ -336,6 +412,66 @@ class Engine:
         self._step_count += K
         return finished
 
+    def step_spec(self, now: float | None = None) -> List[Request]:
+        """Admit due requests, then run ONE fused draft/verify round
+        (DESIGN.md §10): ``spec_k`` draft-model decode steps, one full-model
+        verify forward, acceptance/rollback — all in one device call.
+        Returns finished requests. The step clock advances by ``spec_k``
+        per round (the round's draft depth), so Poisson arrival traces in
+        step units drain at the fused block's granularity, like §7."""
+        now = self._now() if now is None else now
+        finished = self._admit(now)
+        K = self.ec.spec_k
+        if not self._active.any():
+            self._step_count += 1
+            return finished
+        n = self.ec.n_slots
+        rem = np.zeros((n,), np.int32)
+        eos = np.full((n,), -1, np.int32)
+        slots = np.flatnonzero(self._active)
+        for s in slots:
+            req = self._slot_req[s]
+            rem[s] = req.max_new_tokens - len(req.out_tokens)
+            eos[s] = -1 if req.eos_token is None else req.eos_token
+        args = (self.params, self.draft_params, self.cache, self.cache_draft,
+                jnp.asarray(self._last_tok), jnp.asarray(self._active),
+                jnp.asarray(rem), jnp.asarray(eos),
+                jnp.asarray(self._slot_keys))
+        block, _, self.cache, self.cache_draft = self._guard.run(
+            "slot_decode_spec", self._decode_spec, *args)
+        self.counters["device_calls"] += 1
+        # ONE readback: rows 0..K-1 = (token, emitted) like step_block,
+        # row K = (accepted drafts, drafted) per slot
+        block_np = np.asarray(block)
+        self.counters["host_syncs"] += 1
+        for s in slots:
+            req = self._slot_req[s]
+            for j in range(K):
+                if not block_np[j, s, 1]:
+                    break
+                tok = int(block_np[j, s, 0])
+                req.out_tokens.append(tok)
+                self.counters["tokens_out"] += 1
+                self._last_tok[s] = tok
+                if self._is_done(req, tok):
+                    self._evict(s, now + j if self.ec.clock == "steps"
+                                else self._now())
+                    finished.append(req)
+                    break
+            n_match = int(block_np[K, s, 0])
+            drafted = int(block_np[K, s, 1])
+            self.counters["tokens_drafted"] += drafted
+            self.counters["tokens_accepted"] += n_match
+            self.counters["tokens_rolled_back"] += drafted - n_match
+        self._step_count += K
+        return finished
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the full model accepted so far."""
+        return (self.counters["tokens_accepted"]
+                / max(self.counters["tokens_drafted"], 1))
+
     def run(self, requests: Sequence[Request] | None = None) -> List[Request]:
         """Drive until every pending/submitted request completes."""
         if requests:
@@ -350,22 +486,30 @@ class Engine:
             for r in requests:
                 heapq.heappush(self._pending,
                                (r.arrival_time, r.uid, next(self._seq), r))
-        advance = self.step_block if self.ec.decode_block > 1 else self.step
+        if self.spec:
+            advance = self.step_spec
+        elif self.ec.decode_block > 1:
+            advance = self.step_block
+        else:
+            advance = self.step
         done: List[Request] = []
         while not self.idle:
             done.extend(advance())
         return sorted(done, key=lambda r: r.uid)
 
-    def expert_weight_dtypes(self) -> Tuple[str, str]:
+    def expert_weight_dtypes(self, params=None) -> Tuple[str, str]:
         """(prefix, suffix/uncompressed) expert-table storage dtypes,
         inferred from the parameter tree ('int8' when a stack carries the
-        quantized ``qexp`` subtree, DESIGN.md §8)."""
+        quantized ``qexp`` subtree, DESIGN.md §8). ``params`` defaults to
+        the served model; pass ``self.draft_params`` for the draft."""
+        params = self.params if params is None else params
+
         def one(stack_key):
-            stack = self.params.get(stack_key)
+            stack = params.get(stack_key)
             if stack is None or "moe" not in stack:
                 return "bf16"
             return "int8" if "qexp" in stack["moe"] else "bf16"
-        return one("stack"), one("stack_c" if "stack_c" in self.params
+        return one("stack"), one("stack_c" if "stack_c" in params
                                  else "stack")
 
     def modeled_decode_traffic(self, pos: int | None = None) -> Dict[str, float]:
@@ -408,13 +552,13 @@ class Engine:
             raise ValueError(f"k_steps={K} too large for s_max={s_max}")
         multi = ST.make_slot_decode_multi(self.cfg, K, self.ec.temperature)
 
-        def block(params, cache, toks, act, rem, eos, key):
+        def block(params, cache, toks, act, rem, eos, keys):
             # keep pos in bounds ON DEVICE: reset to mid-cache before the
             # scanned steps would run past the last slot row
             pos = cache["pos"]
             pos = jnp.where(pos + K >= s_max, s_max // 2, pos)
             return multi(params, dict(cache, pos=pos), toks, act, rem, eos,
-                         key)
+                         keys)
 
         fn = jax.jit(block)
         cache = jax.tree.map(jnp.copy, self.cache)
@@ -423,8 +567,10 @@ class Engine:
         act = jnp.ones((n,), bool)
         rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
         eos = jnp.full((n,), -1, jnp.int32)
-        key = jax.random.PRNGKey(0)
-        out, _, cache = fn(self.params, cache, toks, act, rem, eos, key)
+        # seeded like every other sampled path (EngineConfig.seed), so a
+        # temperature>0 benchmark decode is reproducible run to run
+        keys = jax.random.split(jax.random.PRNGKey(self.ec.seed), n)
+        out, _, cache = fn(self.params, cache, toks, act, rem, eos, keys)
         jax.block_until_ready(out)                                   # warm
         # the timed loop runs under transfer_guard("disallow"): a benchmark
         # number that silently included an implicit host transfer per block
@@ -433,7 +579,7 @@ class Engine:
             t0 = time.perf_counter()
             for _ in range(iters):
                 out, _, cache = fn(self.params, cache, toks, act, rem, eos,
-                                   key)
+                                   keys)
             jax.block_until_ready(out)
             dt = time.perf_counter() - t0
         tok_per_s = n * K * iters / dt
@@ -455,6 +601,119 @@ class Engine:
                 traffic["moe_expert_bytes_per_token"],
             "roofline_tok_per_s": roof,
             "roofline_fraction": tok_per_s / roof,
+        }
+
+    def modeled_spec_decode_traffic(self, mean_committed: float,
+                                    pos: int | None = None,
+                                    n_slots: int | None = None
+                                    ) -> Dict[str, float]:
+        """Analytic HBM bytes per COMMITTED token for one draft/verify
+        round of this engine (``hlo_analysis.spec_decode_traffic_model``,
+        weight dtypes read off both parameter trees). ``mean_committed``
+        is the measured tokens committed per slot per round — acceptance
+        is an empirical property of the (draft, model) pair, so the model
+        takes it as input rather than guessing. ``n_slots`` lets callers
+        re-model the same artifacts at deployment batch sizes (the
+        expert-stream saturation point moves with it, DESIGN.md §10)."""
+        from repro.launch.hlo_analysis import spec_decode_traffic_model
+        prefix_dt, suffix_dt = self.expert_weight_dtypes()
+        d_prefix_dt, d_suffix_dt = self.expert_weight_dtypes(
+            self.draft_params)
+        return spec_decode_traffic_model(
+            self.cfg, self.draft_cfg, k_draft=self.ec.spec_k,
+            n_slots=self.ec.n_slots if n_slots is None else n_slots,
+            pos=self.ec.s_max // 2 if pos is None else pos,
+            mean_committed=mean_committed,
+            weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt,
+            draft_weight_dtype=d_suffix_dt,
+            draft_prefix_weight_dtype=d_prefix_dt)
+
+    def bench_spec_decode(self, iters: int = 50) -> Dict[str, float]:
+        """Steady-state speculative throughput with every slot active,
+        bypassing admission — the spec-mode sibling of :meth:`bench_decode`.
+
+        Runs ``iters`` fused draft/verify rounds on scratch copies of both
+        caches. The next round's input token (the last committed verify
+        sample) is computed ON DEVICE inside the jitted wrapper, so the
+        timed loop has zero host readbacks — the per-round blocks are
+        collected device-side and summed after the clock stops. Returns
+        measured committed tok/s, per-round acceptance telemetry, and the
+        modeled spec traffic of the served artifact pair at the MEASURED
+        acceptance (``spec_bytes_per_token``, ``modeled_speedup`` vs the
+        full-model decode roofline; on CPU the measured tok/s is
+        FLOPs-bound and the modeled bytes are the portable signal, same
+        stance as :meth:`bench_decode`)."""
+        if not self.spec:
+            raise ValueError("bench_spec_decode requires spec mode "
+                             "(spec_draft / draft_params)")
+        K = self.ec.spec_k
+        n = self.ec.n_slots
+        s_max = self.ec.s_max
+        if K + 1 >= s_max // 2:
+            raise ValueError(f"spec_k={K} too large for s_max={s_max}")
+        spec = ST.make_slot_decode_spec(self.cfg, self.draft_cfg, K,
+                                        self.ec.temperature)
+
+        def round_(params, dparams, cache, dcache, toks, act, rem, eos,
+                   keys):
+            # keep pos in bounds ON DEVICE; both caches share one pos by
+            # construction, so reset both from the full model's
+            pos = cache["pos"]
+            pos = jnp.where(pos + K + 1 >= s_max, s_max // 2, pos)
+            block, _, cache, dcache = spec(
+                params, dparams, dict(cache, pos=pos), dict(dcache, pos=pos),
+                toks, act, rem, eos, keys)
+            # next input token = last committed verify sample, computed on
+            # device so the timed loop never reads the block back
+            emit = block[:K, :, 1]
+            n_c = jnp.sum(emit, axis=0)
+            last = jnp.take_along_axis(
+                block[:K, :, 0], jnp.maximum(n_c - 1, 0)[None, :], axis=0)[0]
+            toks = jnp.where(n_c > 0, last, toks)
+            return block, toks, cache, dcache
+
+        fn = jax.jit(round_)
+        cache = jax.tree.map(jnp.copy, self.cache)
+        cache["pos"] = jnp.full((n,), s_max // 2, jnp.int32)
+        dcache = jax.tree.map(jnp.copy, self.cache_draft)
+        toks = jnp.zeros((n,), jnp.int32)
+        act = jnp.ones((n,), bool)
+        rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
+        eos = jnp.full((n,), -1, jnp.int32)
+        keys = jax.random.split(jax.random.PRNGKey(self.ec.seed), n)
+        block, toks, cache, dcache = fn(self.params, self.draft_params,
+                                        cache, dcache, toks, act, rem, eos,
+                                        keys)
+        jax.block_until_ready(block)                                 # warm
+        blocks = []
+        with jax.transfer_guard("disallow"):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                block, toks, cache, dcache = fn(
+                    self.params, self.draft_params, cache, dcache, toks,
+                    act, rem, eos, keys)
+                blocks.append(block)
+            jax.block_until_ready(block)
+            dt = time.perf_counter() - t0
+        committed = drafted = accepted = 0
+        for b in blocks:
+            bn = np.asarray(b)
+            committed += int(bn[:K, :, 1].sum())
+            accepted += int(bn[K, :, 0].sum())
+            drafted += int(bn[K, :, 1].sum())
+        mean_committed = committed / (iters * n)
+        traffic = self.modeled_spec_decode_traffic(mean_committed)
+        return {
+            "tok_per_s": committed / dt,
+            "rounds_per_s": iters / dt,
+            "acceptance_rate": accepted / max(drafted, 1),
+            "mean_committed_per_round": mean_committed,
+            # 1 jitted call + 1 readback per round
+            "host_dispatches_per_token": 2.0 * iters / max(committed, 1),
+            "k_draft": K,
+            "spec_bytes_per_token": traffic["bytes_per_token"],
+            "baseline_bytes_per_token": traffic["baseline_bytes_per_token"],
+            "modeled_speedup": traffic["modeled_speedup"],
         }
 
     # ------------------------------------------------------------ internals
@@ -482,12 +741,27 @@ class Engine:
         big = self._buckets[-1] if self._buckets else 1
         return min(-(-n // big) * big, self.ec.s_max)
 
-    def _sample(self, logits, greedy) -> np.ndarray:
+    def _positions(self) -> np.ndarray:
+        """Sequence position the NEXT sampled token will occupy, per slot —
+        the host-side mirror of the device loops' post-step ``cache['pos']``
+        (prompt length + tokens generated so far)."""
+        q = np.zeros((self.ec.n_slots,), np.int32)
+        for s in np.flatnonzero(self._active):
+            req = self._slot_req[s]
+            q[s] = req.n_prompt + len(req.out_tokens)
+        return q
+
+    def _sample(self, logits, greedy, keys, positions) -> np.ndarray:
+        """Host-side sampling fallback for the step-at-a-time loop and
+        (non-spec) admission. Runs the SAME ``steps.sample_tokens`` the
+        fused device loops run, on the same (key, position) pairs, so
+        host- and device-sampled streams agree bitwise at any
+        temperature."""
         if self.ec.temperature <= 0.0:
             return np.asarray(greedy)
-        lg = np.asarray(logits, np.float64) / self.ec.temperature
-        g = self._rng.gumbel(size=lg.shape)
-        return np.argmax(lg + g, axis=-1).astype(np.int32)
+        toks = ST.sample_tokens(jnp.asarray(logits), self.ec.temperature,
+                                jnp.asarray(keys), jnp.asarray(positions))
+        return np.asarray(toks)
 
     def _is_done(self, req: Request, tok: int) -> bool:
         if req.eos_token is not None and tok == req.eos_token:
@@ -540,15 +814,32 @@ class Engine:
         toks = np.zeros((Bp, bucket), np.int32)
         lengths = np.ones((Bp,), np.int32)
         slots = np.full((Bp,), self.ec.n_slots, np.int32)   # pads: OOB, dropped
+        keys = np.zeros((Bp, 2), np.uint32)
         for i, (req, slot) in enumerate(group):
             toks[i, :req.n_prompt] = req.prompt
             lengths[i] = req.n_prompt
             slots[i] = slot
-        logits, greedy, self.cache = self._admit_step(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(lengths),
-            jnp.asarray(slots))
-        self.counters["device_calls"] += 1
-        first = self._sample(logits[:B], greedy[:B])
+            # the request's sampling key, derived from its uid so the
+            # sampled stream is scheduling-independent (module docstring)
+            self._slot_keys[slot] = np.asarray(
+                jax.random.fold_in(self._key_base, req.uid), np.uint32)
+            keys[i] = self._slot_keys[slot]
+        if self.spec:
+            logits, first_dev, self.cache, self.cache_draft = self._admit_spec(
+                self.params, self.draft_params, self.cache, self.cache_draft,
+                jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(slots),
+                jnp.asarray(keys))
+            self.counters["device_calls"] += 1
+            first = np.asarray(first_dev[:B])
+        else:
+            logits, greedy, self.cache = self._admit_step(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(lengths), jnp.asarray(slots))
+            self.counters["device_calls"] += 1
+            # the first token occupies position ``n_prompt`` — same noise
+            # index the device paths use for it
+            first = self._sample(logits[:B], greedy[:B], keys[:B],
+                                 lengths[:B])
         self.counters["host_syncs"] += 1
         for i, (req, slot) in enumerate(group):
             tok = int(first[i])

@@ -1,0 +1,195 @@
+"""Self-speculative decoding: the MergeMoE-compressed model drafts, the
+full model verifies — on device (DESIGN.md §10).
+
+MergeMoE solves its merge matrices to minimize the gap between the merged
+experts' OUTPUTS and the full model's, which is exactly the property a
+speculative-decoding draft needs: cheap forward, output distribution close
+to the target. The residual gap is small but real, so drafts are verified,
+never trusted — every committed token is a FULL-MODEL sample by
+construction, which makes spec decode token-for-token identical to plain
+full-model decode at any temperature.
+
+One round, inside one jitted program (``build_slot_decode_spec``):
+
+1. DRAFT — ``k_draft`` fused decode steps of the compressed model over all
+   slots (the same scan shape as ``steps.make_slot_decode_multi``),
+   sampling each proposal with the position-indexed Gumbel schedule
+   (``steps.sample_tokens``).
+2. VERIFY — the full model scores the last committed token plus all K
+   proposals in ONE multi-position forward (``model.verify_step_slots``;
+   prefill-shaped, so MoE dispatch takes the grouped path) and samples a
+   full-model token at every position UNDER THE SAME NOISE the draft used.
+3. ACCEPT/ROLLBACK — longest matching prefix between proposals and verify
+   samples (``accept_drafts``); both caches' ``pos`` move to the committed
+   length. Rollback is free: the rows past ``pos`` hold stale draft KV that
+   the per-slot causal mask hides and the next round overwrites in place —
+   the same mechanism §7 already uses for slot eviction.
+
+Import direction: this module imports models + launch.steps; the engine
+imports launch.steps, whose ``make_slot_*_spec`` wrappers lazy-import this
+module. Nothing here imports the engine.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as MD
+from repro.launch import steps as ST
+
+
+def accept_drafts(drafts: jax.Array, verify: jax.Array, active: jax.Array,
+                  remaining: jax.Array, eos: jax.Array, k_draft: int):
+    """Longest-matching-prefix acceptance + §7 stop-flag semantics.
+
+    drafts:    [B, K]   draft proposals d_1..d_K
+    verify:    [B, K+1] full-model samples v_0..v_K (v_j scored at the
+               position AFTER draft prefix d_1..d_j)
+    active:    [B] bool — slots participating in this round
+    remaining: [B] int32 — generation budget left per slot
+    eos:       [B] int32 — stop token per slot (-1 = none)
+
+    Committed tokens are ALWAYS verify samples: v_j is a commit candidate
+    when every draft before it matched (d_i == v_{i-1} for all i <= j), so
+    v_0 commits even when every draft is rejected — a round always makes
+    progress. Candidates are capped at K per round: the (K+1)-th verify
+    sample is correct too, but the draft cache holds no KV for d_K (the
+    K-step draft scan consumes t0, d_1..d_{K-1}), so committing it would
+    advance ``pos`` past a garbage row the draft model attends next round.
+
+    The stop flags compose with acceptance exactly like §7's fused decode:
+    a candidate is EMITTED only while the slot is active, within budget,
+    and no earlier emitted candidate was eos — an eos inside the accepted
+    prefix freezes the slot mid-round and discards everything after it.
+
+    Returns (emitted [B, K] bool, n_commit [B] int32, n_match [B] int32,
+    still_active [B] bool). ``n_match`` (accepted drafts, gated on
+    ``active``) feeds the engine's drafted/accepted/rolled-back counters.
+    """
+    K = int(k_draft)
+    match = drafts == verify[:, :K]
+    # prefix length: number of leading True entries per row
+    n_match = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    n_acc = jnp.minimum(n_match + 1, K)
+    cand = verify[:, :K]
+    idx = jnp.arange(K)[None, :]
+    is_eos = (cand == eos[:, None]) & (eos[:, None] >= 0)
+    eos_before = jnp.cumsum(is_eos.astype(jnp.int32), axis=1) - is_eos
+    emitted = ((idx < n_acc[:, None]) & (idx < remaining[:, None])
+               & (eos_before == 0) & active[:, None])
+    n_commit = jnp.sum(emitted.astype(jnp.int32), axis=1)
+    hit_eos = jnp.any(emitted & is_eos, axis=1)
+    still = active & ~hit_eos & (remaining - n_commit > 0)
+    return emitted, n_commit, n_match * active.astype(jnp.int32), still
+
+
+def build_slot_decode_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
+                           k_draft: int, temperature: float = 0.0) -> Callable:
+    """Build the fused draft/verify round (engine entry:
+    ``steps.make_slot_decode_spec``).
+
+    slot_decode_spec(params, draft_params, cache, draft_cache, token [B],
+    active [B], remaining [B], eos [B], keys [B, 2])
+    -> (block [K+1, B, 2] int32, active [B] bool, cache, draft_cache)
+
+    Rows 0..K-1 of ``block`` are ``(token, emitted)`` pairs with exactly
+    the ``make_slot_decode_multi`` contract, so the engine's replay loop is
+    shared. Row K packs the acceptance stats ``(n_match, n_drafted)`` per
+    slot into the same array, keeping the whole round at ONE device->host
+    readback.
+    """
+    K = int(k_draft)
+    if K < 1:
+        raise ValueError(f"k_draft must be >= 1, got {k_draft}")
+
+    def slot_decode_spec(params, draft_params, cache, draft_cache, token,
+                         active, remaining, eos, keys):
+        pos0 = cache["pos"]
+
+        # 1. draft: K fused decode steps of the compressed model. No eos /
+        # budget freezing inside the draft — rejected tail tokens are
+        # discarded by acceptance anyway, and the stop flags are applied to
+        # the COMMITTED stream below, where they are authoritative.
+        def dstep(carry, _):
+            dcache, tok = carry
+            logits, dcache = MD.decode_step_slots(draft_cfg, draft_params,
+                                                  dcache, tok, active)
+            nxt = ST.sample_tokens(logits, temperature, keys, dcache["pos"])
+            return (dcache, nxt), nxt
+
+        (draft_cache, _), drafts = jax.lax.scan(
+            dstep, (draft_cache, token), None, length=K)
+        drafts = jnp.swapaxes(drafts, 0, 1)                    # [B, K]
+
+        # 2. verify: one full-model forward over [t0, d_1..d_K], sampled
+        # under the SAME (key, position) noise the draft used — v_{j-1}
+        # and d_j score the same position, so agreement means "the full
+        # model would have sampled exactly this token".
+        vtokens = jnp.concatenate([token[:, None], drafts], axis=1)
+        vlogits, cache = MD.verify_step_slots(cfg, params, cache, vtokens)
+        B, T, V = vlogits.shape
+        vpos = pos0[:, None] + 1 + jnp.arange(T)[None, :]      # [B, K+1]
+        vkeys = jnp.broadcast_to(keys[:, None, :],
+                                 (B, T) + keys.shape[1:]).reshape((B * T,)
+                                                                  + keys.shape[1:])
+        verify = ST.sample_tokens(vlogits.reshape(B * T, V), temperature,
+                                  vkeys, vpos.reshape(-1)).reshape(B, T)
+
+        # 3. accept / rollback
+        emitted, n_commit, n_match, still = accept_drafts(
+            drafts, verify, active, remaining, eos, K)
+
+        # rollback is free: pos = committed length. Rows past it hold stale
+        # draft (or rejected-verify) KV that the per-slot causal mask hides
+        # and the next round overwrites in place — §7's eviction semantics,
+        # reused unchanged. The draft cache's pos (advanced K times above)
+        # is pulled back to agree with the full cache bitwise.
+        new_pos = pos0 + n_commit
+        cache = dict(cache, pos=new_pos)
+        draft_cache = dict(draft_cache, pos=new_pos)
+
+        cand = verify[:, :K]
+        stats = jnp.stack(
+            [n_match, jnp.where(active, K, 0).astype(jnp.int32)], axis=-1)
+        block = jnp.concatenate(
+            [jnp.stack([jnp.swapaxes(cand, 0, 1),
+                        jnp.swapaxes(emitted, 0, 1).astype(jnp.int32)],
+                       axis=-1),
+             stats[None]], axis=0)                             # [K+1, B, 2]
+        return block, still, cache, draft_cache
+
+    return slot_decode_spec
+
+
+def build_slot_admit_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
+                          temperature: float = 0.0) -> Callable:
+    """Build fused dual-model admission (engine entry:
+    ``steps.make_slot_admit_spec``).
+
+    slot_admit_spec(params, draft_params, cache, draft_cache,
+    tokens [B, S_bucket], lengths [B], slots [B], keys [B, 2])
+    -> (logits [B, V], first [B] int32, cache, draft_cache)
+
+    Both models prefill the same padded prompt group and insert into their
+    own slot caches in ONE dispatch (pad rows carry out-of-bounds slot ids;
+    scatter drops them — the single-model ``make_slot_admit`` contract).
+    The first token is sampled from the FULL model's prefill logits at
+    position ``lengths`` under the position-indexed schedule: the draft
+    never decides a committed token, and the sample is bitwise what any
+    non-spec engine mode produces for the same request.
+    """
+    def slot_admit_spec(params, draft_params, cache, draft_cache, tokens,
+                        lengths, slots, keys):
+        logits, k_new, v_new = MD.prefill_slots(cfg, params, tokens, lengths)
+        cache = MD.insert_slots(cache, slots, k_new, v_new, lengths)
+        dlogits, dk, dv = MD.prefill_slots(draft_cfg, draft_params, tokens,
+                                           lengths)
+        del dlogits  # the draft's first-token opinion is never consulted
+        draft_cache = MD.insert_slots(draft_cache, slots, dk, dv, lengths)
+        first = ST.sample_tokens(logits, temperature, keys, lengths)
+        return logits, first, cache, draft_cache
+
+    return slot_admit_spec

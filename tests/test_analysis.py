@@ -122,6 +122,16 @@ def test_reachability_covers_hot_paths():
         ("repro.launch.steps",
          "make_slot_decode_multi.slot_decode_multi.step"),
         ("repro.serving.engine", "Engine.bench_decode.block"),
+        # speculative decoding (DESIGN.md §10): the draft->verify->accept
+        # round and its model-side verify forward
+        ("repro.launch.steps", "sample_tokens"),
+        ("repro.serving.spec", "build_slot_decode_spec.slot_decode_spec"),
+        ("repro.serving.spec", "build_slot_admit_spec.slot_admit_spec"),
+        ("repro.serving.spec", "accept_drafts"),
+        ("repro.models.model", "verify_step_slots"),
+        ("repro.models.transformer", "stack_verify_slots"),
+        ("repro.models.layers", "attn_verify_slots"),
+        ("repro.serving.engine", "Engine.bench_spec_decode.round_"),
     ]
     for entry in must_reach:
         assert entry in a.reachable, entry

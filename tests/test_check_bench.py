@@ -33,6 +33,20 @@ def good():
             "modeled_full_scale": {"int8_full": {
                 "expert_stream_reduction_vs_bf16_half": 3.9}},
         },
+        "spec": {
+            "rows": {
+                "k4_int8_half": _rec(draft="int8_half",
+                                     acceptance_rate=0.03),
+                "k4_int8_full": _rec(draft="int8_full",
+                                     acceptance_rate=0.9),
+            },
+            "parity_greedy_bitwise": True, "parity_t07_bitwise": True,
+            "acceptance_floor_self": 0.5,
+            "acceptance_floor_merged": 0.0078,
+            "reference_acceptance": 0.85, "gate_slots": 64,
+            "speedup_gate": 1.0, "modeled_speedup_at_reference": 1.38,
+            "acceptance_ok": True, "speedup_ok": True,
+        },
         "parity": {"fused_vs_step_bitwise": True,
                    "gather_vs_ragged_bitwise": True,
                    "batched_vs_serial_admission_bitwise": True},
@@ -46,7 +60,8 @@ def test_good_summary_passes(good):
 def test_records_enumerates_all_rows(good):
     labels = [label for label, _ in _records(good)]
     assert labels == ["full/before", "full/after", "compressed/before",
-                      "compressed/after", "int8/full", "int8/compressed"]
+                      "compressed/after", "int8/full", "int8/compressed",
+                      "spec/k4_int8_half", "spec/k4_int8_full"]
 
 
 def test_parity_bit_false_fails(good):
@@ -81,6 +96,48 @@ def test_int8_expert_stream_gate(good):
     bad = copy.deepcopy(good)
     bad["int8"]["expert_stream_ok"] = False
     assert any("expert-stream" in e for e in check(bad))
+
+
+def test_spec_section_missing_fails(good):
+    bad = copy.deepcopy(good)
+    del bad["spec"]
+    assert any("spec section missing" in e for e in check(bad))
+
+
+def test_spec_parity_bits_gate(good):
+    for key in ("parity_greedy_bitwise", "parity_t07_bitwise"):
+        bad = copy.deepcopy(good)
+        bad["spec"][key] = False
+        errs = check(bad)
+        assert len(errs) == 1 and key in errs[0]
+
+
+def test_spec_acceptance_checked_against_recorded_floor(good):
+    """The gate re-checks the NUMBERS, not the summary's acceptance_ok bit:
+    a row below its floor fails even with acceptance_ok still True."""
+    bad = copy.deepcopy(good)
+    bad["spec"]["rows"]["k4_int8_full"]["acceptance_rate"] = 0.2  # < 0.5
+    errs = check(bad)
+    assert len(errs) == 1 and "spec/k4_int8_full" in errs[0] \
+        and "floor 0.5" in errs[0]
+    bad = copy.deepcopy(good)
+    bad["spec"]["rows"]["k4_int8_half"]["acceptance_rate"] = 0.001
+    assert any("spec/k4_int8_half" in e and "floor 0.0078" in e
+               for e in check(bad))
+
+
+def test_spec_speedup_checked_against_recorded_gate(good):
+    bad = copy.deepcopy(good)
+    bad["spec"]["modeled_speedup_at_reference"] = 0.9   # speedup_ok untouched
+    errs = check(bad)
+    assert len(errs) == 1 and "0.9x" in errs[0] and "below gate 1.0x" in errs[0]
+
+
+def test_spec_row_counters_gated(good):
+    bad = copy.deepcopy(good)
+    bad["spec"]["rows"]["k4_int8_half"]["retraces"] = 3
+    errs = check(bad)
+    assert len(errs) == 1 and "spec/k4_int8_half" in errs[0]
 
 
 def test_nonzero_retrace_fails_that_row_only(good):

@@ -1,0 +1,346 @@
+"""Self-speculative decoding (DESIGN.md §10): the MergeMoE-compressed model
+drafts K tokens per slot, the full model verifies them in one multi-position
+forward, and accept/rollback happens on device.
+
+The contract under test is EXACTNESS, not similarity: whatever the draft
+proposes, the committed tokens must be bitwise what the full model would
+have produced — greedy via longest-matching-prefix + verify-sample commit,
+and at temperature > 0 via the position-indexed Gumbel key schedule (the
+noise for the token occupying sequence position q of request uid depends
+only on (seed, uid, q), never on engine mode), so draft and verify score
+each position under the SAME noise and acceptance is exact coupling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import compress as CMP
+from repro.launch import steps as ST
+from repro.models import model as MD
+from repro.serving import Engine, EngineConfig, accept_drafts, poisson_trace
+
+ARCH = "qwen3-moe-30b-a3b"
+
+
+# --------------------------------------------------------------------------
+# sampling primitive: position-indexed Gumbel (satellite: temperature > 0)
+# --------------------------------------------------------------------------
+
+def test_sample_tokens_greedy_is_argmax():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 17)),
+                         jnp.float32)
+    keys = jnp.zeros((3, 2), jnp.uint32)
+    pos = jnp.arange(3, dtype=jnp.int32)
+    out = ST.sample_tokens(logits, 0.0, keys, pos)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.argmax(np.asarray(logits), -1))
+
+
+def test_sample_tokens_device_matches_host():
+    """The jitted (device) sampler and the eager (host) sampler are the one
+    function evaluated two ways — bitwise-identical tokens. This is what
+    lets the engine's host-side admission sampling agree with the on-device
+    decode/verify sampling."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(5, 64)), jnp.float32)
+    base = jax.random.PRNGKey(123)
+    keys = jnp.stack([jax.random.fold_in(base, u) for u in range(5)])
+    pos = jnp.asarray([0, 7, 7, 31, 2], jnp.int32)
+    jitted = jax.jit(lambda l, k, p: ST.sample_tokens(l, 0.7, k, p))
+    host = ST.sample_tokens(logits, 0.7, keys, pos)
+    np.testing.assert_array_equal(np.asarray(jitted(logits, keys, pos)),
+                                  np.asarray(host))
+
+
+def test_sample_tokens_keyed_by_position_only():
+    """Noise depends only on (key, position) — not on where the row sits in
+    the batch. This is the property that makes draft-step j and
+    verify-position j score the same token under the same noise."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    k1 = jax.random.fold_in(jax.random.PRNGKey(9), 4)
+    k2 = jax.random.fold_in(jax.random.PRNGKey(9), 5)
+    batched = ST.sample_tokens(logits, 0.5, jnp.stack([k1, k2]),
+                               jnp.asarray([11, 3], jnp.int32))
+    solo0 = ST.sample_tokens(logits[:1], 0.5, k1[None],
+                             jnp.asarray([11], jnp.int32))
+    solo1 = ST.sample_tokens(logits[1:], 0.5, k2[None],
+                             jnp.asarray([3], jnp.int32))
+    assert int(batched[0]) == int(solo0[0])
+    assert int(batched[1]) == int(solo1[0])
+    # different position => different noise => (almost surely) some
+    # different draws across a sweep
+    sweep = [int(ST.sample_tokens(logits[:1], 1.5, k1[None],
+                                  jnp.asarray([q], jnp.int32))[0])
+             for q in range(32)]
+    assert len(set(sweep)) > 1
+
+
+def test_sample_tokens_distribution_matches_softmax():
+    """Gumbel-max sampling is distributionally exact: over many positions
+    (independent keys) the empirical token frequencies converge to
+    softmax(logits / T)."""
+    V, N, T = 8, 8192, 1.0
+    logits = jnp.linspace(0.0, 2.0, V, dtype=jnp.float32)
+    key = jax.random.PRNGKey(77)
+    toks = ST.sample_tokens(jnp.broadcast_to(logits, (N, V)), T,
+                            jnp.broadcast_to(key, (N, 2)),
+                            jnp.arange(N, dtype=jnp.int32))
+    freq = np.bincount(np.asarray(toks), minlength=V) / N
+    expect = np.asarray(jax.nn.softmax(logits / T))
+    np.testing.assert_allclose(freq, expect, atol=4.0 / np.sqrt(N))
+
+
+# --------------------------------------------------------------------------
+# acceptance rule unit tests (satellite: rollback edge cases)
+# --------------------------------------------------------------------------
+
+def _accept(drafts, verify, active=True, remaining=99, eos=-1, k=4):
+    out = accept_drafts(
+        jnp.asarray([drafts], jnp.int32), jnp.asarray([verify], jnp.int32),
+        jnp.asarray([active]), jnp.asarray([remaining], jnp.int32),
+        jnp.asarray([eos], jnp.int32), k)
+    emitted, n_commit, n_match, still = (np.asarray(x)[0] for x in out)
+    return emitted, int(n_commit), int(n_match), bool(still)
+
+
+def test_accept_all_rejected_still_commits_one():
+    """Every draft wrong: the round still commits v_0 (the verify sample at
+    the round's first position) — progress is guaranteed, never a stall."""
+    emitted, n_commit, n_match, still = _accept([1, 2, 3, 4], [9, 8, 7, 6, 5])
+    assert n_match == 0 and n_commit == 1
+    np.testing.assert_array_equal(emitted, [True, False, False, False])
+    assert still
+
+
+def test_accept_all_accepted_commits_k_without_bonus():
+    """Every draft right: commit exactly K — the classic bonus (K+1)th
+    verify token is deliberately NOT committed, because the draft cache has
+    no KV row for it and committing it would leave an attended hole."""
+    emitted, n_commit, n_match, still = _accept([1, 2, 3, 4], [1, 2, 3, 4, 9])
+    assert n_match == 4 and n_commit == 4
+    np.testing.assert_array_equal(emitted, [True] * 4)
+    assert still
+
+
+def test_accept_partial_prefix():
+    """First divergence cuts the prefix; the verify sample at the cut
+    position is committed in the rejected draft's place."""
+    emitted, n_commit, n_match, _ = _accept([1, 2, 3, 4], [1, 2, 9, 9, 9])
+    assert n_match == 2 and n_commit == 3
+    np.testing.assert_array_equal(emitted, [True, True, True, False])
+
+
+def test_accept_eos_inside_accepted_prefix_stops_slot():
+    emitted, n_commit, n_match, still = _accept(
+        [1, 2, 3, 4], [1, 2, 3, 4, 9], eos=2)
+    assert n_match == 4
+    assert n_commit == 2                      # tokens after the eos dropped
+    np.testing.assert_array_equal(emitted, [True, True, False, False])
+    assert not still                          # slot froze on eos
+
+
+def test_accept_remaining_budget_truncates():
+    emitted, n_commit, _, still = _accept([1, 2, 3, 4], [1, 2, 3, 4, 9],
+                                          remaining=2)
+    assert n_commit == 2
+    np.testing.assert_array_equal(emitted, [True, True, False, False])
+    assert not still                          # budget exhausted
+
+
+def test_accept_inactive_slot_commits_nothing():
+    emitted, n_commit, n_match, still = _accept([1, 2, 3, 4], [1, 2, 3, 4, 9],
+                                                active=False)
+    assert n_commit == 0 and n_match == 0 and not still
+    np.testing.assert_array_equal(emitted, [False] * 4)
+
+
+def test_accept_eos_negative_means_disabled():
+    """eos == -1 (no eos token) must never match, even against token 0 or
+    negative-looking garbage."""
+    emitted, n_commit, _, still = _accept([0, 0, 0, 0], [0, 0, 0, 0, 0],
+                                          eos=-1)
+    assert n_commit == 4 and still
+
+
+# --------------------------------------------------------------------------
+# engine-level parity on a staggered Poisson trace
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get(ARCH).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    ncfg, nparams, _ = CMP.compress_model(
+        cfg, params, method="mergemoe",
+        merged_experts=cfg.moe.n_experts // 2, split=0, batches=calib)
+    # adversarial draft: an unrelated random init at the same shape — worst
+    # case for acceptance, identical contract for exactness
+    adv = MD.init(cfg, jax.random.PRNGKey(5))
+    rng = np.random.default_rng(11)
+    lens = [5, 16, 9, 30, 12, 7]
+    prompts = [rng.integers(0, cfg.vocab_size, size=l, dtype=np.int32)
+               for l in lens]
+    arrivals = poisson_trace(len(lens), rate=0.4, seed=13)
+    return cfg, params, ncfg, nparams, adv, prompts, arrivals
+
+
+def _serve(cfg, params, prompts, arrivals, *, temperature=0.0,
+           draft=None, spec_k=3, **ec_kw):
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=64,
+                              prefill_buckets=(8, 16, 32),
+                              temperature=temperature, spec_k=spec_k,
+                              **ec_kw),
+                 cfg=cfg, params=params,
+                 draft_cfg=draft[0] if draft else None,
+                 draft_params=draft[1] if draft else None)
+    for i, (p, a) in enumerate(zip(prompts, arrivals)):
+        eng.submit(p, max_new_tokens=6 + 2 * (i % 4),
+                   arrival_time=float(a), uid=i)
+    done = eng.run()
+    return {r.uid: list(r.out_tokens) for r in done}, eng
+
+
+@pytest.fixture(scope="module")
+def refs(setup):
+    """Plain full-model engine outputs on the trace — the ground truth every
+    spec configuration must match bitwise — at both test temperatures."""
+    cfg, params, _, _, _, prompts, arrivals = setup
+    return {t: _serve(cfg, params, prompts, arrivals, temperature=t)[0]
+            for t in (0.0, 0.7)}
+
+
+@pytest.fixture(scope="module")
+def merged_spec(setup):
+    """One greedy spec run with the MergeMoE M=N/2 draft, shared by the
+    parity / rollback / lockstep assertions."""
+    cfg, params, ncfg, nparams, _, prompts, arrivals = setup
+    return _serve(cfg, params, prompts, arrivals, draft=(ncfg, nparams))
+
+
+def test_spec_engine_matches_full_engine_greedy(setup, refs, merged_spec):
+    """The tentpole contract: the speculative engine (compressed draft +
+    full verify + on-device accept/rollback) is token-for-token identical
+    to the plain full-model engine on a staggered Poisson trace."""
+    out, eng = merged_spec
+    assert out == refs[0.0]
+    # the draft actually drafted (the parity above wasn't vacuous)
+    assert eng.counters["tokens_drafted"] > 0
+    assert 0.0 <= eng.acceptance_rate <= 1.0
+
+
+def test_spec_engine_matches_full_engine_sampled(setup, refs):
+    """Same contract at temperature 0.7, where exactness rides entirely on
+    the position-indexed Gumbel coupling between draft and verify."""
+    cfg, params, ncfg, nparams, _, prompts, arrivals = setup
+    out, eng = _serve(cfg, params, prompts, arrivals, temperature=0.7,
+                      draft=(ncfg, nparams))
+    assert out == refs[0.7]
+    assert eng.counters["tokens_drafted"] > 0
+
+
+def test_adversarial_draft_still_exact(setup, refs):
+    """Exactness must not depend on the draft being any good: an unrelated
+    random model drafts, almost everything is rejected and rolled back,
+    and the output is STILL bitwise the full model's."""
+    cfg, params, _, _, adv, prompts, arrivals = setup
+    out, eng = _serve(cfg, params, prompts, arrivals, draft=(cfg, adv))
+    assert out == refs[0.0]
+    # near-chance acceptance, heavy rollback traffic
+    assert eng.acceptance_rate < 0.25
+    assert eng.counters["tokens_rolled_back"] > 0
+
+
+def test_self_draft_accepts_everything(setup):
+    """Draft == verify weights: every proposal must be accepted (the sharp
+    end-to-end check that draft decode and multi-position verify agree
+    bitwise position by position)."""
+    cfg, params, _, _, _, prompts, arrivals = setup
+    _, eng = _serve(cfg, params, prompts, arrivals, draft=(cfg, params))
+    assert eng.counters["tokens_drafted"] > 0
+    assert eng.acceptance_rate == 1.0
+    assert eng.counters["tokens_rolled_back"] == 0
+
+
+def test_caches_stay_in_lockstep_after_rollbacks(merged_spec):
+    """After a trace full of partial rollbacks on staggered arrivals, the
+    full and draft KV caches must agree on every slot's position — the
+    free-rollback scheme (pos = pos0 + n_commit, stale rows masked) never
+    lets them drift."""
+    _, eng = merged_spec
+    assert eng.counters["tokens_rolled_back"] > 0    # rollbacks did happen
+    np.testing.assert_array_equal(np.asarray(eng.cache["pos"]),
+                                  np.asarray(eng.cache_draft["pos"]))
+
+
+def test_spec_trace_guard_no_retraces(setup):
+    """The whole draft->verify->accept round is ONE jitted program: it
+    compiles exactly once and the steady state makes no implicit
+    host<->device transfers (DESIGN.md §9 discipline extended to §10)."""
+    cfg, params, ncfg, nparams, _, _, _ = setup
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=48,
+                              prefill_buckets=(8,), spec_k=3),
+                 cfg=cfg, params=params, draft_cfg=ncfg, draft_params=nparams)
+    eng.submit(np.ones(8, np.int32), max_new_tokens=4)
+    eng.run()
+    assert eng._guard.warmed("slot_decode_spec")
+    for i in range(3):
+        eng.submit(np.arange(1, 9, dtype=np.int32) + i, max_new_tokens=12)
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.out_tokens) == 12 for r in done)
+    assert eng.counters["retraces"] == 0
+    assert eng.counters["implicit_transfers"] == 0
+    assert eng._guard.traces["slot_decode_spec"] == 1
+
+
+def test_spec_config_validation(setup):
+    cfg, params, ncfg, nparams, _, _, _ = setup
+    with pytest.raises(ValueError):
+        Engine(EngineConfig(arch=ARCH, spec_k=0),
+               cfg=cfg, params=params, draft_cfg=ncfg, draft_params=nparams)
+    with pytest.raises(ValueError):          # draft params without a config
+        Engine(EngineConfig(arch=ARCH),
+               cfg=cfg, params=params, draft_params=nparams)
+
+
+# --------------------------------------------------------------------------
+# seeded sampling through the engine (satellite: bench_decode seed fix)
+# --------------------------------------------------------------------------
+
+def test_engine_sampling_threads_config_seed(setup):
+    """EngineConfig.seed drives every sampling key (admission, decode,
+    spec): same seed -> bitwise-identical sampled outputs, different seed
+    -> different draws. Regression for bench/decode paths hardcoding
+    PRNGKey(0)."""
+    cfg, params, _, _, _, prompts, arrivals = setup
+    a, _ = _serve(cfg, params, prompts, arrivals, temperature=0.7, seed=3)
+    b, _ = _serve(cfg, params, prompts, arrivals, temperature=0.7, seed=3)
+    c, _ = _serve(cfg, params, prompts, arrivals, temperature=0.7, seed=4)
+    assert a == b
+    assert a != c
+
+
+def test_bench_decode_runs_seeded_at_temperature(setup):
+    """Engine.bench_decode samples with keys derived from EngineConfig.seed
+    (not a hardcoded PRNGKey(0)) and runs transfer-clean at temperature>0;
+    bench_spec_decode does the same for the speculative round."""
+    cfg, params, ncfg, nparams, _, _, _ = setup
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=48,
+                              prefill_buckets=(8,), temperature=0.7, seed=5),
+                 cfg=cfg, params=params)
+    out = eng.bench_decode(iters=2)
+    assert out["tok_per_s"] > 0
+    spec = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=48,
+                               prefill_buckets=(8,), temperature=0.7,
+                               seed=5, spec_k=2),
+                  cfg=cfg, params=params, draft_cfg=ncfg,
+                  draft_params=nparams)
+    b = spec.bench_spec_decode(iters=2)
+    assert b["tok_per_s"] > 0
+    assert 0.0 <= b["acceptance_rate"] <= 1.0
+    assert b["k_draft"] == 2
+    assert b["host_dispatches_per_token"] > 0
