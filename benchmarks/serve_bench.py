@@ -50,6 +50,15 @@ recorded reference acceptance and ``SPEC_GATE_SLOTS``) is >= 1. Measured
 CPU tok/s is recorded ungated, same stance as the int8 rows: the smoke
 container is FLOPs-bound while the deployment claim is HBM-bound.
 
+**Paged KV rows (DESIGN.md §11).** The fused engine additionally serves the
+identical trace with the KV cache held in a paged block pool (bf16 and int8
+storage). Gated: the bf16 pool is token-for-token identical to the dense
+engine on the trace AND on a duplicate-prompt prefix-sharing trace; the
+int8 pool clears a teacher-forced per-position top-1 floor
+(``KV_INT8_TOLERANCE``) against the bf16 trace; and the full-scale modeled
+decode KV stream of the int8 pool sits >= ``KV_STREAM_GATE`` below dense
+bf16. Prefix-share hit rates and ``kv_bytes_per_token`` ride in every row.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --requests 16
 """
 from __future__ import annotations
@@ -82,6 +91,16 @@ FULL_SCALE_POS = 512
 # this far below the bf16 M=N/2 row (see module docstring for why the
 # expert stream, not the total, is the gated term)
 EXPERT_STREAM_GATE = 1.7
+
+# --- paged + int8 KV cache (DESIGN.md §11) ---------------------------------
+# the int8 KV pool must cut the full-scale modeled decode KV STREAM at
+# least this far below dense bf16 (per-row: 2·hd·2 bytes -> 2·(hd+4); at
+# hd=128 that is 512/264 ≈ 1.94x, so 1.7 leaves honest slack)
+KV_STREAM_GATE = 1.7
+# teacher-forced per-position top-1 floor for the int8-KV engine vs the
+# bf16 trace (the bf16 paged engine is gated BITWISE instead)
+KV_INT8_TOLERANCE = 0.95
+PAGED_KV_BLOCK = 16
 
 # --- speculative decoding (DESIGN.md §10) ----------------------------------
 # deployment batch for the gated modeled spec speedup: the verify pass adds
@@ -120,12 +139,13 @@ def spec_mean_committed(acceptance: float, k: int) -> float:
 def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
               requests, prompt_lens, arrivals, max_new_tokens, n_slots, s_max,
               buckets, repeats=3, bench_iters=50, run_bench=True,
-              temperature=0.0):
+              temperature=0.0, engine_kw=None):
     eng = Engine(EngineConfig(n_slots=n_slots, s_max=s_max,
                               prefill_buckets=buckets,
                               decode_block=decode_block, dispatch=dispatch,
                               batch_admission=batch_admission,
-                              temperature=temperature),
+                              temperature=temperature,
+                              **(engine_kw or {})),
                  cfg=cfg, params=params)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=int(l), dtype=np.int32)
@@ -200,7 +220,14 @@ def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
         # transfer crept into the steady state (DESIGN.md §9)
         "retraces": int(eng.counters["retraces"]),
         "implicit_transfers": int(eng.counters["implicit_transfers"]),
+        # KV layout + modeled KV stream of the served config (DESIGN.md §11)
+        "kv_layout": eng.ec.kv_layout,
+        "kv_dtype": eng.kv_dtype_served,
+        "kv_bytes_per_token": round(
+            eng.modeled_decode_traffic()["kv_bytes_per_token"], 1),
     }
+    if eng.paging_stats:
+        rec["paging"] = eng.paging_stats
     print(f"[{label:>22}] {rec['tok_per_s']:8.1f} tok/s trace  "
           f"{rec['steady_decode_tok_per_s']:8.1f} tok/s steady  "
           f"{rec['host_dispatches_per_token']:.3f} disp/tok  "
@@ -247,6 +274,96 @@ def top1_match(cfg_a, params_a, cfg_b, params_b, prompts, token_lists) -> float:
                       == pred[1][start:start + len(t)]).sum())
         total += len(t)
     return agree / max(total, 1)
+
+
+def paged_top1_match(cfg, params, prompts, token_lists, *, s_max,
+                     kv_block=PAGED_KV_BLOCK) -> float:
+    """Teacher-forced per-position greedy top-1 agreement of the INT8 paged
+    KV cache against the bf16 trace, on the trace's exact contexts.
+
+    The bf16 trace's tokens are greedy, so they ARE the dense model's
+    per-position argmax under teacher forcing; feeding that same stream
+    through an int8-pool paged decode and comparing argmax position by
+    position isolates the KV-quantization error from free-running
+    divergence (same stance as :func:`top1_match` for int8 weights)."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.serving.paging import PagedAllocator
+
+    c = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged")) \
+        if cfg.moe is not None else cfg
+    B = len(prompts)
+    P = max(len(p) for p in prompts)
+    NEW = max(len(t) for t in token_lists)
+    toks = np.zeros((B, P), np.int32)
+    lens = np.zeros((B,), np.int32)
+    forced = np.zeros((B, NEW), np.int32)
+    for i, (p, t) in enumerate(zip(prompts, token_lists)):
+        toks[i, :len(p)] = p
+        lens[i] = len(p)
+        forced[i, :len(t)] = t
+    alloc = PagedAllocator(n_slots=B, n_blocks=B * s_max // kv_block,
+                           block_size=kv_block, s_max=s_max)
+    cache = MD.init_paged_cache(c, B, s_max, n_blocks=alloc.nb,
+                                block_size=kv_block, kv_dtype="int8")
+    for i, (p, t) in enumerate(zip(prompts, token_lists)):
+        alloc.admit(i, np.asarray(p, np.int32), len(p) + max(len(t) - 1, 0))
+    cache["tab"] = jnp.asarray(alloc.tab)
+    logits, cache = MD.admit_slots_paged(
+        c, params, cache, jnp.asarray(toks), jnp.asarray(lens),
+        jnp.arange(B), jnp.zeros((B,), jnp.int32))
+    pred = [np.argmax(np.asarray(logits, np.float32), -1)]
+    act = jnp.ones((B,), bool)
+    for j in range(NEW - 1):
+        lg, cache = MD.decode_step_slots(c, params, cache,
+                                         jnp.asarray(forced[:, j]), act)
+        pred.append(np.argmax(np.asarray(lg, np.float32), -1))
+    pred = np.stack(pred, 1)                               # [B, NEW]
+    agree = total = 0
+    for i, t in enumerate(token_lists):
+        agree += int((pred[i, :len(t)] == np.asarray(t, np.int32)).sum())
+        total += len(t)
+    return agree / max(total, 1)
+
+
+def prefix_share_trace(cfg, params, *, n_slots, s_max, decode_block,
+                       max_new_tokens) -> dict:
+    """Duplicate-prompt trace through the PAGED engine: each distinct prompt
+    is submitted twice (second arrival after the first admitted), so every
+    second copy should adopt the first's registered full prompt blocks.
+    Returns hit-rate telemetry plus a bitwise check that sharers decode the
+    same tokens as their originals (shared rows are READ-identical)."""
+    rng = np.random.default_rng(11)
+    n_distinct = 6
+    plen = min(2 * PAGED_KV_BLOCK, s_max - max_new_tokens - 1)
+    base_prompts = [rng.integers(0, cfg.vocab_size, size=plen, dtype=np.int32)
+                    for _ in range(n_distinct)]
+    eng = Engine(EngineConfig(n_slots=n_slots, s_max=s_max,
+                              prefill_buckets=(plen,),
+                              decode_block=decode_block,
+                              kv_layout="paged", kv_block=PAGED_KV_BLOCK),
+                 cfg=cfg, params=params)
+    for i, p in enumerate(base_prompts):
+        eng.submit(p, max_new_tokens=max_new_tokens,
+                   arrival_time=float(2 * i))
+        eng.submit(p, max_new_tokens=max_new_tokens,
+                   arrival_time=float(2 * i) + 40.0)      # after the first
+    done = eng.run()
+    outs = {}
+    for r in done:
+        outs.setdefault(r.prompt.tobytes(), []).append(r.out_tokens)
+    stats = eng.paging_stats
+    sharers = n_distinct                                   # one per repeat
+    return {
+        "requests": 2 * n_distinct,
+        "prompt_len": plen,
+        "prefix_hits": stats["prefix_hits"],
+        "prefix_rows_shared": stats["prefix_rows_shared"],
+        "hit_rate": round(stats["prefix_hits"] / sharers, 3),
+        "deferrals": stats["deferrals"],
+        "parity_duplicates_bitwise": bool(all(
+            len(v) == 2 and v[0] == v[1] for v in outs.values())),
+    }
 
 
 def full_scale_traffic(arch: str, n_slots: int) -> dict:
@@ -464,6 +581,20 @@ def main():
         rows[tag] = {"after": ri}
         toks[tag] = {"after": ti}
 
+    # --- paged + int8 KV rows (DESIGN.md §11) -------------------------------
+    # the fused/after engine over the identical trace, KV held in a paged
+    # block pool. bf16 pool is gated BITWISE vs the dense engine; the int8
+    # pool is tolerance-gated (teacher-forced) below.
+    paged_kw = dict(kv_layout="paged", kv_block=PAGED_KV_BLOCK)
+    rp, tp, _ = run_trace(cfg, params, label=f"paged/bf16(K{K})",
+                          **after, **dict(common, repeats=1),
+                          engine_kw=paged_kw)
+    rpi, tpi, _ = run_trace(cfg, params, label=f"paged/int8kv(K{K})",
+                            **after, **dict(common, repeats=1),
+                            engine_kw=dict(paged_kw, kv_dtype="int8"))
+    rows["paged"] = {"bf16": rp, "int8": rpi}
+    toks["paged"] = {"bf16": tp, "int8": tpi}
+
     # --- speculative decoding rows (DESIGN.md §10) --------------------------
     # dedicated trace: acceptance needs enough committed tokens to be a
     # stable CI signal, so floor the request count / generation length
@@ -589,6 +720,49 @@ def main():
     int8["expert_stream_ok"] = bool(all(
         fs[k]["expert_stream_reduction_vs_bf16_half"] >= EXPERT_STREAM_GATE
         for k in ("int8_full", "int8_half")))
+
+    # --- paged KV section (DESIGN.md §11) -----------------------------------
+    share = prefix_share_trace(cfg, params, n_slots=args.n_slots,
+                               s_max=args.s_max, decode_block=K,
+                               max_new_tokens=args.max_new_tokens)
+    kv_top1 = round(paged_top1_match(cfg, params, served_prompts,
+                                     toks["full"]["after"],
+                                     s_max=args.s_max), 4)
+    full_cfg = configs.get(args.arch)
+    kv_bf16 = decode_traffic_model(
+        full_cfg, n_slots=args.n_slots,
+        pos=FULL_SCALE_POS)["kv_bytes_per_token"]
+    kv_int8 = decode_traffic_model(
+        full_cfg, n_slots=args.n_slots, pos=FULL_SCALE_POS,
+        kv_dtype="int8")["kv_bytes_per_token"]
+    paged = {
+        "kv_block": PAGED_KV_BLOCK,
+        "bf16": rp,
+        "int8": rpi,
+        # free-running bitwise contract: the bf16 paged engine must decode
+        # token-for-token what the dense engine decoded on the same trace
+        "parity_bf16_bitwise": toks["paged"]["bf16"] == toks["full"]["after"],
+        # int8-KV quality: teacher-forced per-position top-1 vs the bf16
+        # trace (free-running agreement would measure divergence position,
+        # not per-token quality — same stance as the int8-weight rows)
+        "top1_match_int8_kv": kv_top1,
+        "tolerance": KV_INT8_TOLERANCE,
+        "prefix_sharing": share,
+        # full-scale modeled decode KV stream — the deployment claim
+        "modeled_full_scale_kv": {
+            "bf16_bytes_per_token": round(kv_bf16),
+            "int8_bytes_per_token": round(kv_int8),
+            "kv_stream_reduction": round(kv_bf16 / kv_int8, 3),
+        },
+        "kv_stream_gate": KV_STREAM_GATE,
+    }
+    paged["kv_stream_ok"] = bool(
+        paged["modeled_full_scale_kv"]["kv_stream_reduction"]
+        >= KV_STREAM_GATE)
+    paged["parity_ok"] = bool(
+        paged["parity_bf16_bitwise"]
+        and share["parity_duplicates_bitwise"]
+        and kv_top1 >= KV_INT8_TOLERANCE)
     summary = {
         "arch": args.arch,
         "n_slots": args.n_slots,
@@ -599,6 +773,7 @@ def main():
         "compressed": rows["compressed"],
         "int8": int8,
         "spec": spec,
+        "paged": paged,
         "parity": parity,
         "compression_ratio": round(info["compression_ratio"], 3),
         "compression_ratio_int8": round(qinfo["compression_ratio"], 3),
@@ -641,6 +816,13 @@ def main():
           f"{spec['modeled_speedup_at_reference']}x at "
           f"{SPEC_GATE_SLOTS} slots / acceptance "
           f"{SPEC_REFERENCE_ACCEPTANCE} (gate {SPEC_SPEEDUP_GATE}x) ==")
+    print(f"== paged KV: bf16 parity={paged['parity_bf16_bitwise']}; "
+          f"int8-KV top-1 {kv_top1} (tolerance {KV_INT8_TOLERANCE}); "
+          f"prefix hit rate {share['hit_rate']} "
+          f"({share['prefix_rows_shared']} rows shared, duplicates bitwise="
+          f"{share['parity_duplicates_bitwise']}); full-scale KV stream "
+          f"{paged['modeled_full_scale_kv']['kv_stream_reduction']}x below "
+          f"dense bf16 (gate {KV_STREAM_GATE}x) ==")
     print(f"== parity {parity} ==")
     OUT_PATH.write_text(json.dumps(summary, indent=1))
     print(f"wrote {OUT_PATH}")
@@ -677,6 +859,22 @@ def main():
             f"serve_bench spec modeled-speedup gate FAILED: "
             f"{spec['modeled_speedup_at_reference']}x at {SPEC_GATE_SLOTS} "
             f"slots < {SPEC_SPEEDUP_GATE}x")
+    if not (paged["parity_bf16_bitwise"]
+            and share["parity_duplicates_bitwise"]):
+        raise SystemExit(
+            f"serve_bench paged-KV parity FAILED: the bf16 paged engine must "
+            f"be token-for-token identical to the dense engine "
+            f"(trace={paged['parity_bf16_bitwise']}, "
+            f"duplicates={share['parity_duplicates_bitwise']})")
+    if kv_top1 < KV_INT8_TOLERANCE:
+        raise SystemExit(
+            f"serve_bench int8-KV tolerance FAILED: teacher-forced top-1 "
+            f"{kv_top1} < {KV_INT8_TOLERANCE}")
+    if not paged["kv_stream_ok"]:
+        raise SystemExit(
+            f"serve_bench paged-KV stream gate FAILED: full-scale reduction "
+            f"{paged['modeled_full_scale_kv']['kv_stream_reduction']}x "
+            f"< {KV_STREAM_GATE}x vs dense bf16")
 
 
 if __name__ == "__main__":

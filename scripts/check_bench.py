@@ -18,6 +18,11 @@ Asserts, on a BENCH_serve.json produced by ``benchmarks/serve_bench.py``:
   deployment speedup at the recorded reference acceptance clears the gate —
   the acceptance/speedup numbers are re-checked against the recorded
   floors, not just the summary's *_ok booleans;
+* the paged-KV rows (DESIGN.md §11) hold their contracts: the bf16 pool is
+  token-for-token identical to the dense engine (trace AND duplicate-prompt
+  prefix-sharing trace), the int8 pool clears its teacher-forced top-1
+  tolerance, and the full-scale modeled decode KV stream clears the
+  reduction gate vs dense bf16;
 * the trace-guard counters are zero on every post-warmup row — no decode
   retraces, no implicit host transfers (DESIGN.md §9).
 
@@ -41,6 +46,10 @@ def _records(d: dict):
             yield f"int8/{tag}", rec
     for key, rec in d.get("spec", {}).get("rows", {}).items():
         yield f"spec/{key}", rec
+    for tag in ("bf16", "int8"):
+        rec = d.get("paged", {}).get(tag)
+        if rec:
+            yield f"paged/{tag}", rec
 
 
 def check(d: dict) -> List[str]:
@@ -93,6 +102,38 @@ def check(d: dict) -> List[str]:
                 f"slots / acceptance {sp.get('reference_acceptance')} "
                 f"below gate {gate}x")
 
+    pg = d.get("paged")
+    if not isinstance(pg, dict) or not pg.get("bf16"):
+        errs.append("paged section missing (no paged-KV rows)")
+        pg = {}
+    if pg:
+        if pg.get("parity_bf16_bitwise") is not True:
+            errs.append(
+                f"paged.parity_bf16_bitwise is "
+                f"{pg.get('parity_bf16_bitwise')!r}, not True (the bf16 "
+                f"paged engine must match the dense engine token-for-token)")
+        if pg.get("prefix_sharing", {}).get("parity_duplicates_bitwise") \
+                is not True:
+            errs.append(
+                f"paged prefix-sharing duplicate parity is "
+                f"{pg.get('prefix_sharing', {}).get('parity_duplicates_bitwise')!r}, "
+                f"not True (sharers must decode what their originals decoded)")
+        top1 = pg.get("top1_match_int8_kv", 0.0)
+        tol = pg.get("tolerance", 1.0)
+        if top1 < tol:
+            errs.append(f"paged int8-KV teacher-forced top-1 {top1} below "
+                        f"tolerance {tol}")
+        kv = pg.get("modeled_full_scale_kv", {})
+        red = kv.get("kv_stream_reduction", 0.0)
+        gate = pg.get("kv_stream_gate", 1.0)
+        if red < gate:
+            errs.append(f"paged KV-stream gate failed: full-scale reduction "
+                        f"{red}x < {gate}x vs dense bf16 ({kv})")
+        for tag, want in (("bf16", "bf16"), ("int8", "int8")):
+            dt = pg.get(tag, {}).get("kv_dtype")
+            if dt != want:
+                errs.append(f"paged.{tag}.kv_dtype is {dt!r}, not {want!r}")
+
     for label, rec in _records(d):
         for c in ("retraces", "implicit_transfers"):
             v = rec.get(c, 0)
@@ -128,6 +169,13 @@ def main(argv=None) -> int:
           sp["modeled_speedup_at_reference"], "x >=", sp["speedup_gate"],
           "x at", sp["gate_slots"], "slots / acceptance",
           sp["reference_acceptance"])
+    pg = d["paged"]
+    print("paged-KV parity OK: bf16 bitwise vs dense; int8-KV top-1",
+          pg["top1_match_int8_kv"], ">=", pg["tolerance"])
+    print("paged KV-stream gate OK:",
+          pg["modeled_full_scale_kv"]["kv_stream_reduction"], "x >=",
+          pg["kv_stream_gate"], "x vs dense bf16; prefix hit rate",
+          pg["prefix_sharing"]["hit_rate"])
     print("trace-guard counters OK: 0 retraces / 0 implicit transfers "
           "across", len(list(_records(d))), "rows")
     return 0

@@ -213,7 +213,8 @@ def _table_fills(cap: _Capture) -> List[List[np.ndarray]]:
 
 
 def _check_capture(cap: _Capture, kernel: str, arch: str,
-                   quantized: bool) -> Iterable[ContractFinding]:
+                   contract: Dict[str, Any]) -> Iterable[ContractFinding]:
+    quantized = contract.get("quantized", False)
     ops_for_specs = cap.operands[cap.num_prefetch:]
     if len(ops_for_specs) != len(cap.in_specs):
         yield ContractFinding(kernel, arch, "divisibility",
@@ -325,13 +326,19 @@ def _check_capture(cap: _Capture, kernel: str, arch: str,
                 kernel, arch, "dtype",
                 f"scratch accumulator dtype {dt} is not float32")
     if quantized:
+        # operand-count expectations live in the contract metadata so kernel
+        # families with different quantized layouts (3 expert tables vs 2 KV
+        # pools) share one check; defaults are the expert-table family's.
+        want_i8 = int(contract.get("int8_operands", 3))
+        want_f32 = int(contract.get("f32_min_operands", 3))
         n_i8 = sum(np.dtype(o.dtype) == np.int8 for o in ops_for_specs)
         n_f32 = sum(np.dtype(o.dtype) == np.float32 for o in ops_for_specs)
-        if n_i8 != 3 or n_f32 < 3:
+        if n_i8 != want_i8 or n_f32 < want_f32:
             yield ContractFinding(
                 kernel, arch, "dtype",
-                f"quantized kernel expects 3 int8 tables + >=3 fp32 scale "
-                f"rows, saw {n_i8} int8 / {n_f32} fp32 operands")
+                f"quantized kernel expects {want_i8} int8 tables + "
+                f">={want_f32} fp32 scale rows, saw {n_i8} int8 / "
+                f"{n_f32} fp32 operands")
     yield from _check_kernel_body(cap, kernel, arch, quantized)
 
 
@@ -450,6 +457,20 @@ def _induced_cases(kind: str, cfg) -> List[Tuple[str, tuple]]:
         H, hd, S = cfg.n_heads, cfg.hd, 256
         qkv = [_sds((1, H, S, hd), dt)] * 3
         return [("S256", tuple(qkv))]
+    if kind in ("paged", "paged_q"):
+        if cfg.is_attention_free:
+            return []
+        nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        B, bs, mb, nb = 4, 16, 8, 32         # pool shape is arch-independent
+        q = _sds((B, nq, hd), dt)
+        tab = _sds((B, mb), jnp.int32)
+        lens = _sds((B,), jnp.int32)
+        if kind == "paged":
+            kv = _sds((nb, bs, nkv, hd), dt)
+            return [("B4", (q, kv, kv, tab, lens))]
+        kv = _sds((nb, bs, nkv, hd), jnp.int8)
+        sc = _sds((nb, bs, nkv), jnp.float32)
+        return [("B4", (q, kv, kv, sc, sc, tab, lens))]
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
@@ -501,9 +522,7 @@ def check_kernel_contracts(arch_ids: Optional[Sequence[str]] = None
                         f"({label}) — dispatch policy regression?"))
                     continue
                 for cap in records:
-                    for f in _check_capture(cap, name, arch,
-                                            contract.get("quantized",
-                                                         False)):
+                    for f in _check_capture(cap, name, arch, contract):
                         reason = VMEM_WAIVERS.get((name, arch))
                         if f.check == "vmem" and reason:
                             waived.append(dataclasses.replace(

@@ -124,6 +124,37 @@ def quantize_expert_tables(wg: jax.Array, wu: jax.Array, wd: jax.Array
 
 
 # ---------------------------------------------------------------------------
+# KV-row quantization (paged cache, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization of KV rows over the LAST axis: one fp32
+    scale per ``(..., head)`` — ``x`` is ``[..., nkv, hd]``, scales come back
+    ``[..., nkv]`` (no keepdim; pool storage carries them as their own
+    array). Same symmetric ``amax/127`` format as
+    :func:`quantize_channelwise`, reduced over ``hd`` instead of the weight
+    contraction axis: a K/V row's dynamic range is per head, and per-head
+    granularity is what keeps RoPE'd keys inside 8 bits."""
+    x32 = jnp.asarray(x, F32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = amax / I8_MAX
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(x32 * inv[..., None]),
+                 -I8_MAX, I8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """``q * scale`` at fp32 with the per-head scale broadcast over ``hd``,
+    cast to ``dtype``. Decode (oracle and kernel) and verify both dequantize
+    through THIS function before the attention arithmetic, so the spec-decode
+    draft/verify coupling sees one consistent KV representation — the reason
+    int8-KV parity is a tolerance against the bf16 engine but the paged-int8
+    engine agrees with itself across plain/block/spec decode (§11)."""
+    return (q.astype(F32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # parameter-tree surgery
 # ---------------------------------------------------------------------------
 

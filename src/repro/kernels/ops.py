@@ -133,3 +133,19 @@ def gather_swiglu_q(x, qt, idx, w):
                  contract={"kind": "flash", "quantized": False})
 def flash_attention(q, k, v, causal: bool = True):
     return ref.flash_attention(q, k, v, causal=causal)
+
+
+@pallas_dispatch("paged_attention", contract={"kind": "paged",
+                                              "quantized": False})
+def paged_attention(q, kp, vp, tab, lens):
+    """Paged decode attention over a block pool (DESIGN.md §11)."""
+    return ref.paged_attention(q, kp, vp, tab, lens)
+
+
+@pallas_dispatch("paged_attention", contract={"kind": "paged_q",
+                                              "quantized": True,
+                                              "int8_operands": 2,
+                                              "f32_min_operands": 2})
+def paged_attention_q(q, kp, vp, ks, vs, tab, lens):
+    """Int8-pool paged decode attention with per-(row, head) fp32 scales."""
+    return ref.paged_attention_q(q, kp, vp, ks, vs, tab, lens)

@@ -1,0 +1,174 @@
+"""Paged-attention decode Pallas kernel (TPU target, interpret-validated).
+
+Decode attention over the paged KV pool (DESIGN.md §11): keys/values live in
+fixed-size blocks of a flat ``[n_blocks, bs, nkv, hd]`` pool, and each slot's
+block ids arrive in a scalar-prefetched table so the K/V BlockSpec index maps
+gather exactly the blocks slot ``b`` owns — the kernel never materializes the
+``[B, s_max]`` contiguous view the jnp oracle builds. Grid is
+``(B, max_blocks)``: one slot per outer step, one of its blocks per inner
+step, with the flash-attention online-softmax state (running max /
+normalizer / fp32 accumulator, per kv-head-group) in VMEM scratch.
+
+GQA is handled by reshaping the ``nq = nkv·n_rep`` query heads to
+``[nkv, n_rep, hd]`` so each kv head's block is loaded once per slot and
+shared by its ``n_rep`` query heads — the HBM story the paged layout exists
+for: per decoded token the kernel streams each owned block once, int8 blocks
+(the ``_q`` variant, with per-(row, head) fp32 scales dequantized in VMEM) at
+half the bf16 width.
+
+Rows past ``lens[b]`` are masked with the running-max trick, so the sentinel
+blocks the wrapper clips into range (unallocated / pad table entries point at
+``n_blocks``) contribute exactly nothing regardless of what block 0 holds.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _update(s, j, b, lens_ref, m_ref, l_ref, acc_ref, vt, *, bs: int):
+    """One online-softmax block update: s [nkv, n_rep, bs] raw logits,
+    vt [nkv, bs, hd] fp32 values."""
+    rows = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+    s = jnp.where((rows < lens_ref[b])[None, None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                    + jnp.einsum("grs,gsd->grd", p, vt))
+    m_ref[...] = m_new
+
+
+def _kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, bs: int, nk: int,
+            n_rep: int):
+    del tab_ref                         # consumed by the BlockSpec index maps
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nkv, hd = k_ref.shape[2], k_ref.shape[3]
+    q = q_ref[0].reshape(nkv, n_rep, hd).astype(F32)
+    kt = k_ref[0].astype(F32).transpose(1, 0, 2)          # [nkv, bs, hd]
+    vt = v_ref[0].astype(F32).transpose(1, 0, 2)
+    s = jnp.einsum("grd,gsd->grs", q, kt) * scale
+    _update(s, j, b, lens_ref, m_ref, l_ref, acc_ref, vt, bs=bs)
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l[..., None]).reshape(
+            nkv * n_rep, hd).astype(o_ref.dtype)
+
+
+def _kernel_q(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+              m_ref, l_ref, acc_ref, *, scale: float, bs: int, nk: int,
+              n_rep: int):
+    """Int8 variant: K/V blocks are int8 with per-(row, head) fp32 scales;
+    dequantization is a single fp32 multiply in VMEM (the §8 fused-dequant
+    stance applied to the KV stream)."""
+    del tab_ref
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nkv, hd = k_ref.shape[2], k_ref.shape[3]
+    q = q_ref[0].reshape(nkv, n_rep, hd).astype(F32)
+    k = k_ref[0].astype(F32) * ks_ref[0][..., None]       # [bs, nkv, hd]
+    v = v_ref[0].astype(F32) * vs_ref[0][..., None]
+    kt = k.transpose(1, 0, 2)
+    vt = v.transpose(1, 0, 2)
+    s = jnp.einsum("grd,gsd->grs", q, kt) * scale
+    _update(s, j, b, lens_ref, m_ref, l_ref, acc_ref, vt, bs=bs)
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[..., None]).reshape(
+            nkv * n_rep, hd).astype(o_ref.dtype)
+
+
+def _specs(B, nq, hd, bs, nkv, quantized: bool):
+    kv = pl.BlockSpec((1, bs, nkv, hd), lambda b, j, tb, ln: (tb[b, j],
+                                                              0, 0, 0))
+    ins = [pl.BlockSpec((1, nq, hd), lambda b, j, tb, ln: (b, 0, 0)), kv, kv]
+    if quantized:
+        sc = pl.BlockSpec((1, bs, nkv), lambda b, j, tb, ln: (tb[b, j], 0, 0))
+        ins += [sc, sc]
+    return ins, pl.BlockSpec((1, nq, hd), lambda b, j, tb, ln: (b, 0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, kp, vp, tab, lens, interpret: bool = False):
+    """q: [B, nq, hd] (current row already written to the pool by the
+    caller); kp/vp: [n_blocks, bs, nkv, hd]; tab: [B, max_blocks] int32
+    block ids (entries >= n_blocks are sentinels for unallocated table
+    slots — clipped here, masked by ``lens``); lens: [B] int32 valid rows
+    (``pos + 1``). Returns [B, nq, hd]."""
+    B, nq, hd = q.shape
+    nb, bs, nkv, _ = kp.shape
+    mb = tab.shape[1]
+    n_rep = nq // nkv
+    tab = jnp.clip(tab.astype(jnp.int32), 0, nb - 1)
+    lens = lens.astype(jnp.int32)
+    ins, outs = _specs(B, nq, hd, bs, nkv, quantized=False)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=(B, mb), in_specs=ins, out_specs=outs,
+        scratch_shapes=[pltpu.VMEM((nkv, n_rep), F32),
+                        pltpu.VMEM((nkv, n_rep), F32),
+                        pltpu.VMEM((nkv, n_rep, hd), F32)])
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / math.sqrt(hd), bs=bs, nk=mb,
+                          n_rep=n_rep),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nq, hd), q.dtype),
+        interpret=interpret,
+    )(tab, lens, q, kp, vp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_q(q, kp, vp, ks, vs, tab, lens, interpret: bool = False):
+    """Int8 pool variant of :func:`paged_attention`: kp/vp int8
+    [n_blocks, bs, nkv, hd] with ks/vs fp32 [n_blocks, bs, nkv] per-(row,
+    head) scales (``core.quant.quantize_kv`` format)."""
+    B, nq, hd = q.shape
+    nb, bs, nkv, _ = kp.shape
+    mb = tab.shape[1]
+    n_rep = nq // nkv
+    tab = jnp.clip(tab.astype(jnp.int32), 0, nb - 1)
+    lens = lens.astype(jnp.int32)
+    ins, outs = _specs(B, nq, hd, bs, nkv, quantized=True)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=(B, mb), in_specs=ins, out_specs=outs,
+        scratch_shapes=[pltpu.VMEM((nkv, n_rep), F32),
+                        pltpu.VMEM((nkv, n_rep), F32),
+                        pltpu.VMEM((nkv, n_rep, hd), F32)])
+    return pl.pallas_call(
+        functools.partial(_kernel_q, scale=1.0 / math.sqrt(hd), bs=bs, nk=mb,
+                          n_rep=n_rep),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nq, hd), q.dtype),
+        interpret=interpret,
+    )(tab, lens, q, kp, vp, ks, vs)

@@ -6,10 +6,13 @@ backends without Pallas support.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
-from repro.models.numerics import ein, dot as _ndot
+from repro.core import quant as Q
+from repro.models.numerics import ein, ein32, dot as _ndot
 
 F32 = jnp.float32
 
@@ -138,3 +141,68 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         logits = jnp.where(mask[None, None], logits, jnp.finfo(F32).min)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return ein("bhqk,bhkd->bhqd", probs, v)
+
+
+def _paged_sdpa(q: jax.Array, kc: jax.Array, vc: jax.Array,
+                lens: jax.Array) -> jax.Array:
+    """Shared paged-decode attention body over a GATHERED contiguous view.
+
+    This is a bitwise mirror of ``layers._sdpa`` on the decode mask
+    (``arange(s_max) <= pos`` with ``lens = pos + 1``): same GQA
+    ``jnp.repeat`` expansion, same ``ein32`` logits, same fp32 min fill,
+    same softmax-then-downcast, same output einsum. Rows past ``lens``
+    carry whatever the pool holds (zeros, stale blocks, clipped sentinels)
+    — they get probability exactly 0, and adding exact fp zeros to the
+    reductions is the identity, which is why paged bf16 decode is bitwise
+    equal to the dense slot cache (DESIGN.md §11)."""
+    B, S, nkv, hd = kc.shape
+    n_rep = q.shape[1] // nkv
+    if n_rep > 1:
+        kc = jnp.repeat(kc, n_rep, axis=2)
+        vc = jnp.repeat(vc, n_rep, axis=2)
+    logits = ein32("bqhd,bkhd->bhqk", q[:, None], kc) / math.sqrt(hd)
+    mask = (jnp.arange(S)[None, :] < lens[:, None])[:, None, None, :]
+    logits = jnp.where(mask, logits, jnp.finfo(F32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vc.dtype)
+    out = ein("bhqk,bkhd->bqhd", probs, vc).astype(vc.dtype)
+    return out[:, 0]
+
+
+def _gather_pool(pool: jax.Array, tab: jax.Array) -> jax.Array:
+    """[n_blocks, bs, ...] pool + [B, mb] table -> [B, mb*bs, ...] view.
+    Sentinel entries (>= n_blocks) clip to the last real block; their rows
+    are masked by ``lens`` downstream."""
+    nb, bs = pool.shape[0], pool.shape[1]
+    tabc = jnp.clip(tab.astype(jnp.int32), 0, nb - 1)
+    g = pool[tabc]                                    # [B, mb, bs, ...]
+    return g.reshape((g.shape[0], g.shape[1] * bs) + g.shape[3:])
+
+
+def paged_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                    tab: jax.Array, lens: jax.Array) -> jax.Array:
+    """Paged decode attention oracle.
+
+    q: [B, nq, hd] (the current token's query; its K/V row is already in
+    the pool); kp/vp: [n_blocks, bs, nkv, hd]; tab: [B, mb] int32 block
+    table (sentinel = n_blocks); lens: [B] int32 valid rows (``pos + 1``).
+    Returns [B, nq, hd].
+    """
+    return _paged_sdpa(q, _gather_pool(kp, tab), _gather_pool(vp, tab), lens)
+
+
+def paged_attention_q(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                      ks: jax.Array, vs: jax.Array, tab: jax.Array,
+                      lens: jax.Array) -> jax.Array:
+    """Int8-pool paged decode attention oracle.
+
+    kp/vp: int8 [n_blocks, bs, nkv, hd]; ks/vs: fp32 [n_blocks, bs, nkv]
+    per-(row, head) scales (``core.quant.quantize_kv``). Dequantizes the
+    gathered view through ``quant.dequantize_kv`` — the same helper the
+    verify path uses — so decode and verify see one consistent KV
+    representation (the spec-decode self-consistency requirement, §11).
+    """
+    kc = Q.dequantize_kv(_gather_pool(kp, tab), _gather_pool(ks, tab),
+                         q.dtype)
+    vc = Q.dequantize_kv(_gather_pool(vp, tab), _gather_pool(vs, tab),
+                         q.dtype)
+    return _paged_sdpa(q, kc, vc, lens)

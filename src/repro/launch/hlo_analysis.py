@@ -397,7 +397,8 @@ def expected_distinct_experts(n_experts: int, draws: int) -> float:
 def decode_traffic_model(cfg, *, n_slots: int, pos: int,
                          weight_dtype: str = "bf16",
                          prefix_weight_dtype: str = "bf16",
-                         tokens_per_slot: int = 1
+                         tokens_per_slot: int = 1,
+                         kv_dtype: str = "bf16"
                          ) -> Dict[str, float]:
     """Modeled HBM bytes for ONE decode step of ``n_slots`` tokens at cache
     position ``pos`` (gather-dispatch serving path), per device.
@@ -417,6 +418,13 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     reads ``tokens_per_slot`` fresh KV rows, and the non-expert weights
     STILL stream once — that amortization is the entire economics of
     verify-in-one-pass (DESIGN.md §10).
+
+    ``kv_dtype`` is the KV cache storage dtype: ``"bf16"`` streams
+    ``2·hd·itemsize`` bytes per (row, kv-head); ``"int8"`` models the paged
+    quantized pool (DESIGN.md §11) at ``2·(hd·1 + 4)`` — int8 payload plus
+    one fp32 scale per (row, head) for each of K and V. At hd=128 that is a
+    512/264 ≈ 1.94x stream reduction, which is what moves the needle at
+    long contexts where the KV prefix dominates the step.
 
     Returns a component breakdown plus ``bytes_per_token`` and
     ``flops_per_token``; feed those to :func:`roofline_terms` for the
@@ -454,8 +462,15 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     if cfg.moe is None:
         attn_b += L * cfg.dense_mlp_params_per_layer() * pb
     head_b = float(cfg.vocab_size * cfg.d_model * pb)      # lm head read
-    kv_b = float(L * n_slots * (pos + tokens_per_slot)
-                 * cfg.n_kv_heads * cfg.hd * 2 * pb)
+    if kv_dtype == "int8":
+        # int8 K + V payload plus one fp32 scale per (row, head) each
+        kv_row_b = cfg.n_kv_heads * 2 * (cfg.hd * 1 + 4)
+    elif kv_dtype == "bf16":
+        kv_row_b = cfg.n_kv_heads * 2 * cfg.hd * pb
+    else:
+        raise ValueError(f"kv_dtype must be 'bf16' or 'int8', got "
+                         f"{kv_dtype!r}")
+    kv_b = float(L * n_slots * (pos + tokens_per_slot) * kv_row_b)
 
     step = moe_b + router_b + shared_b + attn_b + head_b + kv_b
     tokens = max(n_slots * tokens_per_slot, 1)
@@ -468,6 +483,7 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
         "attn_weight_bytes_per_step": attn_b,
         "lm_head_bytes_per_step": head_b,
         "kv_bytes_per_step": kv_b,
+        "kv_bytes_per_token": kv_b / tokens,
         "bytes_per_step": step,
         "bytes_per_token": step / tokens,
         "moe_expert_bytes_per_token": moe_b / tokens,
@@ -481,7 +497,8 @@ def spec_decode_traffic_model(cfg, draft_cfg, *, k_draft: int, n_slots: int,
                               weight_dtype: str = "bf16",
                               prefix_weight_dtype: str = "bf16",
                               draft_weight_dtype: str = "bf16",
-                              draft_prefix_weight_dtype: str = "bf16"
+                              draft_prefix_weight_dtype: str = "bf16",
+                              kv_dtype: str = "bf16"
                               ) -> Dict[str, float]:
     """Modeled HBM bytes per COMMITTED token for one speculative
     draft/verify round (DESIGN.md §10).
@@ -508,14 +525,14 @@ def spec_decode_traffic_model(cfg, draft_cfg, *, k_draft: int, n_slots: int,
     draft = decode_traffic_model(
         draft_cfg, n_slots=n_slots, pos=pos,
         weight_dtype=draft_weight_dtype,
-        prefix_weight_dtype=draft_prefix_weight_dtype)
+        prefix_weight_dtype=draft_prefix_weight_dtype, kv_dtype=kv_dtype)
     verify = decode_traffic_model(
         cfg, n_slots=n_slots, pos=pos, weight_dtype=weight_dtype,
         prefix_weight_dtype=prefix_weight_dtype,
-        tokens_per_slot=k_draft + 1)
+        tokens_per_slot=k_draft + 1, kv_dtype=kv_dtype)
     baseline = decode_traffic_model(
         cfg, n_slots=n_slots, pos=pos, weight_dtype=weight_dtype,
-        prefix_weight_dtype=prefix_weight_dtype)
+        prefix_weight_dtype=prefix_weight_dtype, kv_dtype=kv_dtype)
 
     draft_round = k_draft * draft["bytes_per_step"]
     round_bytes = draft_round + verify["bytes_per_step"]

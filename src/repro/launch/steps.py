@@ -98,15 +98,17 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
 # continuous-batching (slotted) serving
 # ---------------------------------------------------------------------------
 
-def admit_trace_budget(buckets, s_max: int, n_slots: int) -> int:
-    """Upper bound on legitimate jit specializations of ``slot_admit``.
+def admit_pad_shapes(buckets, s_max: int) -> Tuple[int, ...]:
+    """The ONLY prompt pad lengths admission may compile, ascending.
 
-    The engine pads every admission group to (bucket length, pow2 group
-    size); distinct bucket lengths are the declared buckets clamped to
-    ``s_max`` plus the big-bucket multiples ``Engine.bucket_for`` emits for
-    overflow prompts, and group sizes are the powers of two up to the next
-    pow2 >= ``n_slots``. Anything beyond this product is a RETRACE — some
-    shape leaked past the padding policy (the trace guard counts it)."""
+    Single source of truth for the padding policy: the declared buckets
+    clamped to ``s_max`` plus the big-bucket multiples used for overflow
+    prompts (also clamped). ``Engine.bucket_for`` maps a length to the
+    smallest member covering it and FAILS CLOSED on non-membership, and
+    :func:`admit_trace_budget` counts this same set — so the shape table the
+    engine pads to and the trace budget the guard enforces can never drift
+    apart. The largest member is always ``s_max``, so every admissible
+    prompt (``len <= s_max``) has a pad shape."""
     declared = sorted({min(int(b), int(s_max)) for b in buckets}) or [1]
     big = declared[-1]
     shapes = set(declared)
@@ -114,6 +116,19 @@ def admit_trace_budget(buckets, s_max: int, n_slots: int) -> int:
     while m * big < s_max:
         m += 1
         shapes.add(min(m * big, s_max))
+    return tuple(sorted(shapes))
+
+
+def admit_trace_budget(buckets, s_max: int, n_slots: int) -> int:
+    """Upper bound on legitimate jit specializations of ``slot_admit``.
+
+    The engine pads every admission group to (pad shape, pow2 group size);
+    pad shapes come from :func:`admit_pad_shapes` (the same table
+    ``Engine.bucket_for`` draws from), and group sizes are the powers of two
+    up to the next pow2 >= ``n_slots``. Anything beyond this product is a
+    RETRACE — some shape leaked past the padding policy (the trace guard
+    counts it)."""
+    shapes = admit_pad_shapes(buckets, s_max)
     sizes, p = 1, 1
     while p < n_slots:
         p *= 2
@@ -149,6 +164,28 @@ def make_slot_admit(cfg: ModelConfig) -> Callable:
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return logits, greedy, cache
     return slot_admit
+
+
+def make_slot_admit_paged(cfg: ModelConfig) -> Callable:
+    """Fused admission into the PAGED KV pool (DESIGN.md §11).
+
+    slot_admit_paged(params, cache, tokens [B, S_bucket], lengths [B],
+    slots [B], pos0 [B]) -> (logits [B, V], greedy [B] int32, cache).
+
+    ``tokens`` holds each request's SUFFIX (prompt minus any shared-prefix
+    rows) padded to a bucket length; ``pos0`` is the per-row shared prefix
+    length in rows (all zero without sharing). Pad rows carry
+    ``slots >= n_slots``, which indexes the sentinel block-table row — their
+    KV scatters and ``pos`` writes all drop, the ``make_slot_admit``
+    contract carried over to the paged layout. With ``pos0 = 0`` the logits
+    and pool rows written are bitwise the dense prefill+insert admission's
+    (bf16 pools)."""
+    def slot_admit_paged(params, cache, tokens, lengths, slots, pos0):
+        logits, cache = MD.admit_slots_paged(cfg, params, cache, tokens,
+                                             lengths, slots, pos0)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, greedy, cache
+    return slot_admit_paged
 
 
 def sample_tokens(logits: jax.Array, temperature: float, keys: jax.Array,
@@ -264,3 +301,11 @@ def make_slot_admit_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
     both slot inserts + the full model's first token in one jitted call."""
     from repro.serving.spec import build_slot_admit_spec
     return build_slot_admit_spec(cfg, draft_cfg, temperature)
+
+
+def make_slot_admit_spec_paged(cfg: ModelConfig, draft_cfg: ModelConfig,
+                               temperature: float = 0.0) -> Callable:
+    """Paged-pool sibling of :func:`make_slot_admit_spec`: both models admit
+    the same suffix group into their own block pools (one shared table)."""
+    from repro.serving.spec import build_slot_admit_spec_paged
+    return build_slot_admit_spec_paged(cfg, draft_cfg, temperature)

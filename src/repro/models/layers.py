@@ -12,6 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as Q
+from repro.kernels import ops
 from repro.models.numerics import ein, ein32, dot as _ndot, constrain, bf16_cotangent
 
 from repro.models.config import ModelConfig
@@ -245,11 +247,16 @@ def attn_verify_slots(cfg: ModelConfig, p: dict, x: jax.Array, cache_k,
     their KV is scattered into those cache rows, and query ``i`` attends
     rows ``<= pos[b]+i`` (the committed prefix plus the draft prefix up to
     itself). Writes past ``s_max`` fall out of bounds and are DROPPED by
-    JAX scatter semantics — such rows belong to draft positions that can
-    never be committed (admission enforces prompt + max_new_tokens <=
-    s_max), so their garbage logits are never sampled from. Rows past the
-    written window carry stale KV from evicted requests or rolled-back
-    drafts; the per-slot mask hides them, same as the decode path.
+    JAX scatter semantics. That is safe for COMMITTED tokens because the
+    engine's capacity check reserves verify headroom: admission enforces
+    ``prompt + max_new + spec_k <= s_max + 1`` in speculative mode, so
+    every query position whose logits can feed a committed sample is
+    ``<= s_max - 1`` and reads only rows that were actually written.
+    Without that headroom a near-capacity slot's dropped writes would
+    leave verify logits at those positions reading stale KV
+    (tests/test_spec_decode.py pins the edge). Rows past the written
+    window carry stale KV from evicted requests or rolled-back drafts;
+    the per-slot mask hides them, same as the decode path.
 
     x: [B, T, d]; cache_k/v: [B, S_max, nkv, hd]; pos: [B] int32.
     Returns (out [B,T,d], new_cache_k, new_cache_v).
@@ -271,6 +278,112 @@ def attn_verify_slots(cfg: ModelConfig, p: dict, x: jax.Array, cache_k,
     out = out.reshape(B, T, cfg.n_heads * cfg.hd)
     out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
     return out, cache_k, cache_v
+
+
+def _paged_write(pool, scales, blk, r, val):
+    """Scatter KV rows into the block pool (DESIGN.md §11).
+
+    pool: [n_blocks, bs, nkv, hd] (model dtype, or int8 when ``scales`` is
+    given); scales: [n_blocks, bs, nkv] fp32 or None; blk/r: [...] int32
+    block ids / in-block rows; val: [..., nkv, hd]. Sentinel block ids
+    (``>= n_blocks``) drop by JAX scatter semantics — that single mechanism
+    retires frozen slots, admission pads, and over-bucket garbage rows.
+    Writable blocks are disjoint across slots (sharers' first writable row
+    is block-aligned past the shared chain), so no scatter collisions."""
+    if scales is None:
+        return pool.at[blk, r].set(val.astype(pool.dtype)), None
+    q, s = Q.quantize_kv(val)
+    return pool.at[blk, r].set(q), scales.at[blk, r].set(s)
+
+
+def attn_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array, kp, vp, ks,
+                      vs, tab: jax.Array, pos: jax.Array, *, inv_freq):
+    """Single-token decode over the paged KV pool (DESIGN.md §11).
+
+    The paged sibling of :func:`attn_decode_slots`: same per-slot positions
+    and mask, but KV rows live in a flat block pool indexed through a
+    per-slot block table, and the attention itself goes through the
+    ``ops.paged_attention`` dispatch (Pallas kernel on TPU; on CPU the jnp
+    oracle, which mirrors :func:`_sdpa` on the gathered view bit for bit —
+    masked rows get probability exactly 0, so bf16 paged decode equals the
+    dense slot cache bitwise).
+
+    x: [B, 1, d]; kp/vp: [n_blocks, bs, nkv, hd] (int8 when ks/vs given);
+    ks/vs: [n_blocks, bs, nkv] fp32 scales or None; tab: [B, mb] int32
+    (sentinel = n_blocks); pos: [B] int32. Returns (out, kp, vp, ks, vs).
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(cfg, p, x)
+    positions = pos[:, None]                              # [B, 1]
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    nb, bs = kp.shape[0], kp.shape[1]
+    mb = tab.shape[1]
+    s_max = mb * bs
+    j = jnp.minimum(pos // bs, mb - 1)
+    blk = jnp.where(pos < s_max, tab[jnp.arange(B), j], nb)
+    r = pos % bs
+    kp, ks = _paged_write(kp, ks, blk, r, k[:, 0])
+    vp, vs = _paged_write(vp, vs, blk, r, v[:, 0])
+    lens = pos + 1
+    if ks is None:
+        out = ops.paged_attention(q[:, 0], kp, vp, tab, lens)
+    else:
+        out = ops.paged_attention_q(q[:, 0], kp, vp, ks, vs, tab, lens)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+    return out, kp, vp, ks, vs
+
+
+def attn_verify_paged(cfg: ModelConfig, p: dict, x: jax.Array, kp, vp, ks,
+                      vs, tab: jax.Array, pos: jax.Array, *, inv_freq):
+    """T-token attention over the paged KV pool (verify AND admission).
+
+    The paged sibling of :func:`attn_verify_slots`, and ALSO the paged
+    admission forward: admitting a prompt suffix at base positions
+    ``pos[b]`` (the shared-prefix row count) is exactly a verify-shaped
+    forward whose KV scatters land in the slot's freshly reserved blocks.
+    Prefill-shaped (T > 1, no kernel): the pool is gathered through the
+    table into a contiguous ``[B, s_max]`` view — dequantized through
+    ``quant.dequantize_kv`` when the pool is int8, the SAME helper the
+    decode oracle uses, so verify and decode see one KV representation —
+    and attention is the exact :func:`_sdpa` arithmetic of the dense path.
+    Sentinel table entries clip into range; their rows are masked.
+
+    x: [B, T, d]; pools/tab as :func:`attn_decode_paged`; pos: [B] int32.
+    Returns (out [B, T, d], kp, vp, ks, vs).
+    """
+    B, T, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x)
+    positions = pos[:, None] + jnp.arange(T)[None, :]     # [B, T]
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    nb, bs = kp.shape[0], kp.shape[1]
+    mb = tab.shape[1]
+    s_max = mb * bs
+    j = jnp.minimum(positions // bs, mb - 1)
+    b_iota = jnp.arange(B)[:, None]
+    blk = jnp.where(positions < s_max, tab[b_iota, j], nb)
+    r = positions % bs
+    kp, ks = _paged_write(kp, ks, blk, r, k)
+    vp, vs = _paged_write(vp, vs, blk, r, v)
+    tabc = jnp.clip(tab, 0, nb - 1)
+    kc = kp[tabc].reshape(B, s_max, cfg.n_kv_heads, cfg.hd)
+    vc = vp[tabc].reshape(B, s_max, cfg.n_kv_heads, cfg.hd)
+    if ks is not None:
+        kc = Q.dequantize_kv(
+            kc, ks[tabc].reshape(B, s_max, cfg.n_kv_heads), x.dtype)
+        vc = Q.dequantize_kv(
+            vc, vs[tabc].reshape(B, s_max, cfg.n_kv_heads), x.dtype)
+    valid = (jnp.arange(s_max)[None, None, :]
+             <= positions[:, :, None])[:, None, :, :]     # [B, 1, T, s_max]
+    out = _sdpa(q, kc, vc, valid, n_rep)
+    out = out.reshape(B, T, cfg.n_heads * cfg.hd)
+    out = ein("bsh,hd->bsd", out, p["wo"]).astype(x.dtype)
+    return out, kp, vp, ks, vs
 
 
 # ---------------------------------------------------------------------------

@@ -299,6 +299,120 @@ def init_slot_cache(cfg: ModelConfig, n_slots: int, s_max: int) -> dict:
             "pos": jnp.zeros((n_slots,), jnp.int32)}
 
 
+def init_paged_cache(cfg: ModelConfig, n_slots: int, s_max: int, *,
+                     n_blocks: int, block_size: int,
+                     kv_dtype: str = "bf16") -> dict:
+    """Paged KV pool for the continuous-batching engine (DESIGN.md §11).
+
+    Replaces the dense ``[L, n_slots, s_max, nkv, hd]`` slot cache with a
+    flat pool of ``n_blocks`` fixed-size blocks plus a per-slot block table:
+    ``kp``/``vp``: [L, n_blocks, block_size, nkv, hd] (int8 when
+    ``kv_dtype == "int8"``, with per-(row, head) fp32 scales ``ks``/``vs``);
+    ``tab``: [n_slots + 1, s_max // block_size] int32 block ids, sentinel
+    ``n_blocks`` for unallocated entries AND the whole last row (admission
+    pads point there so their scatters drop); ``pos``: [n_slots] int32.
+    Block ownership lives host-side in ``serving.paging.PagedAllocator``;
+    the pool zeros-init keeps never-written garbage finite. Works with the
+    UNCHANGED ``decode_step_slots``/``verify_step_slots`` entries, which
+    dispatch on ``"kp" in cache``."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged serving is token-only (dense/moe), not {cfg.family}")
+    if s_max % block_size:
+        raise ValueError(f"s_max={s_max} not a multiple of "
+                         f"block_size={block_size}")
+    mb = s_max // block_size
+    pshape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    cache = {"pos": jnp.zeros((n_slots,), jnp.int32),
+             "tab": jnp.full((n_slots + 1, mb), n_blocks, jnp.int32)}
+    if kv_dtype == "int8":
+        cache.update(kp=jnp.zeros(pshape, jnp.int8),
+                     vp=jnp.zeros(pshape, jnp.int8),
+                     ks=jnp.zeros(pshape[:-1], F32),
+                     vs=jnp.zeros(pshape[:-1], F32))
+    elif kv_dtype == "bf16":
+        dt = cfg.param_dtype
+        cache.update(kp=jnp.zeros(pshape, dt), vp=jnp.zeros(pshape, dt))
+    else:
+        raise ValueError(f"kv_dtype must be 'bf16' or 'int8', got "
+                         f"{kv_dtype!r}")
+    return cache
+
+
+def _paged_forward(cfg: ModelConfig, params: dict, cache: dict, x, stack_fn,
+                   tab, pos, inv_freq):
+    """Run a paged stack function over both parameter stacks, splitting the
+    pools' layer axis at ``cfg.moe_split``. Returns (x, cache-with-new-pools)
+    — ``pos``/``tab`` updates are the caller's business."""
+    quant = "ks" in cache
+    kp, vp = cache["kp"], cache["vp"]
+    ks, vs = (cache["ks"], cache["vs"]) if quant else (None, None)
+
+    def sl(a, lo, hi):
+        return None if a is None else a[lo:hi]
+
+    if "stack_c" in params and "stack" in params:
+        split = cfg.moe_split
+        L_ = cfg.n_layers
+        x, k1, v1, s1, t1 = stack_fn(cfg, params["stack"], x,
+                                     kp[:split], vp[:split],
+                                     sl(ks, 0, split), sl(vs, 0, split),
+                                     tab, pos, inv_freq=inv_freq)
+        x, k2, v2, s2, t2 = stack_fn(cfg, params["stack_c"], x,
+                                     kp[split:], vp[split:],
+                                     sl(ks, split, L_), sl(vs, split, L_),
+                                     tab, pos, inv_freq=inv_freq)
+        kp = jnp.concatenate([k1, k2], axis=0)
+        vp = jnp.concatenate([v1, v2], axis=0)
+        if quant:
+            ks = jnp.concatenate([s1, s2], axis=0)
+            vs = jnp.concatenate([t1, t2], axis=0)
+    else:
+        stack = params.get("stack", params.get("stack_c"))
+        x, kp, vp, ks, vs = stack_fn(cfg, stack, x, kp, vp, ks, vs,
+                                     tab, pos, inv_freq=inv_freq)
+    new_cache = dict(cache, kp=kp, vp=vp)
+    if quant:
+        new_cache.update(ks=ks, vs=vs)
+    return x, new_cache
+
+
+def admit_slots_paged(cfg: ModelConfig, params: dict, cache: dict,
+                      tokens: jax.Array, lengths: jax.Array,
+                      slots: jax.Array, pos0: jax.Array):
+    """Admit one bucketed request group into the paged cache.
+
+    tokens: [Bp, Sb] SUFFIX tokens (prompt minus any shared-prefix rows)
+    right-padded to a bucket length; lengths: [Bp] true suffix lengths
+    (>= 1 — the allocator caps sharing below the full prompt); slots: [Bp]
+    int32 target slots with pads = n_slots (the sentinel table row, so pad
+    rows' KV scatters and pos write all drop); pos0: [Bp] int32 shared
+    prefix row counts (all zero without sharing).
+
+    This is a verify-shaped forward at absolute positions
+    ``pos0[b] + arange(Sb)``: suffix queries attend the adopted prefix
+    blocks through the slot's table, so with pos0 = 0 it reproduces the
+    dense ``prefill_slots`` + ``insert_slots`` admission bitwise (bf16
+    pools), and with pos0 > 0 it skips re-prefilling the shared rows
+    entirely. Returns (logits [Bp, V] at each row's last real suffix
+    position, new cache with ``pos[slots] = pos0 + lengths``).
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged admission is token-only (dense/moe), not {cfg.family}")
+    inv_freq = None if cfg.is_attention_free else L.rope_freqs(cfg.hd, cfg.rope_theta)
+    x = L.embed_apply(params["embed"], tokens)
+    tab_b = cache["tab"][slots]                     # [Bp, mb]
+    x, new_cache = _paged_forward(cfg, params, cache, x,
+                                  T.stack_verify_paged, tab_b, pos0,
+                                  inv_freq)
+    new_cache["pos"] = cache["pos"].at[slots].set(pos0 + lengths)
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    last = x[jnp.arange(x.shape[0]), lengths - 1]   # [Bp, d]
+    logits = L.lm_head(cfg, params["embed"], last[:, None])[:, 0]
+    return logits, new_cache
+
+
 def prefill_slots(cfg: ModelConfig, params: dict, tokens: jax.Array,
                   lengths: jax.Array):
     """Prefill right-padded prompts for slot insertion.
@@ -376,7 +490,13 @@ def decode_step_slots(cfg: ModelConfig, params: dict, cache: dict,
     x = L.embed_apply(params["embed"], token[:, None])
     pos = cache["pos"]
 
-    if "stack_c" in params and "stack" in params:
+    if "kp" in cache:                                  # paged pool (§11)
+        x, new_cache = _paged_forward(cfg, params, cache, x,
+                                      T.stack_decode_paged,
+                                      cache["tab"][:pos.shape[0]], pos,
+                                      inv_freq)
+        new_cache["pos"] = jnp.where(active, pos + 1, pos)
+    elif "stack_c" in params and "stack" in params:
         split = cfg.moe_split
         x, nk1, nv1 = T.stack_decode_slots(cfg, params["stack"], x,
                                            cache["k"][:split],
@@ -388,13 +508,15 @@ def decode_step_slots(cfg: ModelConfig, params: dict, cache: dict,
                                            pos, inv_freq=inv_freq)
         nk = jnp.concatenate([nk1, nk2], axis=0)
         nv = jnp.concatenate([nv1, nv2], axis=0)
+        new_cache = {"k": nk, "v": nv,
+                     "pos": jnp.where(active, pos + 1, pos)}
     else:
         stack = params.get("stack", params.get("stack_c"))
         x, nk, nv = T.stack_decode_slots(cfg, stack, x,
                                          cache["k"], cache["v"], pos,
                                          inv_freq=inv_freq)
-    new_cache = {"k": nk, "v": nv,
-                 "pos": jnp.where(active, pos + 1, pos)}
+        new_cache = {"k": nk, "v": nv,
+                     "pos": jnp.where(active, pos + 1, pos)}
     x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
     logits = L.lm_head(cfg, params["embed"], x)[:, 0]
     return logits, new_cache
@@ -421,7 +543,12 @@ def verify_step_slots(cfg: ModelConfig, params: dict, cache: dict,
     x = L.embed_apply(params["embed"], tokens)
     pos = cache["pos"]
 
-    if "stack_c" in params and "stack" in params:
+    if "kp" in cache:                                  # paged pool (§11)
+        x, new_cache = _paged_forward(cfg, params, cache, x,
+                                      T.stack_verify_paged,
+                                      cache["tab"][:pos.shape[0]], pos,
+                                      inv_freq)
+    elif "stack_c" in params and "stack" in params:
         split = cfg.moe_split
         x, nk1, nv1 = T.stack_verify_slots(cfg, params["stack"], x,
                                            cache["k"][:split],
@@ -433,12 +560,13 @@ def verify_step_slots(cfg: ModelConfig, params: dict, cache: dict,
                                            pos, inv_freq=inv_freq)
         nk = jnp.concatenate([nk1, nk2], axis=0)
         nv = jnp.concatenate([nv1, nv2], axis=0)
+        new_cache = {"k": nk, "v": nv, "pos": pos}
     else:
         stack = params.get("stack", params.get("stack_c"))
         x, nk, nv = T.stack_verify_slots(cfg, stack, x,
                                          cache["k"], cache["v"], pos,
                                          inv_freq=inv_freq)
-    new_cache = {"k": nk, "v": nv, "pos": pos}
+        new_cache = {"k": nk, "v": nv, "pos": pos}
     x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
     logits = L.lm_head(cfg, params["embed"], x)
     return logits, new_cache

@@ -180,6 +180,63 @@ def stack_verify_slots(cfg: ModelConfig, stacked: dict, x, cache_k, cache_v,
     return y, nk, nv
 
 
+def _paged_body(cfg: ModelConfig, attn_fn, tab, pos, inv_freq, quant: bool):
+    """Layer body shared by the paged decode/verify stacks: same
+    ln1 -> attn -> residual -> ln2 -> moe/mlp structure as the dense slot
+    stacks, with the per-layer KV pool (and scales, when int8) threaded
+    through the scan carry-out."""
+    def body(h, xs):
+        if quant:
+            layer_p, kp, vp, ks, vs = xs
+        else:
+            (layer_p, kp, vp), ks, vs = xs, None, None
+        hn = L.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+        a, kp, vp, ks, vs = attn_fn(cfg, layer_p["attn"], hn, kp, vp, ks, vs,
+                                    tab, pos, inv_freq=inv_freq)
+        h = h + a
+        hn = L.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+        if cfg.moe is not None:
+            out = M.moe_apply(cfg, layer_p["moe"], hn, need_aux=False)
+            h = h + out.y
+        else:
+            h = h + L.mlp_apply(layer_p["mlp"], hn)
+        return h, (kp, vp, ks, vs) if quant else (kp, vp)
+    return body
+
+
+def stack_decode_paged(cfg: ModelConfig, stacked: dict, x, kp, vp, ks, vs,
+                       tab, pos, *, inv_freq):
+    """One-token decode through the scanned stack over paged KV pools.
+
+    kp/vp: [L, n_blocks, bs, nkv, hd]; ks/vs: [L, n_blocks, bs, nkv] fp32
+    or None (bf16 pools); tab: [B, mb] int32 (shared by all layers — one
+    allocator owns the block ids); pos: [B] int32.
+    Returns (y, kp, vp, ks, vs)."""
+    quant = ks is not None
+    body = _paged_body(cfg, L.attn_decode_paged, tab, pos, inv_freq, quant)
+    if quant:
+        y, (nk, nv, nks, nvs) = jax.lax.scan(body, x, (stacked, kp, vp,
+                                                       ks, vs))
+        return y, nk, nv, nks, nvs
+    y, (nk, nv) = jax.lax.scan(body, x, (stacked, kp, vp))
+    return y, nk, nv, None, None
+
+
+def stack_verify_paged(cfg: ModelConfig, stacked: dict, x, kp, vp, ks, vs,
+                       tab, pos, *, inv_freq):
+    """T-token forward over paged KV pools (speculative verify AND paged
+    admission — see ``layers.attn_verify_paged``). x: [B, T, d].
+    Returns (y [B, T, d], kp, vp, ks, vs)."""
+    quant = ks is not None
+    body = _paged_body(cfg, L.attn_verify_paged, tab, pos, inv_freq, quant)
+    if quant:
+        y, (nk, nv, nks, nvs) = jax.lax.scan(body, x, (stacked, kp, vp,
+                                                       ks, vs))
+        return y, nk, nv, nks, nvs
+    y, (nk, nv) = jax.lax.scan(body, x, (stacked, kp, vp))
+    return y, nk, nv, None, None
+
+
 def stack_prefill(cfg: ModelConfig, stacked: dict, x, *, inv_freq):
     """Full-sequence forward that also emits per-layer (k, v) decode caches.
     Returns (y, cache_k [L,B,S,nkv,hd], cache_v)."""

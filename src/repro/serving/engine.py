@@ -12,6 +12,19 @@ Design (decode dataflow details in DESIGN.md §7):
   one slot from admission to completion; eviction just marks the slot free —
   stale rows are masked by the per-slot causal mask and overwritten in place
   by the next occupant (no copying, no reallocation).
+* **Paged KV (``kv_layout='paged'``, DESIGN.md §11).** The dense slot cache
+  is replaced by a flat pool of fixed-size KV blocks plus per-slot block
+  tables owned by a host-side allocator (``serving.paging.PagedAllocator``):
+  admission reserves a request's whole row budget
+  (``prompt + max_new - 1``, plus ``spec_k`` verify headroom in spec mode)
+  up front, full prompt blocks are shared copy-free between requests with
+  identical prefixes (refcounted, LRU-evicted under pressure), eviction
+  returns blocks to the pool, and admission DEFERS (FIFO head-of-line) when
+  the pool cannot supply a reservation. ``kv_dtype='int8'`` stores the pool
+  quantized with per-(row, head) fp32 scales — roughly half the decode KV
+  stream of bf16. The bf16 paged engine is token-for-token IDENTICAL to the
+  dense engine in every mode (plain / fused block / speculative); int8 is
+  tolerance-gated instead (quantization perturbs logits).
 * **Admission.** Pending requests sit in a heap ordered by
   ``(arrival_time, uid)`` (FIFO by arrival, O(log n) per op). At the top of
   every engine step each free slot claims the next due request, and all
@@ -66,7 +79,10 @@ from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.models.numerics import set_activation_mesh
-from repro.serving.spec import build_slot_admit_spec, build_slot_decode_spec
+from repro.serving.paging import PagedAllocator
+from repro.serving.spec import (build_slot_admit_spec,
+                                build_slot_admit_spec_paged,
+                                build_slot_decode_spec)
 
 
 @dataclasses.dataclass
@@ -121,6 +137,17 @@ class EngineConfig:
     spec_draft: Optional[str] = None
     # draft proposals per verify round; each round commits 1..spec_k tokens
     spec_k: int = 4
+    # KV cache layout: "dense" = the [L, n_slots, s_max, nkv, hd] slot
+    # cache, "paged" = the block-pool layout (DESIGN.md §11)
+    kv_layout: str = "dense"
+    # paged layout knobs: KV rows per block (s_max must be a multiple),
+    # pool size in blocks (0 = n_slots * s_max / kv_block, i.e. dense
+    # capacity), pool storage dtype ("bf16" | "int8" — int8 carries
+    # per-(row, head) fp32 scales), and copy-free prompt prefix sharing
+    kv_block: int = 16
+    kv_blocks: int = 0
+    kv_dtype: str = "bf16"
+    prefix_sharing: bool = True
 
 
 class Engine:
@@ -176,19 +203,50 @@ class Engine:
         from repro.analysis.trace_guard import TraceGuard
         self._guard = TraceGuard(ec.trace_guard, counters=self.counters)
         self._buckets = tuple(sorted(set(int(b) for b in ec.prefill_buckets)))
+        # the ONLY prompt pad lengths admission may compile; bucket_for
+        # fails closed on non-membership and admit_trace_budget counts this
+        # same table, so the padding policy and the trace budget cannot
+        # drift apart (steps.admit_pad_shapes is the single source of truth)
+        self._pad_shapes = ST.admit_pad_shapes(self._buckets, ec.s_max)
+        admit_budget = ST.admit_trace_budget(self._buckets, ec.s_max,
+                                             ec.n_slots)
+
+        # ---- KV layout: dense slot cache or paged block pool (§11) ----
+        self._alloc: Optional[PagedAllocator] = None
+        self._tab_dirty = False
+        if ec.kv_layout == "paged":
+            n_blocks = ec.kv_blocks if ec.kv_blocks > 0 else (
+                ec.n_slots * ec.s_max // ec.kv_block)
+            # the allocator validates s_max % kv_block; init_paged_cache
+            # validates kv_dtype
+            self._alloc = PagedAllocator(
+                n_slots=ec.n_slots, n_blocks=n_blocks,
+                block_size=ec.kv_block, s_max=ec.s_max)
+            self.cache = MD.init_paged_cache(
+                cfg, ec.n_slots, ec.s_max, n_blocks=n_blocks,
+                block_size=ec.kv_block, kv_dtype=ec.kv_dtype)
+            self._tab_dirty = True
+            admit_fn = ST.make_slot_admit_paged(cfg)
+        elif ec.kv_layout == "dense":
+            if ec.kv_dtype != "bf16":
+                raise ValueError(
+                    f"kv_dtype={ec.kv_dtype!r} requires kv_layout='paged' "
+                    f"(the dense slot cache stores the model dtype)")
+            self.cache = MD.init_slot_cache(cfg, ec.n_slots, ec.s_max)
+            admit_fn = ST.make_slot_admit(cfg)
+        else:
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', got "
+                             f"{ec.kv_layout!r}")
         # admission legitimately compiles one specialization per
-        # (bucket, pow2-group) pair; decode entry points get exactly ONE
+        # (pad shape, pow2-group) pair; decode entry points get exactly ONE
         self._admit_step = self._guard.wrap_jit(
-            "slot_admit", ST.make_slot_admit(cfg),
-            expected_traces=ST.admit_trace_budget(
-                self._buckets, ec.s_max, ec.n_slots))
+            "slot_admit", admit_fn, expected_traces=admit_budget)
         self._decode = self._guard.wrap_jit(
             "slot_decode", ST.make_slot_decode(cfg), expected_traces=1)
         self._decode_multi = self._guard.wrap_jit(
             "slot_decode_multi",
             ST.make_slot_decode_multi(cfg, ec.decode_block, ec.temperature),
             expected_traces=1)
-        self.cache = MD.init_slot_cache(cfg, ec.n_slots, ec.s_max)
 
         # ---- speculative decoding (dual artifact, DESIGN.md §10) ----
         self.draft_artifact: Optional[dict] = None
@@ -211,8 +269,21 @@ class Engine:
             if ec.spec_k < 1:
                 raise ValueError("spec_k must be >= 1")
             self.draft_cfg, self.draft_params = draft_cfg, draft_params
-            self.cache_draft = MD.init_slot_cache(draft_cfg, ec.n_slots,
-                                                  ec.s_max)
+            if self._alloc is not None:
+                # the draft pool mirrors the full pool's block geometry and
+                # shares the ONE allocator table (paging.PagedAllocator
+                # docstring): a prefix shared in the full pool is shared in
+                # the draft pool at the same block ids
+                self.cache_draft = MD.init_paged_cache(
+                    draft_cfg, ec.n_slots, ec.s_max, n_blocks=self._alloc.nb,
+                    block_size=ec.kv_block, kv_dtype=ec.kv_dtype)
+                admit_spec_fn = build_slot_admit_spec_paged(
+                    cfg, draft_cfg, ec.temperature)
+            else:
+                self.cache_draft = MD.init_slot_cache(draft_cfg, ec.n_slots,
+                                                      ec.s_max)
+                admit_spec_fn = build_slot_admit_spec(cfg, draft_cfg,
+                                                      ec.temperature)
             # the builders are wrapped directly (not via the steps.make_*
             # aliases) so the lint analyzer's maker-root walk sees the
             # closure bodies; one spec round per trace, same budget as the
@@ -223,10 +294,8 @@ class Engine:
                                        ec.temperature),
                 expected_traces=1)
             self._admit_spec = self._guard.wrap_jit(
-                "slot_admit_spec",
-                build_slot_admit_spec(cfg, draft_cfg, ec.temperature),
-                expected_traces=ST.admit_trace_budget(
-                    self._buckets, ec.s_max, ec.n_slots))
+                "slot_admit_spec", admit_spec_fn,
+                expected_traces=admit_budget)
 
         self._slot_req: List[Optional[Request]] = [None] * ec.n_slots
         self._last_tok = np.zeros((ec.n_slots,), np.int32)
@@ -312,10 +381,33 @@ class Engine:
                 f"s_max={self.ec.s_max} (declared buckets "
                 f"{tuple(self._buckets)} top out at {big}); shorten the "
                 f"prompt or raise s_max")
-        if prompt.size + max_new_tokens > self.ec.s_max:
+        # a request consumes prompt + max_new - 1 KV rows: positions
+        # 0 .. prompt+max_new-2 are written (the FINAL sampled token is
+        # emitted but never fed back, so its KV row is never needed). The
+        # bound is therefore s_max + 1, not s_max — the old check rejected
+        # the exactly-fitting request at the boundary.
+        if prompt.size + max_new_tokens > self.ec.s_max + 1:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
-                f"exceeds slot capacity s_max={self.ec.s_max}")
+                f"needs {prompt.size + max_new_tokens - 1} KV rows, more "
+                f"than slot capacity s_max={self.ec.s_max} (the final "
+                f"sampled token occupies no row, so the bound is "
+                f"prompt + max_new <= s_max + 1)")
+        # speculative verify writes up to spec_k lookahead rows past the
+        # committed stream (rows pos0 .. pos0+spec_k with pos0 up to
+        # prompt+max_new-2), so spec mode needs that much extra headroom —
+        # without this check the last verify rounds of a capacity-filling
+        # request scatter past s_max (dense: clipped into the last row,
+        # paged: dropped at the sentinel), silently corrupting or staling
+        # the KV its own acceptance then reads
+        if self.spec and (prompt.size + max_new_tokens + self.ec.spec_k
+                          > self.ec.s_max + 1):
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"+ spec_k ({self.ec.spec_k}) exceeds s_max + 1 = "
+                f"{self.ec.s_max + 1}: speculative verify needs spec_k KV "
+                f"rows of lookahead headroom past the committed stream; "
+                f"shorten the request, lower spec_k, or raise s_max")
 
     def submit(self, prompt, max_new_tokens: int, eos_token: int | None = None,
                arrival_time: float = 0.0, uid: int | None = None) -> Request:
@@ -340,6 +432,7 @@ class Engine:
         if self._active.any():
             # host->device conversions happen HERE, before the guard arms:
             # inside the guarded call every argument is already device-side
+            self._sync_tab()
             toks = jnp.asarray(self._last_tok)
             act = jnp.asarray(self._active)
             logits, greedy, self.cache = self._guard.run(
@@ -384,6 +477,7 @@ class Engine:
             eos[s] = -1 if req.eos_token is None else req.eos_token
         # convert np inputs OUTSIDE the guarded region (explicit H2D); the
         # guarded fused block itself must touch the host zero times
+        self._sync_tab()
         args = (self.params, self.cache, jnp.asarray(self._last_tok),
                 jnp.asarray(self._active), jnp.asarray(rem),
                 jnp.asarray(eos), jnp.asarray(self._slot_keys))
@@ -433,6 +527,7 @@ class Engine:
             req = self._slot_req[s]
             rem[s] = req.max_new_tokens - len(req.out_tokens)
             eos[s] = -1 if req.eos_token is None else req.eos_token
+        self._sync_tab()
         args = (self.params, self.draft_params, self.cache, self.cache_draft,
                 jnp.asarray(self._last_tok), jnp.asarray(self._active),
                 jnp.asarray(rem), jnp.asarray(eos),
@@ -512,18 +607,45 @@ class Engine:
         return one("stack"), one("stack_c" if "stack_c" in params
                                  else "stack")
 
+    @property
+    def kv_dtype_served(self) -> str:
+        """KV storage dtype actually in the cache ('int8' only for the
+        quantized paged pool)."""
+        return ("int8" if self._alloc is not None
+                and self.ec.kv_dtype == "int8" else "bf16")
+
+    @property
+    def paging_stats(self) -> Dict[str, int]:
+        """Allocator telemetry (prefix hits/rows shared, deferrals, registry
+        evictions, CoW copies, free blocks); empty in dense layout."""
+        if self._alloc is None:
+            return {}
+        return dict(self._alloc.stats, free_blocks=self._alloc.free_blocks)
+
+    def _bench_tab(self) -> jax.Array:
+        """Scratch identity block table for the admission-bypassing
+        benchmarks: block ``j`` of slot ``s`` maps to pool block
+        ``(s*mb + j) % n_blocks`` (the default pool size makes the modulus a
+        no-op; a smaller pool aliases blocks across slots, which is fine for
+        a throughput measurement — the bytes moved per step are identical)."""
+        n, mb, nb = self.ec.n_slots, self._alloc.mb, self._alloc.nb
+        tab = np.full((n + 1, mb), nb, np.int32)
+        tab[:n] = np.arange(n * mb, dtype=np.int32).reshape(n, mb) % nb
+        return jnp.asarray(tab)
+
     def modeled_decode_traffic(self, pos: int | None = None) -> Dict[str, float]:
         """Analytic HBM bytes for one steady-state decode step of this
         engine (``launch.hlo_analysis.decode_traffic_model`` at the served
-        config, weight dtypes read off the actual parameter tree). ``pos``
-        defaults to mid-cache, matching :meth:`bench_decode`'s scratch
-        state."""
+        config, weight dtypes read off the actual parameter tree, KV dtype
+        off the cache layout). ``pos`` defaults to mid-cache, matching
+        :meth:`bench_decode`'s scratch state."""
         from repro.launch.hlo_analysis import decode_traffic_model
         prefix_dt, suffix_dt = self.expert_weight_dtypes()
         return decode_traffic_model(
             self.cfg, n_slots=self.ec.n_slots,
             pos=self.ec.s_max // 2 if pos is None else pos,
-            weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt)
+            weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt,
+            kv_dtype=self.kv_dtype_served)
 
     def bench_decode(self, iters: int = 50,
                      k_steps: int | None = None) -> Dict[str, float]:
@@ -563,6 +685,8 @@ class Engine:
         fn = jax.jit(block)
         cache = jax.tree.map(jnp.copy, self.cache)
         cache["pos"] = jnp.full((n,), s_max // 2, jnp.int32)
+        if self._alloc is not None:
+            cache["tab"] = self._bench_tab()
         toks = jnp.zeros((n,), jnp.int32)
         act = jnp.ones((n,), bool)
         rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
@@ -626,7 +750,8 @@ class Engine:
             mean_committed=mean_committed,
             weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt,
             draft_weight_dtype=d_suffix_dt,
-            draft_prefix_weight_dtype=d_prefix_dt)
+            draft_prefix_weight_dtype=d_prefix_dt,
+            kv_dtype=self.kv_dtype_served)
 
     def bench_spec_decode(self, iters: int = 50) -> Dict[str, float]:
         """Steady-state speculative throughput with every slot active,
@@ -676,6 +801,8 @@ class Engine:
         cache = jax.tree.map(jnp.copy, self.cache)
         cache["pos"] = jnp.full((n,), s_max // 2, jnp.int32)
         dcache = jax.tree.map(jnp.copy, self.cache_draft)
+        if self._alloc is not None:
+            cache["tab"] = dcache["tab"] = self._bench_tab()
         toks = jnp.zeros((n,), jnp.int32)
         act = jnp.ones((n,), bool)
         rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
@@ -727,19 +854,24 @@ class Engine:
 
     def bucket_for(self, n: int) -> int:
         """Prefill pad length for an ``n``-token prompt (the jit
-        specialization it will compile into). Clamped to ``s_max`` so a
-        bucket never outgrows the slot it is inserted into; lengths beyond
-        ``s_max`` have no admissible bucket and raise (``submit`` rejects
-        them up front with the full context — this is the fail-closed
-        backstop for callers probing bucket shapes directly)."""
+        specialization it will compile into): the smallest member of
+        ``steps.admit_pad_shapes`` covering ``n``. Lengths beyond ``s_max``
+        have no admissible shape and raise (``submit`` rejects them up front
+        with the full context — this is the fail-closed backstop for callers
+        probing bucket shapes directly). FAILS CLOSED on table
+        non-membership too: returning any length outside the table would
+        silently blow the trace budget the guard enforces, so drift between
+        the two is an error here, never a retrace later."""
         if n > self.ec.s_max:
             raise ValueError(
                 f"no prefill bucket fits {n} tokens (s_max={self.ec.s_max})")
-        for b in self._buckets:
+        for b in self._pad_shapes:
             if n <= b:
-                return min(b, self.ec.s_max)
-        big = self._buckets[-1] if self._buckets else 1
-        return min(-(-n // big) * big, self.ec.s_max)
+                return b
+        raise AssertionError(
+            f"admission pad-shape table {self._pad_shapes} covers no "
+            f"length <= s_max={self.ec.s_max}; steps.admit_pad_shapes "
+            f"broke its own invariant")
 
     def _positions(self) -> np.ndarray:
         """Sequence position the NEXT sampled token will occupy, per slot —
@@ -772,41 +904,87 @@ class Engine:
             return True
         return False
 
+    def _sync_tab(self) -> None:
+        """Ship the allocator's host-side block table to the device cache(s)
+        when it changed. This is an EXPLICIT host->device transfer issued
+        outside the guarded jitted calls — the table rides into them as an
+        ordinary device argument, so the trace guard's implicit-transfer
+        check stays clean. Both pools (full + draft) share the one table."""
+        if self._alloc is None or not self._tab_dirty:
+            return
+        tab = jnp.asarray(self._alloc.tab)
+        self.cache = dict(self.cache, tab=tab)
+        if self.cache_draft is not None:
+            self.cache_draft = dict(self.cache_draft, tab=tab)
+        self._tab_dirty = False
+
+    def _reserve_rows(self, req: Request) -> int:
+        """KV rows a request must own for its whole lifetime: every written
+        position (``prompt + max_new - 1``, see ``_validate_request``) plus
+        ``spec_k`` verify-lookahead rows in speculative mode. Reserved in
+        FULL at admission so decode/verify never allocate mid-flight and
+        speculative rollback is a pure position rewind over owned blocks."""
+        return (req.n_prompt + req.max_new_tokens - 1
+                + (self.ec.spec_k if self.spec else 0))
+
     def _admit(self, now: float) -> List[Request]:
         """Fill free slots with due pending requests (prefill + insert +
         first token), batching same-bucket admissions. Returns requests that
-        finish AT admission (e.g. max_new_tokens == 1)."""
+        finish AT admission (e.g. max_new_tokens == 1).
+
+        Paged layout: each claim first reserves its block budget with the
+        allocator, adopting any registered prefix chain (the returned shared
+        row count shrinks the prompt suffix that is actually forwarded). A
+        failed reservation DEFERS the FIFO head — nothing behind it may jump
+        the queue — until eviction returns blocks to the pool."""
         finished: List[Request] = []
         free = [s for s in range(self.ec.n_slots) if not self._active[s]]
-        claimed: List[Tuple[Request, int]] = []
+        claimed: List[Tuple[Request, int, int]] = []
         while free and self._pending and self._pending[0][0] <= now:
-            req = heapq.heappop(self._pending)[-1]
-            claimed.append((req, free.pop(0)))
+            req = self._pending[0][-1]
+            shared = 0
+            if self._alloc is not None:
+                shared = self._alloc.admit(free[0], req.prompt,
+                                           self._reserve_rows(req))
+                if shared is None:
+                    break                       # pool exhausted: defer head
+                self._tab_dirty = True
+            heapq.heappop(self._pending)
+            claimed.append((req, free.pop(0), shared))
         if not claimed:
             return finished
         if self.ec.batch_admission:
-            groups: Dict[int, List[Tuple[Request, int]]] = {}
-            for req, slot in claimed:
-                groups.setdefault(self.bucket_for(req.n_prompt),
-                                  []).append((req, slot))
+            # paged grouping buckets by the SUFFIX length (the tokens the
+            # admission forward actually runs); dense shared is always 0,
+            # so this is the full prompt length there
+            groups: Dict[int, List[Tuple[Request, int, int]]] = {}
+            for req, slot, shared in claimed:
+                groups.setdefault(self.bucket_for(req.n_prompt - shared),
+                                  []).append((req, slot, shared))
             for bucket in sorted(groups):
                 self._admit_group(bucket, groups[bucket], now, finished)
         else:
-            for req, slot in claimed:
-                self._admit_group(self.bucket_for(req.n_prompt),
-                                  [(req, slot)], now, finished)
+            for req, slot, shared in claimed:
+                self._admit_group(self.bucket_for(req.n_prompt - shared),
+                                  [(req, slot, shared)], now, finished)
         return finished
 
-    def _admit_group(self, bucket: int, group: List[Tuple[Request, int]],
+    def _admit_group(self, bucket: int,
+                     group: List[Tuple[Request, int, int]],
                      now: float, finished: List[Request]) -> None:
         """Prefill + insert + first token for one bucket's admissions as a
-        single fused device call (``steps.make_slot_admit``).
+        single fused device call (``steps.make_slot_admit`` /
+        ``make_slot_admit_paged``).
 
         The batch is padded to the next power of two so admission compiles
-        at most ``len(buckets) * (log2(n_slots)+1)`` specializations instead
-        of one per (bucket, group-size) pair; pad rows carry an
-        out-of-bounds slot index, which JAX scatter semantics drop, so they
-        never touch the cache."""
+        at most ``len(pad_shapes) * (log2(n_slots)+1)`` specializations
+        instead of one per (bucket, group-size) pair; pad rows carry an
+        out-of-bounds slot index, which JAX scatter semantics drop (paged:
+        the sentinel table row), so they never touch the cache. Paged rows
+        forward only the prompt SUFFIX past their shared-prefix rows; new
+        prefix chains are registered for sharing only AFTER the device call
+        that wrote the rows (a same-cycle sharer must never adopt unwritten
+        blocks)."""
         B = len(group)
         Bp = 1
         while Bp < B:
@@ -814,34 +992,46 @@ class Engine:
         toks = np.zeros((Bp, bucket), np.int32)
         lengths = np.ones((Bp,), np.int32)
         slots = np.full((Bp,), self.ec.n_slots, np.int32)   # pads: OOB, dropped
+        pos0 = np.zeros((Bp,), np.int32)
         keys = np.zeros((Bp, 2), np.uint32)
-        for i, (req, slot) in enumerate(group):
-            toks[i, :req.n_prompt] = req.prompt
-            lengths[i] = req.n_prompt
+        for i, (req, slot, shared) in enumerate(group):
+            suffix = req.prompt[shared:]
+            toks[i, :suffix.size] = suffix
+            lengths[i] = suffix.size
             slots[i] = slot
+            pos0[i] = shared
             # the request's sampling key, derived from its uid so the
             # sampled stream is scheduling-independent (module docstring)
             self._slot_keys[slot] = np.asarray(
                 jax.random.fold_in(self._key_base, req.uid), np.uint32)
             keys[i] = self._slot_keys[slot]
+        self._sync_tab()
+        paged_args = ((jnp.asarray(pos0),) if self._alloc is not None
+                      else ())
         if self.spec:
             logits, first_dev, self.cache, self.cache_draft = self._admit_spec(
                 self.params, self.draft_params, self.cache, self.cache_draft,
                 jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(slots),
-                jnp.asarray(keys))
+                *paged_args, jnp.asarray(keys))
             self.counters["device_calls"] += 1
             first = np.asarray(first_dev[:B])
         else:
             logits, greedy, self.cache = self._admit_step(
                 self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(lengths), jnp.asarray(slots))
+                jnp.asarray(lengths), jnp.asarray(slots), *paged_args)
             self.counters["device_calls"] += 1
-            # the first token occupies position ``n_prompt`` — same noise
-            # index the device paths use for it
+            # the first token occupies position ``n_prompt`` (= shared
+            # prefix rows + suffix length) — same noise index the device
+            # paths use for it
             first = self._sample(logits[:B], greedy[:B], keys[:B],
-                                 lengths[:B])
+                                 pos0[:B] + lengths[:B])
         self.counters["host_syncs"] += 1
-        for i, (req, slot) in enumerate(group):
+        if self._alloc is not None and self.ec.prefix_sharing:
+            # AFTER the device call: the rows now exist, so later (or
+            # later-group same-cycle) admissions may adopt them
+            for req, slot, shared in group:
+                self._alloc.register_prefix(slot, req.prompt)
+        for i, (req, slot, shared) in enumerate(group):
             tok = int(first[i])
             req.out_tokens.append(tok)
             self.counters["tokens_out"] += 1
@@ -860,6 +1050,12 @@ class Engine:
             req.t_finished = now
         self._slot_req[slot] = None
         self._active[slot] = False
+        if self._alloc is not None:
+            # blocks return to the pool (registry pins keep shared prefix
+            # chains alive); the slot's table row goes to the sentinel so
+            # any write the frozen slot still issues on device is dropped
+            self._alloc.release(slot)
+            self._tab_dirty = True
 
 
 # ---------------------------------------------------------------------------

@@ -193,3 +193,33 @@ def build_slot_admit_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
         return logits, first, cache, draft_cache
 
     return slot_admit_spec
+
+
+def build_slot_admit_spec_paged(cfg: ModelConfig, draft_cfg: ModelConfig,
+                                temperature: float = 0.0) -> Callable:
+    """Paged-pool dual-model admission (engine entry:
+    ``steps.make_slot_admit_spec_paged``, DESIGN.md §11).
+
+    slot_admit_spec_paged(params, draft_params, cache, draft_cache,
+    tokens [B, S_bucket], lengths [B], slots [B], pos0 [B], keys [B, 2])
+    -> (logits [B, V], first [B] int32, cache, draft_cache)
+
+    Both models run the SAME suffix group (``tokens``/``lengths``/``pos0``
+    follow the ``model.admit_slots_paged`` contract) into their own block
+    pools; the engine ships ONE allocator table to both caches, so a prefix
+    chain shared in the full-model pool is shared in the draft pool at the
+    same block ids. The first token is sampled from the FULL model's logits
+    at absolute position ``pos0 + lengths`` (= the prompt length), bitwise
+    what any non-spec, non-paged mode produces for the same request."""
+    def slot_admit_spec_paged(params, draft_params, cache, draft_cache,
+                              tokens, lengths, slots, pos0, keys):
+        logits, cache = MD.admit_slots_paged(cfg, params, cache, tokens,
+                                             lengths, slots, pos0)
+        dlogits, draft_cache = MD.admit_slots_paged(
+            draft_cfg, draft_params, draft_cache, tokens, lengths, slots,
+            pos0)
+        del dlogits  # the draft's first-token opinion is never consulted
+        first = ST.sample_tokens(logits, temperature, keys, pos0 + lengths)
+        return logits, first, cache, draft_cache
+
+    return slot_admit_spec_paged

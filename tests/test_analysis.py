@@ -190,7 +190,8 @@ def test_contracts_pass_on_every_registered_kernel():
         f.format() for f in report.findings)
     kernels = {k for k, _ in report.checked}
     assert kernels == {"swiglu_mlp", "grouped_swiglu", "grouped_swiglu_q",
-                       "gather_swiglu", "gather_swiglu_q", "flash_attention"}
+                       "gather_swiglu", "gather_swiglu_q", "flash_attention",
+                       "paged_attention", "paged_attention_q"}
     # MoE kernels validated against both MoE archs, dense/flash more widely
     moe_archs = {a for k, a in report.checked if k == "gather_swiglu"}
     assert moe_archs == {"kimi_k2_1t_a32b", "qwen3_moe_30b_a3b"}
@@ -258,7 +259,7 @@ def _spec(block, imap, memory_space=None):
 
 
 def _findings(cap, quantized=False):
-    return list(_check_capture(cap, "k", "a", quantized))
+    return list(_check_capture(cap, "k", "a", {"quantized": quantized}))
 
 
 def test_contract_checker_rejects_bad_divisibility():

@@ -47,6 +47,19 @@ def good():
             "speedup_gate": 1.0, "modeled_speedup_at_reference": 1.38,
             "acceptance_ok": True, "speedup_ok": True,
         },
+        "paged": {
+            "kv_block": 16,
+            "bf16": _rec(kv_dtype="bf16", kv_layout="paged"),
+            "int8": _rec(kv_dtype="int8", kv_layout="paged"),
+            "parity_bf16_bitwise": True,
+            "top1_match_int8_kv": 0.97, "tolerance": 0.95,
+            "prefix_sharing": {"hit_rate": 1.0, "prefix_rows_shared": 160,
+                               "parity_duplicates_bitwise": True},
+            "modeled_full_scale_kv": {"bf16_bytes_per_token": 512,
+                                      "int8_bytes_per_token": 264,
+                                      "kv_stream_reduction": 1.939},
+            "kv_stream_gate": 1.7, "kv_stream_ok": True, "parity_ok": True,
+        },
         "parity": {"fused_vs_step_bitwise": True,
                    "gather_vs_ragged_bitwise": True,
                    "batched_vs_serial_admission_bitwise": True},
@@ -61,7 +74,8 @@ def test_records_enumerates_all_rows(good):
     labels = [label for label, _ in _records(good)]
     assert labels == ["full/before", "full/after", "compressed/before",
                       "compressed/after", "int8/full", "int8/compressed",
-                      "spec/k4_int8_half", "spec/k4_int8_full"]
+                      "spec/k4_int8_half", "spec/k4_int8_full",
+                      "paged/bf16", "paged/int8"]
 
 
 def test_parity_bit_false_fails(good):
@@ -138,6 +152,54 @@ def test_spec_row_counters_gated(good):
     bad["spec"]["rows"]["k4_int8_half"]["retraces"] = 3
     errs = check(bad)
     assert len(errs) == 1 and "spec/k4_int8_half" in errs[0]
+
+
+def test_paged_section_missing_fails(good):
+    bad = copy.deepcopy(good)
+    del bad["paged"]
+    assert any("paged section missing" in e for e in check(bad))
+
+
+def test_paged_bf16_parity_gate(good):
+    bad = copy.deepcopy(good)
+    bad["paged"]["parity_bf16_bitwise"] = False
+    errs = check(bad)
+    assert len(errs) == 1 and "parity_bf16_bitwise" in errs[0]
+
+
+def test_paged_duplicate_parity_gate(good):
+    bad = copy.deepcopy(good)
+    bad["paged"]["prefix_sharing"]["parity_duplicates_bitwise"] = False
+    assert any("duplicate parity" in e for e in check(bad))
+
+
+def test_paged_int8_kv_tolerance_checked_against_recorded_floor(good):
+    """Re-checks the NUMBER, not the summary's parity_ok bit."""
+    bad = copy.deepcopy(good)
+    bad["paged"]["top1_match_int8_kv"] = 0.91          # parity_ok untouched
+    errs = check(bad)
+    assert len(errs) == 1 and "0.91" in errs[0] \
+        and "tolerance 0.95" in errs[0]
+
+
+def test_paged_kv_stream_checked_against_recorded_gate(good):
+    bad = copy.deepcopy(good)
+    bad["paged"]["modeled_full_scale_kv"]["kv_stream_reduction"] = 1.2
+    errs = check(bad)                                  # kv_stream_ok untouched
+    assert len(errs) == 1 and "1.2x < 1.7x" in errs[0]
+
+
+def test_paged_kv_dtype_gate(good):
+    bad = copy.deepcopy(good)
+    bad["paged"]["int8"]["kv_dtype"] = "bf16"
+    assert any("paged.int8.kv_dtype" in e for e in check(bad))
+
+
+def test_paged_row_counters_gated(good):
+    bad = copy.deepcopy(good)
+    bad["paged"]["int8"]["retraces"] = 2
+    errs = check(bad)
+    assert len(errs) == 1 and "paged/int8" in errs[0]
 
 
 def test_nonzero_retrace_fails_that_row_only(good):

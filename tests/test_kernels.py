@@ -455,3 +455,123 @@ def test_grouped_matches_single_expert_swiglu():
     y2 = ref.swiglu_mlp(x, wg[0], wu[0], wd[0])
     np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import paged_attention as K_pa  # noqa: E402
+
+
+def _paged_inputs(B, nq, nkv, hd, nb, bs, mb, seed=0, dtype=jnp.float32):
+    """Random pool + a valid per-slot table: each slot owns ceil(lens/bs)
+    distinct blocks; remaining table entries are the sentinel ``nb``."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, nq, hd)) * 0.5, dtype)
+    kp = jnp.asarray(rng.standard_normal((nb, bs, nkv, hd)) * 0.5, dtype)
+    vp = jnp.asarray(rng.standard_normal((nb, bs, nkv, hd)) * 0.5, dtype)
+    lens = rng.integers(1, mb * bs + 1, size=B).astype(np.int32)
+    tab = np.full((B, mb), nb, np.int32)
+    perm = rng.permutation(nb)
+    used = 0
+    for b in range(B):
+        need = -(-int(lens[b]) // bs)
+        tab[b, :need] = perm[used:used + need]
+        used += need
+    assert used <= nb, "test pool too small"
+    return q, kp, vp, jnp.asarray(tab), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("B,nq,nkv,hd,bs,mb", [
+    (2, 4, 4, 16, 4, 3),      # MHA (n_rep = 1)
+    (3, 8, 2, 16, 8, 2),      # GQA (n_rep = 4)
+    (1, 4, 4, 32, 4, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_oracle(B, nq, nkv, hd, bs, mb, dtype):
+    nb = B * mb + 2
+    q, kp, vp, tab, lens = _paged_inputs(B, nq, nkv, hd, nb, bs, mb,
+                                         seed=B * 7 + mb, dtype=dtype)
+    y = K_pa.paged_attention(q, kp, vp, tab, lens, interpret=True)
+    yr = ref.paged_attention(q, kp, vp, tab, lens)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_q_matches_oracle(dtype):
+    B, nq, nkv, hd, bs, mb = 3, 8, 2, 16, 4, 3
+    nb = B * mb + 1
+    q, kp, vp, tab, lens = _paged_inputs(B, nq, nkv, hd, nb, bs, mb,
+                                         seed=5, dtype=dtype)
+    kq, ks = Q.quantize_kv(kp)
+    vq, vs = Q.quantize_kv(vp)
+    y = K_pa.paged_attention_q(q, kq, vq, ks, vs, tab, lens, interpret=True)
+    yr = ref.paged_attention_q(q, kq, vq, ks, vs, tab, lens)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_sentinel_blocks_contribute_nothing():
+    """Unallocated table entries (sentinel == n_blocks, clipped in range by
+    the wrapper) and rows past ``lens`` must contribute exactly zero
+    probability: poisoning every block the slot does NOT own with huge
+    values cannot change the output."""
+    B, nq, nkv, hd, bs, mb = 2, 4, 2, 16, 4, 3
+    nb = B * mb + 2
+    q, kp, vp, tab, lens = _paged_inputs(B, nq, nkv, hd, nb, bs, mb, seed=11)
+    owned = set(np.asarray(tab).reshape(-1).tolist()) - {nb}
+    poison = np.asarray(vp).copy()
+    for blk in range(nb):
+        if blk not in owned:
+            poison[blk] = 1e4
+    y0 = K_pa.paged_attention(q, kp, vp, tab, lens, interpret=True)
+    y1 = K_pa.paged_attention(q, kp, jnp.asarray(poison), tab, lens,
+                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_paged_attention_zero_lens_row_is_finite():
+    """lens == 0 (a slot with nothing admitted yet, e.g. the sentinel pad
+    row of a partially-filled admission group) must produce finite output —
+    the fully-masked-row normalizer guard, not NaNs from 0/0."""
+    B, nq, nkv, hd, bs, mb = 2, 4, 2, 16, 4, 2
+    nb = B * mb
+    q, kp, vp, tab, lens = _paged_inputs(B, nq, nkv, hd, nb, bs, mb, seed=3)
+    lens = jnp.asarray([0, int(lens[1])], jnp.int32)
+    y = K_pa.paged_attention(q, kp, vp, tab, lens, interpret=True)
+    assert bool(jnp.isfinite(y).all())
+    yr = ref.paged_attention(q, kp, vp, tab, lens)
+    np.testing.assert_allclose(np.asarray(y[1]), np.asarray(yr[1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_matches_dense_sdpa_on_contiguous_table():
+    """An identity table (slot b owns blocks [b*mb, b*mb+mb)) makes the pool
+    a reshaped dense cache: the paged oracle must then agree with the dense
+    decode attention the slot engine uses."""
+    B, nq, nkv, hd, bs, mb = 2, 4, 2, 16, 4, 3
+    nb = B * mb
+    q, kp, vp, _, lens = _paged_inputs(B, nq, nkv, hd, nb, bs, mb, seed=9)
+    tab = jnp.arange(nb, dtype=jnp.int32).reshape(B, mb)
+    y = K_pa.paged_attention(q, kp, vp, tab, lens, interpret=True)
+    kc = kp.reshape(B, mb * bs, nkv, hd)
+    vc = vp.reshape(B, mb * bs, nkv, hd)
+    yr = ref._paged_sdpa(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.sampled_from([1, 2, 4]), nkv=st.sampled_from([1, 2]),
+       bs=st.sampled_from([4, 8]), seed=st.integers(0, 100))
+def test_paged_attention_property(B, nkv, bs, seed):
+    nq, hd, mb = nkv * 2, 16, 2
+    nb = B * mb + 1
+    q, kp, vp, tab, lens = _paged_inputs(B, nq, nkv, hd, nb, bs, mb,
+                                         seed=seed)
+    y = K_pa.paged_attention(q, kp, vp, tab, lens, interpret=True)
+    yr = ref.paged_attention(q, kp, vp, tab, lens)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-5, rtol=2e-5)

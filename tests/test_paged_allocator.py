@@ -1,0 +1,267 @@
+"""Pure-host property tests for the paged-KV block allocator
+(repro.serving.paging, DESIGN.md §11): no device, no jax — random
+admission / release / trim / CoW traces with the refcount, free-list, and
+table invariants re-checked after every operation, plus directed tests for
+the prefix registry, LRU eviction, deferral, and copy-on-write semantics.
+
+Runs under real hypothesis when installed, else the deterministic
+_hypothesis_compat fallback (same API, seeded examples).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.paging import PagedAllocator
+
+
+def _alloc(n_slots=4, n_blocks=16, block_size=4, s_max=32):
+    return PagedAllocator(n_slots=n_slots, n_blocks=n_blocks,
+                          block_size=block_size, s_max=s_max)
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 997, size=n, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# directed semantics
+# ---------------------------------------------------------------------------
+
+def test_block_size_must_divide_s_max():
+    with pytest.raises(ValueError, match="multiple of"):
+        _alloc(block_size=5, s_max=32)
+
+
+def test_admit_reserves_ceil_blocks_and_release_returns_them():
+    a = _alloc()
+    rng = np.random.default_rng(0)
+    assert a.admit(0, _prompt(rng, 6), n_rows=9) == 0   # ceil(9/4) = 3
+    assert a.free_blocks == 16 - 3
+    a.check_invariants()
+    a.release(0)
+    assert a.free_blocks == 16
+    assert (a.tab[0] == a.nb).all()                     # sentinel everywhere
+    a.check_invariants()
+
+
+def test_double_admit_same_slot_raises():
+    a = _alloc()
+    rng = np.random.default_rng(1)
+    a.admit(0, _prompt(rng, 4), n_rows=4)
+    with pytest.raises(RuntimeError, match="already owns"):
+        a.admit(0, _prompt(rng, 4), n_rows=4)
+
+
+def test_prefix_sharing_adopts_full_blocks_only():
+    """A sharer adopts every FULL prompt block strictly below the last
+    prompt token — never the block holding that token — and allocates only
+    its suffix blocks."""
+    a = _alloc()
+    rng = np.random.default_rng(2)
+    p = _prompt(rng, 10)                   # blocks 0-1 full, row 8-9 partial
+    a.admit(0, p, n_rows=12)
+    a.register_prefix(0, p)
+    free0 = a.free_blocks
+    shared = a.admit(1, p, n_rows=12)
+    assert shared == 8                     # 2 full blocks of 4 rows
+    # sharer allocates ceil(12/4) - 2 = 1 new block
+    assert a.free_blocks == free0 - 1
+    assert list(a.tab[1, :2]) == list(a.tab[0, :2])     # same block ids
+    assert a.tab[1, 2] != a.tab[0, 2]                   # private suffix
+    a.check_invariants()
+
+
+def test_shared_rows_capped_below_prompt_length():
+    """A prompt that is ENTIRELY a registered chain still leaves >= 1 suffix
+    token, so the admission forward has logits to sample from."""
+    a = _alloc()
+    rng = np.random.default_rng(3)
+    p = _prompt(rng, 8)                    # exactly 2 full blocks
+    a.admit(0, np.concatenate([p, _prompt(rng, 4)]), n_rows=16)
+    a.register_prefix(0, np.concatenate([p, _prompt(rng, 4)]))
+    shared, chain = a.lookup_prefix(p)
+    assert shared == 4 and len(chain) == 1  # only the first block: 8 rows
+    # would cover the whole prompt, and (8-1)//4 == 1 caps it at one block
+
+
+def test_registry_pins_blocks_past_owner_release():
+    """Registered chains survive the owner's eviction: the registry holds
+    its own refcount, so a later duplicate still shares."""
+    a = _alloc()
+    rng = np.random.default_rng(4)
+    p = _prompt(rng, 9)
+    a.admit(0, p, n_rows=9)
+    a.register_prefix(0, p)
+    a.release(0)
+    a.check_invariants()
+    assert a.free_blocks < a.nb            # chain blocks stayed pinned
+    assert a.admit(1, p, n_rows=9) == 8
+    a.check_invariants()
+
+
+def test_registry_lru_eviction_frees_blocks_under_pressure():
+    a = _alloc(n_slots=8, n_blocks=8, block_size=4, s_max=32)
+    rng = np.random.default_rng(5)
+    # each admission takes 3 blocks and leaves 2 pinned in the registry
+    # ((9-1)//4 full blocks), so the 4th admission finds only 2 free and
+    # must LRU-evict the oldest chain rather than defer
+    prompts = [_prompt(rng, 9) for _ in range(4)]
+    for i, p in enumerate(prompts):
+        assert a.admit(i, p, n_rows=9) == 0
+        a.register_prefix(i, p)
+        a.release(i)
+        a.check_invariants()
+    assert a.stats["registry_evictions"] >= 1
+    assert a.stats["deferrals"] == 0
+    # the OLDEST chain went first: it no longer shares, the newest one does
+    assert a.lookup_prefix(prompts[0]) == (0, ())
+    assert a.lookup_prefix(prompts[-1])[0] == 8
+
+
+def test_admit_defers_when_pool_truly_exhausted():
+    a = _alloc(n_slots=4, n_blocks=4, block_size=4, s_max=32)
+    rng = np.random.default_rng(6)
+    assert a.admit(0, _prompt(rng, 8), n_rows=16) == 0  # all 4 blocks
+    assert a.admit(1, _prompt(rng, 4), n_rows=4) is None
+    assert a.stats["deferrals"] == 1
+    a.check_invariants()
+    a.release(0)
+    assert a.admit(1, _prompt(rng, 4), n_rows=4) == 0   # retry succeeds
+    a.check_invariants()
+
+
+def test_cow_divorces_shared_block_and_never_mutates_the_chain():
+    a = _alloc()
+    rng = np.random.default_rng(7)
+    p = _prompt(rng, 10)
+    a.admit(0, p, n_rows=12)
+    a.register_prefix(0, p)
+    a.admit(1, p, n_rows=12)
+    chain_before = list(a.tab[0, :3])
+    old, new = a.ensure_writable(1, 0)     # shared block -> divorce
+    assert old != new and a.stats["cow_copies"] == 1
+    assert a.tab[1, 0] == new
+    assert list(a.tab[0, :3]) == chain_before   # owner 0's chain untouched
+    assert a.ref[old] >= 1                      # still pinned by 0+registry
+    a.check_invariants()
+    # exclusively-owned block: no divorce
+    old2, new2 = a.ensure_writable(1, 2)
+    assert old2 == new2 and a.stats["cow_copies"] == 1
+
+
+def test_trim_releases_tail_blocks_only():
+    a = _alloc()
+    rng = np.random.default_rng(8)
+    a.admit(0, _prompt(rng, 6), n_rows=16)      # 4 blocks
+    head = a.tab[0, 0]
+    assert a.trim(0, n_rows=5) == 2             # keep ceil(5/4) = 2
+    assert a.tab[0, 0] == head
+    assert (a.tab[0, 2:] == a.nb).all()
+    a.check_invariants()
+    assert a.trim(99, n_rows=1) == 0            # unknown slot: no-op
+
+
+def test_reset_reclaims_everything():
+    a = _alloc()
+    rng = np.random.default_rng(9)
+    for i in range(3):
+        p = _prompt(rng, 8)
+        a.admit(i, p, n_rows=10)
+        a.register_prefix(i, p)
+    a.reset()
+    assert a.free_blocks == a.nb
+    assert (a.tab == a.nb).all()
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# property tests: random operation traces hold every invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.lists(st.integers(min_value=0, max_value=5), min_size=5,
+                max_size=60))
+def test_random_traces_hold_invariants(seed, ops):
+    """Random admit/release/trim/CoW/register traces on a small pool: after
+    EVERY operation the refcounts equal the owner+registry pins exactly, the
+    free list is duplicate-free and complements ref>0, the table mirrors
+    ownership, and the sentinel row stays intact. Duplicate prompts are
+    drawn from a tiny space so prefix sharing and LRU eviction fire often."""
+    rng = np.random.default_rng(seed)
+    a = _alloc(n_slots=4, n_blocks=10, block_size=4, s_max=32)
+    # tiny prompt space -> frequent registry hits
+    vocab = [_prompt(rng, int(n)) for n in (4, 5, 8, 9, 12)]
+    live = {}
+    for op in ops:
+        if op == 0 or not live:                          # admit
+            free_slots = [s for s in range(a.n_slots) if s not in live]
+            if not free_slots:
+                continue
+            slot = int(rng.choice(free_slots))
+            p = vocab[int(rng.integers(len(vocab)))]
+            n_rows = int(len(p) + rng.integers(0, 9))
+            if a.admit(slot, p, n_rows) is not None:
+                live[slot] = p
+        elif op == 1:                                    # release
+            slot = int(rng.choice(list(live)))
+            a.release(slot)
+            del live[slot]
+        elif op == 2:                                    # register
+            slot = int(rng.choice(list(live)))
+            a.register_prefix(slot, live[slot])
+        elif op == 3:                                    # trim
+            slot = int(rng.choice(list(live)))
+            a.trim(slot, int(rng.integers(1, 12)))
+        elif op == 4:                                    # CoW
+            slot = int(rng.choice(list(live)))
+            blocks = a._owned[slot]
+            if blocks:
+                try:
+                    a.ensure_writable(slot, int(rng.integers(len(blocks))))
+                except RuntimeError:
+                    pass                                 # pool exhausted: ok
+        else:                                            # full reclaim
+            a.reset()
+            live.clear()
+        a.check_invariants()
+    a.reset()
+    a.check_invariants()
+    assert a.free_blocks == a.nb                         # no leaks, ever
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=40),
+       st.integers(min_value=1, max_value=12))
+def test_admit_release_roundtrip_never_leaks(prompt_len, extra_rows):
+    a = _alloc(n_slots=2, n_blocks=32, block_size=4, s_max=64)
+    rng = np.random.default_rng(prompt_len * 41 + extra_rows)
+    p = _prompt(rng, prompt_len)
+    n_rows = prompt_len + extra_rows
+    assert a.admit(0, p, n_rows) == 0
+    assert a.nb - a.free_blocks == a.blocks_for_rows(n_rows)
+    a.check_invariants()
+    a.release(0)
+    assert a.free_blocks == a.nb
+    a.check_invariants()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=5, max_value=40))
+def test_sharer_never_allocates_shared_blocks_twice(prompt_len):
+    """After register + re-admit of the same prompt, total blocks consumed
+    = one private copy + shared chain, never two full copies."""
+    a = _alloc(n_slots=2, n_blocks=64, block_size=4, s_max=64)
+    rng = np.random.default_rng(prompt_len)
+    p = _prompt(rng, prompt_len)
+    n_rows = prompt_len + 4
+    a.admit(0, p, n_rows)
+    a.register_prefix(0, p)
+    used0 = a.nb - a.free_blocks
+    shared = a.admit(1, p, n_rows)
+    full_blocks = (prompt_len - 1) // a.bs
+    assert shared == full_blocks * a.bs
+    assert (a.nb - a.free_blocks) - used0 == \
+        a.blocks_for_rows(n_rows) - full_blocks
+    a.check_invariants()

@@ -1,0 +1,180 @@
+"""Paged + int8 KV cache through the serving engine (DESIGN.md §11).
+
+The tentpole contract: with ``kv_layout='paged'`` the engine holds KV in a
+flat block pool addressed through the host allocator's table, and in bf16 it
+is TOKEN-FOR-TOKEN identical to the dense slot cache on a staggered Poisson
+trace — for plain (K=1), fused-block (K=8), and speculative (K=4) decode.
+Paged bf16 attention sums exact fp zeros over masked rows, so there is no
+tolerance to hide behind. Int8 pools are tolerance territory (the bench
+gates teacher-forced top-1); here the int8 engine's own bitwise
+self-consistency across decode modes is asserted instead, plus prefix
+sharing, eviction reclaim, deferral under pool pressure, and config
+validation.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import compress as CMP
+from repro.models import model as MD
+from repro.serving import Engine, EngineConfig, poisson_trace
+
+ARCH = "qwen3-moe-30b-a3b"
+N_SLOTS, P, NEW = 4, 16, 8
+S_MAX = P + NEW + 8
+KV_BLOCK = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get(ARCH).reduced()
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    ncfg, nparams, _ = CMP.compress_model(
+        cfg, params, method="mergemoe",
+        merged_experts=cfg.moe.n_experts // 2, split=0, batches=calib)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, P + 1))).astype(np.int32)
+               for _ in range(8)]
+    arrivals = poisson_trace(len(prompts), rate=0.5, seed=1)
+    return cfg, params, ncfg, nparams, prompts, arrivals
+
+
+def _run(setup, draft=False, **ec_kw):
+    cfg, params, ncfg, nparams, prompts, arrivals = setup
+    kw = dict(draft_cfg=ncfg, draft_params=nparams) if draft else {}
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=N_SLOTS, s_max=S_MAX,
+                              prefill_buckets=(P,), **ec_kw),
+                 cfg=cfg, params=params, **kw)
+    for p, a in zip(prompts, arrivals):
+        eng.submit(p, max_new_tokens=NEW, arrival_time=float(a))
+    done = eng.run()
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+@pytest.mark.parametrize("mode", ["plain", "block", "spec"])
+def test_paged_bf16_matches_dense_bitwise(setup, mode):
+    """bf16 paged == dense, token for token, in every decode mode — and the
+    trace guard stays clean (no retraces, no implicit transfers)."""
+    ec = {"plain": dict(decode_block=1),
+          "block": dict(decode_block=8),
+          "spec": dict(spec_k=4)}[mode]
+    draft = mode == "spec"
+    ref, _ = _run(setup, draft=draft, **ec)
+    out, eng = _run(setup, draft=draft, kv_layout="paged",
+                    kv_block=KV_BLOCK, **ec)
+    assert out == ref
+    assert eng.counters["retraces"] == 0
+    assert eng.counters["implicit_transfers"] == 0
+    assert eng.kv_dtype_served == "bf16"
+
+
+def test_paged_int8_selfconsistent_across_decode_modes(setup):
+    """The int8 pool is one KV representation (decode and verify both
+    dequantize through quant.dequantize_kv), so the int8-paged engine must
+    agree with ITSELF bitwise across plain and fused-block decode — the
+    quantization error moves the tokens, never the cross-mode contract.
+    Quality vs bf16 is the bench's teacher-forced top-1 gate, not a test."""
+    a, ea = _run(setup, decode_block=1, kv_layout="paged",
+                 kv_block=KV_BLOCK, kv_dtype="int8")
+    b, eb = _run(setup, decode_block=8, kv_layout="paged",
+                 kv_block=KV_BLOCK, kv_dtype="int8")
+    assert a == b
+    assert ea.kv_dtype_served == "int8"
+    assert eb.counters["retraces"] == 0
+    # the served-config traffic model reflects the thinner KV stream
+    t8 = ea.modeled_decode_traffic()
+    tref = Engine(EngineConfig(arch=ARCH, n_slots=N_SLOTS, s_max=S_MAX,
+                               prefill_buckets=(P,)),
+                  cfg=setup[0], params=setup[1]).modeled_decode_traffic()
+    assert t8["kv_bytes_per_token"] < tref["kv_bytes_per_token"]
+
+
+def test_prefix_sharing_hits_and_outputs_identical(setup):
+    """Identical prompts admitted one after another adopt the first copy's
+    registered blocks (hits counted, rows shared) and decode identical
+    tokens — shared rows are read-identical by construction."""
+    cfg, params = setup[0], setup[1]
+    prompt = np.random.default_rng(9).integers(
+        1, cfg.vocab_size, size=P).astype(np.int32)
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=N_SLOTS, s_max=S_MAX,
+                              prefill_buckets=(P,), decode_block=8,
+                              kv_layout="paged", kv_block=KV_BLOCK),
+                 cfg=cfg, params=params)
+    for i in range(6):
+        eng.submit(prompt, max_new_tokens=NEW, arrival_time=float(i * 4))
+    done = eng.run()
+    outs = [r.out_tokens for r in done]
+    assert all(o == outs[0] for o in outs)
+    stats = eng.paging_stats
+    assert stats["prefix_hits"] >= 4
+    # full blocks strictly below the last prompt token, per hit
+    assert stats["prefix_rows_shared"] == \
+        stats["prefix_hits"] * ((P - 1) // KV_BLOCK) * KV_BLOCK
+
+
+def test_prefix_sharing_disabled_never_hits(setup):
+    cfg, params = setup[0], setup[1]
+    prompt = np.random.default_rng(10).integers(
+        1, cfg.vocab_size, size=P).astype(np.int32)
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=S_MAX,
+                              prefill_buckets=(P,), kv_layout="paged",
+                              kv_block=KV_BLOCK, prefix_sharing=False),
+                 cfg=cfg, params=params)
+    for i in range(3):
+        eng.submit(prompt, max_new_tokens=4, arrival_time=float(i * 6))
+    eng.run()
+    assert eng.paging_stats["prefix_hits"] == 0
+
+
+def test_eviction_returns_blocks_to_pool(setup):
+    """After every request finishes, the pool is fully reclaimed up to the
+    blocks the prefix registry deliberately pins."""
+    out, eng = _run(setup, decode_block=8, kv_layout="paged",
+                    kv_block=KV_BLOCK, prefix_sharing=False)
+    assert len(out) == len(setup[4])
+    assert eng.paging_stats["free_blocks"] == eng._alloc.nb
+    eng._alloc.check_invariants()
+
+
+def test_deferral_under_pool_pressure_preserves_outputs(setup):
+    """A pool too small for all slots at once forces admission deferrals;
+    every request must still finish with tokens bitwise equal to the dense
+    engine's (deferral delays admission, never corrupts it)."""
+    cfg, params, _, _, prompts, arrivals = setup
+    ref, _ = _run(setup, decode_block=8)
+    # enough blocks for ~2 full requests: ceil((P+NEW-1)/KV_BLOCK) = 3 each
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=N_SLOTS, s_max=S_MAX,
+                              prefill_buckets=(P,), decode_block=8,
+                              kv_layout="paged", kv_block=KV_BLOCK,
+                              kv_blocks=7, prefix_sharing=False),
+                 cfg=cfg, params=params)
+    for p, a in zip(prompts, arrivals):
+        eng.submit(p, max_new_tokens=NEW, arrival_time=float(a))
+    done = eng.run()
+    assert {r.uid: r.out_tokens for r in done} == ref
+    assert eng.paging_stats["deferrals"] > 0
+    assert eng.paging_stats["free_blocks"] == 7
+
+
+def test_paged_config_validation(setup):
+    cfg, params = setup[0], setup[1]
+    with pytest.raises(ValueError, match="kv_dtype"):
+        Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=32,
+                            prefill_buckets=(8,), kv_dtype="int8"),
+               cfg=cfg, params=params)          # int8 needs the paged pool
+    with pytest.raises(ValueError, match="kv_layout"):
+        Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=32,
+                            prefill_buckets=(8,), kv_layout="ring"),
+               cfg=cfg, params=params)
+    with pytest.raises(ValueError, match="multiple of"):
+        Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=30,
+                            prefill_buckets=(8,), kv_layout="paged",
+                            kv_block=16),
+               cfg=cfg, params=params)          # s_max % kv_block != 0

@@ -174,18 +174,21 @@ def test_submit_validation(setup):
 def test_submit_rejects_unservable_prompts_at_boundaries(setup):
     """An oversized prompt must fail AT SUBMISSION with a clear error, not
     be silently clamped into a bucket it cannot fit (regression: bucket_for
-    used to clamp to s_max unconditionally). Boundary sweep: the largest
-    servable length is s_max - max_new_tokens, exactly."""
+    used to clamp to s_max unconditionally). Boundary sweep: a request
+    consumes prompt + max_new - 1 KV rows (the final sampled token is never
+    fed back), so the largest servable length is s_max - max_new_tokens + 1
+    EXACTLY — the pre-fix check was off by one and rejected it."""
     cfg, params, _, _, _ = setup
     eng = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
                               prefill_buckets=(8, 16)), cfg=cfg, params=params)
-    # exactly fits: prompt + max_new == s_max
-    ok = eng.submit(np.ones(28, np.int32), max_new_tokens=4)
+    # exactly fits: prompt + max_new == s_max + 1 consumes precisely s_max
+    # KV rows — this submission RAISED before the off-by-one fix
+    ok = eng.submit(np.ones(29, np.int32), max_new_tokens=4)
     eng.run()
     assert len(ok.out_tokens) == 4
-    # one past the slot budget
-    with pytest.raises(ValueError, match="exceeds slot capacity"):
-        eng.submit(np.ones(29, np.int32), max_new_tokens=4)
+    # one past the slot budget: would need s_max + 1 rows
+    with pytest.raises(ValueError, match="slot capacity"):
+        eng.submit(np.ones(30, np.int32), max_new_tokens=4)
     # longer than the slot itself: no bucket can ever fit it — the message
     # must say so (names the bucket ceiling and s_max)
     with pytest.raises(ValueError, match="cannot fit any prefill bucket"):
@@ -366,6 +369,36 @@ def test_strict_trace_guard_serves_clean():
     assert len(done) == 2
     assert eng.counters["retraces"] == 0
     assert eng.counters["implicit_transfers"] == 0
+
+
+def test_admit_pad_shapes_single_source_of_truth(setup):
+    """Satellite hardening: every prompt pad length admission may compile
+    comes from ONE table (steps.admit_pad_shapes) — bucket_for only ever
+    returns members of it, the largest member is exactly s_max, and the
+    trace-guard budget is sized from the same table, so scheduler/guard
+    shape drift is structurally impossible rather than merely tested."""
+    from repro.launch import steps as ST
+
+    shapes = ST.admit_pad_shapes((8, 16), 44)
+    # declared buckets + multiples of the biggest one, clamped at s_max
+    assert shapes == (8, 16, 32, 44)
+    assert shapes[-1] == 44
+    cfg, params = setup[0], setup[1]
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=44,
+                              prefill_buckets=(8, 16)),
+                 cfg=cfg, params=params)
+    assert all(eng.bucket_for(n) in shapes for n in range(1, 45))
+    # the guard's admission budget counts the SAME table: |shapes| x the
+    # power-of-two admission group sizes (1, 2 for n_slots=2)
+    assert ST.admit_trace_budget((8, 16), 44, 2) == len(shapes) * 2
+    # declared buckets beyond s_max are clamped into the table, never served
+    assert ST.admit_pad_shapes((8, 64), 32) == (8, 32)
+    clamped = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
+                                  prefill_buckets=(8, 64)),
+                     cfg=cfg, params=params)
+    assert clamped.bucket_for(20) == 32
+    with pytest.raises(ValueError, match="no prefill bucket fits"):
+        clamped.bucket_for(33)
 
 
 def test_poisson_trace_deterministic():

@@ -307,6 +307,58 @@ def test_spec_config_validation(setup):
                cfg=cfg, params=params, draft_params=nparams)
 
 
+def test_spec_submit_requires_verify_headroom(setup):
+    """Speculative verify writes up to spec_k lookahead KV rows past the
+    committed stream, so a spec engine must reject
+    prompt + max_new + spec_k > s_max + 1 at SUBMISSION (regression: the
+    pre-fix engine accepted these, and the last verify rounds of a
+    capacity-filling request scattered past s_max — clipped into the last
+    row dense, dropped at the sentinel paged — silently corrupting the KV
+    its own acceptance then read). The same request is fine without spec."""
+    cfg, params, ncfg, nparams, _, _, _ = setup
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
+                              prefill_buckets=(16,), spec_k=3),
+                 cfg=cfg, params=params, draft_cfg=ncfg, draft_params=nparams)
+    bound = 32 + 1 - 3 - 16              # largest spec-servable max_new
+    eng.submit(np.ones(16, np.int32), max_new_tokens=bound)
+    with pytest.raises(ValueError, match="lookahead headroom"):
+        eng.submit(np.ones(16, np.int32), max_new_tokens=bound + 1)
+    done = eng.run()                     # the in-bounds request serves fully
+    assert len(done) == 1 and len(done[0].out_tokens) == bound
+    # a NON-spec engine accepts the longer request: the headroom rule is
+    # gated on spec mode, not folded into the base capacity bound
+    plain = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
+                                prefill_buckets=(16,)),
+                   cfg=cfg, params=params)
+    plain.submit(np.ones(16, np.int32), max_new_tokens=bound + 1)
+
+
+def test_spec_exact_at_capacity_boundary(setup):
+    """Adversarial boundary: a spec request sized EXACTLY to the headroom
+    bound drives verify rounds whose lookahead writes reach the last
+    reserved rows (pos0 + K lands at s_max). Committed tokens must still be
+    bitwise the plain full-model engine's — the reserved headroom absorbs
+    every lookahead write, so nothing the acceptance reads was clipped or
+    dropped. Self-draft maximizes pressure: all-accept rounds advance K at
+    a time right up to the end of the slot."""
+    cfg, params, ncfg, nparams, _, _, _ = setup
+    bound = 32 + 1 - 3 - 16
+    prompt = np.arange(1, 17, dtype=np.int32)
+    ref_eng = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
+                                  prefill_buckets=(16,)),
+                     cfg=cfg, params=params)
+    ref = ref_eng.submit(prompt, max_new_tokens=bound)
+    ref_eng.run()
+    for draft in ((cfg, params), (ncfg, nparams)):
+        eng = Engine(EngineConfig(arch=ARCH, n_slots=1, s_max=32,
+                                  prefill_buckets=(16,), spec_k=3),
+                     cfg=cfg, params=params, draft_cfg=draft[0],
+                     draft_params=draft[1])
+        req = eng.submit(prompt, max_new_tokens=bound)
+        eng.run()
+        assert req.out_tokens == ref.out_tokens
+
+
 # --------------------------------------------------------------------------
 # seeded sampling through the engine (satellite: bench_decode seed fix)
 # --------------------------------------------------------------------------
