@@ -1027,8 +1027,10 @@ class Engine:
                                  pos0[:B] + lengths[:B])
         self.counters["host_syncs"] += 1
         if self._alloc is not None and self.ec.prefix_sharing:
-            # AFTER the device call: the rows now exist, so later (or
-            # later-group same-cycle) admissions may adopt them
+            # AFTER the device call: the rows now exist. Sharing begins at
+            # the NEXT admission cycle — every cycle's allocator
+            # reservations (lookup_prefix) run in _admit before any group's
+            # device call, so same-cycle duplicates never adopt each other
             for req, slot, shared in group:
                 self._alloc.register_prefix(slot, req.prompt)
         for i, (req, slot, shared) in enumerate(group):

@@ -139,15 +139,23 @@ class PagedAllocator:
         if slot in self._owned:
             raise RuntimeError(f"slot {slot} already owns blocks")
         shared_rows, shared = self.lookup_prefix(prompt)
+        # Take the adoption refcounts BEFORE evicting: the eviction loop may
+        # pop the very registry entries pinning this chain, and an unpinned
+        # chain would fall into the free list and be handed back out by the
+        # need_new loop below — duplicate block ids in the slot table.
+        for b in shared:
+            self.ref[b] += 1
         need_new = self.blocks_for_rows(n_rows) - len(shared)
         while len(self._free) < need_new and self._evict_registry_one():
             pass
         if len(self._free) < need_new:
+            for b in shared:
+                self.ref[b] -= 1
+                if self.ref[b] == 0:
+                    self._free.append(b)
             self.stats["deferrals"] += 1
             return None
         blocks = list(shared)
-        for b in shared:
-            self.ref[b] += 1
         for _ in range(need_new):
             b = self._free.pop()
             self.ref[b] += 1
@@ -238,6 +246,8 @@ class PagedAllocator:
             assert (self.ref[b] == 0) == (b in free_set), (
                 f"block {b}: ref={self.ref[b]} free={b in free_set}")
         for slot, blocks in self._owned.items():
+            assert len(set(blocks)) == len(blocks), (
+                f"slot {slot} owns a block twice: {blocks}")
             assert list(self.tab[slot, :len(blocks)]) == list(blocks)
             assert (self.tab[slot, len(blocks):] == self.nb).all()
         assert (self.tab[self.n_slots] == self.nb).all(), "sentinel row"

@@ -131,6 +131,38 @@ def test_admit_defers_when_pool_truly_exhausted():
     a.check_invariants()
 
 
+def test_eviction_under_pressure_never_frees_the_adopted_chain():
+    """Regression: admit must take the adoption refcounts on the matched
+    chain BEFORE the eviction loop. Pre-fix, draining the registry under
+    pool pressure evicted the very entries pinning the adopted chain,
+    dropped its blocks into the free list, and the need_new loop handed
+    them back out — slot table [0, 1, 1, 0, ...] with duplicate block
+    ids, i.e. decode overwriting its own shared prompt KV. The uniquely
+    correct outcome here is a deferral: the pool genuinely cannot hold
+    need_new blocks DISTINCT from the pinned chain."""
+    a = _alloc(n_slots=4, n_blocks=5, block_size=4, s_max=32)
+    rng = np.random.default_rng(11)
+    p = _prompt(rng, 9)
+    a.admit(0, p, n_rows=9)                 # blocks 0,1,2
+    a.register_prefix(0, p)                 # pins chains (0,) and (0,1)
+    a.release(0)                            # block 2 free; 0,1 registry-only
+    a.admit(2, _prompt(rng, 4), n_rows=4)   # takes block 2 -> free = {3,4}
+    # same prompt, 5-block budget: chain (0,1) matches, need_new=3 > 2 free,
+    # so the eviction loop drains the whole registry including the matched
+    # chain's own entries
+    assert a.admit(1, p, n_rows=20) is None
+    assert a.stats["deferrals"] == 1
+    assert a.stats["registry_evictions"] == 2
+    a.check_invariants()
+    # deferral unwound the adoption pins: blocks 0,1 are free again, and
+    # once slot 2 releases, the retry succeeds with 5 DISTINCT blocks
+    # (registry was drained, so nothing shares)
+    a.release(2)
+    assert a.admit(1, p, n_rows=20) == 0
+    assert len(set(a._owned[1])) == 5
+    a.check_invariants()
+
+
 def test_cow_divorces_shared_block_and_never_mutates_the_chain():
     a = _alloc()
     rng = np.random.default_rng(7)
