@@ -220,6 +220,13 @@ def run_trace(cfg, params, *, label, decode_block, dispatch, batch_admission,
         # transfer crept into the steady state (DESIGN.md §9)
         "retraces": int(eng.counters["retraces"]),
         "implicit_transfers": int(eng.counters["implicit_transfers"]),
+        # resilience counters (DESIGN.md §12): a HAPPY-PATH row must show
+        # zero sheds, zero quarantines, zero transient retries — nonzero
+        # here means the scheduler shed live work or the sentinel fired
+        # without an injected fault
+        "shed": int(eng.counters["shed"]),
+        "quarantined": int(eng.counters["quarantined"]),
+        "transient_retries": int(eng.counters["transient_retries"]),
         # KV layout + modeled KV stream of the served config (DESIGN.md §11)
         "kv_layout": eng.ec.kv_layout,
         "kv_dtype": eng.kv_dtype_served,
@@ -487,6 +494,9 @@ def run_spec_trace(cfg, params, draft_cfg, draft_params, *, arch, label, k,
             draft=draft_tag),
         "retraces": int(eng.counters["retraces"]),
         "implicit_transfers": int(eng.counters["implicit_transfers"]),
+        "shed": int(eng.counters["shed"]),
+        "quarantined": int(eng.counters["quarantined"]),
+        "transient_retries": int(eng.counters["transient_retries"]),
     }
     if steady is not None:
         rec["steady_spec_tok_per_s"] = round(steady["tok_per_s"], 1)
@@ -499,6 +509,218 @@ def run_spec_trace(cfg, params, draft_cfg, draft_params, *, arch, label, k,
           f"{rec['host_dispatches_per_token']:.3f} disp/tok)")
     tokens = [list(r.out_tokens) for r in sorted(done, key=lambda r: r.uid)]
     return rec, tokens
+
+
+# --- fault injection + resilience (DESIGN.md §12) --------------------------
+# Deterministic degraded-mode trace: a seeded FaultPlan injects ONE NaN
+# poisoning (slot 0, first fused block), ONE transient device failure
+# burst (2 consecutive fails at step 8, inside the default retry budget),
+# and ONE allocator exhaustion (step 8, deferring the FIFO head, whose TTL
+# then expires -> pool-pressure shed). The geometry is pinned — not taken
+# from argparse — so the fault arithmetic below is exact on every run:
+# observed counters must equal the injected counts, healthy slots must be
+# bitwise identical to the fault-free run, and the same seed must replay
+# the identical fault trace (digest + tokens).
+#
+# The shed is attributable to the INJECTED exhaustion, not to plain
+# overload: uid 3 finishes early (FAULT_SHORT_NEW tokens), so a slot is
+# free at step 8 and the fault-free control admits uid 4 well inside its
+# deadline (8 <= 12) and serves all eight requests — only the degraded
+# run, whose step-8 admission is deferred by the injected empty pool,
+# sees uid 4 expire by the next boundary (16 > 12).
+FAULT_SEED = 0
+FAULT_N_SLOTS = 4
+FAULT_K = 8
+FAULT_S_MAX = 32
+FAULT_PROMPT_LEN = 8
+FAULT_MAX_NEW = 12
+FAULT_SHORT_UID = 3    # finishes in the first block: frees the slot the
+FAULT_SHORT_NEW = 2    # clean run admits uid 4 into at step 8
+FAULT_ARRIVALS = (0.0, 0.0, 0.0, 0.0, 2.0, 2.0, 4.0, 6.0)
+FAULT_TTL_UID = 4      # arrival 2 + TTL 10 = deadline 12: alive when the
+FAULT_TTL = 10.0       # injected exhaustion defers it (step 8), expired
+                       # by the next admission boundary (16)
+
+
+def fault_plan():
+    from repro.serving.faults import FaultPlan, FaultSpec
+    return FaultPlan(seed=FAULT_SEED, specs=(
+        FaultSpec(site="decode", kind="nan_logits", steps=(2,), slots=(0,)),
+        FaultSpec(site="decode", kind="transient", steps=(8,), fails=2),
+        FaultSpec(site="alloc", kind="exhaust", steps=(8,)),
+    ))
+
+
+def _fault_engine(cfg, params, plan):
+    """Fused engine for the degraded trace. Warmup compiles every shape the
+    trace needs with NO plan attached, then the step clock rewinds to 0 and
+    the plan arms — the fault arithmetic is in absolute engine steps, and
+    the trace-guard counters stay a meaningful zero-gate."""
+    eng = Engine(EngineConfig(n_slots=FAULT_N_SLOTS, s_max=FAULT_S_MAX,
+                              prefill_buckets=(FAULT_PROMPT_LEN,),
+                              decode_block=FAULT_K, dispatch="gather",
+                              batch_admission=True),
+                 cfg=cfg, params=params)
+    for burst in (FAULT_N_SLOTS, 3, 2, 1):
+        for _ in range(burst):
+            eng.submit(np.zeros(FAULT_PROMPT_LEN, np.int32),
+                       max_new_tokens=1)
+        eng.run()
+    for c in eng.counters:
+        eng.counters[c] = 0
+    eng._step_count = 0
+    eng._faults = plan
+    return eng
+
+
+def _run_fault_trace(cfg, params, plan):
+    """Serve the pinned degraded trace; returns (engine, done-by-uid)."""
+    eng = _fault_engine(cfg, params, plan)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=FAULT_PROMPT_LEN,
+                            dtype=np.int32) for _ in FAULT_ARRIVALS]
+    for i, (p, a) in enumerate(zip(prompts, FAULT_ARRIVALS)):
+        eng.submit(p,
+                   max_new_tokens=(FAULT_SHORT_NEW if i == FAULT_SHORT_UID
+                                   else FAULT_MAX_NEW),
+                   arrival_time=a, uid=i,
+                   ttl=FAULT_TTL if i == FAULT_TTL_UID else None)
+    done = {r.uid: r for r in eng.run()}
+    return eng, done
+
+
+def restore_equals_uninterrupted(cfg, params, *, draft=None,
+                                 engine_kw=None) -> bool:
+    """Mid-trace snapshot/restore parity (DESIGN.md §12): interrupt a small
+    trace after one fused call, restore into a fresh engine, and require
+    the union of pre-crash and post-restore outputs to equal the
+    uninterrupted run token-for-token (statuses included)."""
+
+    def mk():
+        return Engine(EngineConfig(n_slots=2, s_max=FAULT_S_MAX,
+                                   prefill_buckets=(FAULT_PROMPT_LEN,),
+                                   decode_block=FAULT_K,
+                                   **(engine_kw or {})),
+                      cfg=cfg, params=params,
+                      draft_cfg=draft[0] if draft else None,
+                      draft_params=draft[1] if draft else None)
+
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, size=FAULT_PROMPT_LEN,
+                            dtype=np.int32) for _ in range(3)]
+
+    def submit(eng):
+        for i, (p, a) in enumerate(zip(prompts, (0.0, 0.0, 5.0))):
+            eng.submit(p, max_new_tokens=10, arrival_time=a, uid=i)
+
+    def key(done):
+        return {r.uid: (list(r.out_tokens), r.status) for r in done}
+
+    ref = mk()
+    submit(ref)
+    want = key(ref.run())
+    eng = mk()
+    submit(eng)
+    pre = eng.step_spec() if eng.spec else eng.step_block()
+    snap = eng.snapshot()
+    restored = Engine.restore(snap, cfg=cfg, params=params,
+                              draft_cfg=draft[0] if draft else None,
+                              draft_params=draft[1] if draft else None)
+    return key(list(pre) + restored.run()) == want
+
+
+def fault_section(cfg, params, ncfg, nparams) -> dict:
+    """The BENCH_serve.json ``faults`` section: degraded-mode accounting
+    (observed counters == injected counts, exactly), healthy-slot bitwise
+    parity vs the fault-free run, same-seed replay determinism, and
+    snapshot/restore parity in dense/paged/spec modes."""
+    from collections import Counter
+
+    plan = fault_plan()
+    eng, done = _run_fault_trace(cfg, params, plan)
+    clean_eng, clean = _run_fault_trace(cfg, params, None)
+    replay_plan = fault_plan()
+    _, replay = _run_fault_trace(cfg, params, replay_plan)
+
+    fired = plan.counts()
+    injected_fails = sum(ev.get("fails", 0) for ev in plan.trace
+                         if ev["kind"] == "transient")
+    observed = {"quarantined": int(eng.counters["quarantined"]),
+                "transient_retries": int(eng.counters["transient_retries"]),
+                "shed": int(eng.counters["shed"])}
+    statuses = Counter(r.status for r in done.values())
+    shed_reasons = Counter(r.shed_reason for r in done.values()
+                           if r.shed_reason)
+    healthy = [u for u, r in done.items() if r.status == "ok"]
+    quarantined_uids = [u for u, r in done.items()
+                        if r.status == "failed_numeric"]
+    sec = {
+        "seed": FAULT_SEED,
+        "requests": len(FAULT_ARRIVALS),
+        "injected": dict(fired, transient_fails=injected_fails),
+        "observed": observed,
+        "statuses": dict(statuses),
+        "shed_reasons": dict(shed_reasons),
+        "quarantined_uids": quarantined_uids,
+        # quarantine blast radius: every surviving request's stream is
+        # bitwise what the fault-free engine served it
+        "healthy_parity_bitwise": bool(all(
+            done[u].out_tokens == clean[u].out_tokens for u in healthy)),
+        # the poisoned slot's stream truncates AT the fault: a bitwise
+        # prefix of its fault-free stream, never divergent garbage
+        "quarantined_prefix_of_clean": bool(all(
+            done[u].out_tokens
+            == clean[u].out_tokens[:len(done[u].out_tokens)]
+            and len(done[u].out_tokens) < len(clean[u].out_tokens)
+            for u in quarantined_uids)),
+        # clean-engine control: no injected faults -> no degraded counters
+        "clean_run_counters_zero": bool(
+            clean_eng.counters["shed"] == 0
+            and clean_eng.counters["quarantined"] == 0
+            and clean_eng.counters["transient_retries"] == 0),
+        # same seed -> same fault trace (digest) AND same served tokens
+        "fault_trace_digest": plan.trace_digest(),
+        "replay_digest_equal": bool(
+            replay_plan.trace_digest() == plan.trace_digest()),
+        "replay_tokens_bitwise": bool(all(
+            replay[u].out_tokens == done[u].out_tokens
+            and replay[u].status == done[u].status for u in done)),
+        # the degraded engine keeps the hot-loop contract: injected faults
+        # must not smuggle retraces or implicit transfers into the loop
+        "retraces": int(eng.counters["retraces"]),
+        "implicit_transfers": int(eng.counters["implicit_transfers"]),
+        "restore": {
+            "dense": restore_equals_uninterrupted(cfg, params),
+            "paged": restore_equals_uninterrupted(
+                cfg, params, engine_kw=dict(kv_layout="paged",
+                                            kv_block=PAGED_KV_BLOCK)),
+            "spec": restore_equals_uninterrupted(
+                cfg, params, draft=(ncfg, nparams),
+                engine_kw=dict(spec_k=4)),
+        },
+    }
+    sec["accounting_exact"] = bool(
+        observed["quarantined"] == fired.get("nan_logits", 0)
+        and observed["shed"] == fired.get("exhaust", 0)
+        and observed["transient_retries"] == injected_fails
+        and statuses.get("ok", 0) == len(FAULT_ARRIVALS) - 2
+        and statuses.get("shed", 0) == 1
+        and statuses.get("failed_numeric", 0) == 1
+        and shed_reasons.get("pool_pressure", 0) == 1)
+    sec["ok"] = bool(
+        sec["accounting_exact"]
+        and sec["healthy_parity_bitwise"]
+        and sec["quarantined_prefix_of_clean"]
+        and sec["clean_run_counters_zero"]
+        and sec["replay_digest_equal"]
+        and sec["replay_tokens_bitwise"]
+        and sec["retraces"] == 0 and sec["implicit_transfers"] == 0
+        and all(sec["restore"].values()))
+    print(f"[{'faults/degraded':>22}] injected {sec['injected']} -> "
+          f"observed {sec['observed']}; statuses {sec['statuses']}; "
+          f"healthy parity={sec['healthy_parity_bitwise']} "
+          f"replay={sec['replay_digest_equal']} restore={sec['restore']}")
+    return sec
 
 
 def main():
@@ -763,6 +985,9 @@ def main():
         paged["parity_bf16_bitwise"]
         and share["parity_duplicates_bitwise"]
         and kv_top1 >= KV_INT8_TOLERANCE)
+
+    # --- fault injection + resilience (DESIGN.md §12) -----------------------
+    faults = fault_section(cfg, params, ncfg, nparams)
     summary = {
         "arch": args.arch,
         "n_slots": args.n_slots,
@@ -774,6 +999,7 @@ def main():
         "int8": int8,
         "spec": spec,
         "paged": paged,
+        "faults": faults,
         "parity": parity,
         "compression_ratio": round(info["compression_ratio"], 3),
         "compression_ratio_int8": round(qinfo["compression_ratio"], 3),
@@ -823,6 +1049,11 @@ def main():
           f"{share['parity_duplicates_bitwise']}); full-scale KV stream "
           f"{paged['modeled_full_scale_kv']['kv_stream_reduction']}x below "
           f"dense bf16 (gate {KV_STREAM_GATE}x) ==")
+    print(f"== faults: injected {faults['injected']} -> observed "
+          f"{faults['observed']} (exact={faults['accounting_exact']}); "
+          f"healthy-slot parity={faults['healthy_parity_bitwise']}; "
+          f"same-seed replay={faults['replay_digest_equal']}; restore "
+          f"parity {faults['restore']} ==")
     print(f"== parity {parity} ==")
     OUT_PATH.write_text(json.dumps(summary, indent=1))
     print(f"wrote {OUT_PATH}")
@@ -875,6 +1106,21 @@ def main():
             f"serve_bench paged-KV stream gate FAILED: full-scale reduction "
             f"{paged['modeled_full_scale_kv']['kv_stream_reduction']}x "
             f"< {KV_STREAM_GATE}x vs dense bf16")
+    happy_degraded = [
+        (label, c, rows_rec.get(c))
+        for label, rows_rec in (("full/before", rows["full"]["before"]),
+                                ("full/after", rows["full"]["after"]))
+        for c in ("shed", "quarantined", "transient_retries")
+        if rows_rec.get(c)]
+    if happy_degraded:
+        raise SystemExit(
+            f"serve_bench happy-path resilience counters FAILED (must be "
+            f"zero without injected faults): {happy_degraded}")
+    if not faults["ok"]:
+        raise SystemExit(
+            f"serve_bench fault-injection gate FAILED: "
+            + json.dumps({k: v for k, v in faults.items()
+                          if k != 'fault_trace_digest'}, indent=1))
 
 
 if __name__ == "__main__":

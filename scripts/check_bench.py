@@ -24,7 +24,16 @@ Asserts, on a BENCH_serve.json produced by ``benchmarks/serve_bench.py``:
   tolerance, and the full-scale modeled decode KV stream clears the
   reduction gate vs dense bf16;
 * the trace-guard counters are zero on every post-warmup row — no decode
-  retraces, no implicit host transfers (DESIGN.md §9).
+  retraces, no implicit host transfers (DESIGN.md §9);
+* the resilience counters are zero on every HAPPY-PATH row — no sheds, no
+  numeric quarantines, no transient retries without an injected fault —
+  while the ``faults`` section's degraded-mode row records the injected
+  counts EXACTLY (observed quarantines == injected NaN poisonings, observed
+  retries == injected transient failures, observed sheds == injected pool
+  exhaustions), healthy slots stay bitwise identical to the fault-free run,
+  the same fault seed replays the identical fault trace, and mid-trace
+  snapshot/restore equals the uninterrupted run token-for-token in dense,
+  paged, and speculative modes (DESIGN.md §12).
 
 Exit code 0 when every gate passes; 1 with one line per failure otherwise.
 """
@@ -140,6 +149,50 @@ def check(d: dict) -> List[str]:
             if v:
                 errs.append(f"{label}: counters[{c!r}] == {v}, expected 0 "
                             f"(steady-state purity regression)")
+        for c in ("shed", "quarantined", "transient_retries"):
+            v = rec.get(c, 0)
+            if v:
+                errs.append(f"{label}: counters[{c!r}] == {v}, expected 0 "
+                            f"(happy-path row shed/quarantined/retried "
+                            f"without an injected fault, DESIGN.md §12)")
+
+    ft = d.get("faults")
+    if not isinstance(ft, dict) or "observed" not in ft:
+        errs.append("faults section missing (no degraded-mode "
+                    "fault-injection row, DESIGN.md §12)")
+        ft = {}
+    if ft:
+        inj, obs = ft.get("injected", {}), ft.get("observed", {})
+        for got, want in (("quarantined", "nan_logits"),
+                          ("shed", "exhaust"),
+                          ("transient_retries", "transient_fails")):
+            if obs.get(got) != inj.get(want):
+                errs.append(
+                    f"faults: observed[{got!r}] == {obs.get(got)!r} but "
+                    f"injected[{want!r}] == {inj.get(want)!r} — degraded-"
+                    f"mode accounting must record injected faults EXACTLY")
+        if ft.get("accounting_exact") is not True:
+            errs.append(f"faults.accounting_exact is "
+                        f"{ft.get('accounting_exact')!r}, not True "
+                        f"(statuses={ft.get('statuses')}, "
+                        f"shed_reasons={ft.get('shed_reasons')})")
+        for key in ("healthy_parity_bitwise", "quarantined_prefix_of_clean",
+                    "clean_run_counters_zero", "replay_digest_equal",
+                    "replay_tokens_bitwise"):
+            if ft.get(key) is not True:
+                errs.append(f"faults.{key} is {ft.get(key)!r}, not True")
+        for c in ("retraces", "implicit_transfers"):
+            if ft.get(c, 0):
+                errs.append(f"faults: counters[{c!r}] == {ft.get(c)} under "
+                            f"injected faults, expected 0 (fault handling "
+                            f"must not break the hot-loop contract)")
+        restore = ft.get("restore", {})
+        for mode in ("dense", "paged", "spec"):
+            if restore.get(mode) is not True:
+                errs.append(
+                    f"faults.restore[{mode!r}] is {restore.get(mode)!r}, "
+                    f"not True (mid-trace snapshot/restore must finish "
+                    f"token-for-token identical to the uninterrupted run)")
     return errs
 
 
@@ -178,6 +231,14 @@ def main(argv=None) -> int:
           pg["prefix_sharing"]["hit_rate"])
     print("trace-guard counters OK: 0 retraces / 0 implicit transfers "
           "across", len(list(_records(d))), "rows")
+    ft = d["faults"]
+    print("resilience counters OK: 0 sheds / quarantines / retries on "
+          "every happy-path row")
+    print("fault-injection OK: injected", ft["injected"], "-> observed",
+          ft["observed"], "exactly; healthy slots bitwise; same-seed "
+          "replay digest", ft["fault_trace_digest"][:16])
+    print("snapshot/restore OK:", ft["restore"],
+          "(token-for-token vs uninterrupted)")
     return 0
 
 

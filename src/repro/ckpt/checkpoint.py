@@ -64,6 +64,9 @@ def save(directory, step: int, tree, extras: Optional[Dict] = None,
         "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
         "leaves": [],
         "extras": extras or {},
+        # content identity recorded at save time; load() recomputes it over
+        # the restored tree and refuses corrupted artifacts (DESIGN.md §12)
+        "tree_digest": tree_digest(tree),
     }
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
@@ -101,9 +104,16 @@ def latest_step(directory) -> Optional[int]:
 
 
 def load(directory, step: Optional[int] = None, shardings=None,
-         ) -> Tuple[Any, Dict]:
+         verify: bool = True) -> Tuple[Any, Dict]:
     """Restore (tree, extras). ``shardings``: optional pytree of NamedSharding
-    (same structure) — enables elastic restore onto a NEW mesh."""
+    (same structure) — enables elastic restore onto a NEW mesh.
+
+    ``verify=True`` recomputes :func:`tree_digest` over the restored tree
+    and raises :class:`repro.core.errors.ArtifactCorruptError` when it does
+    not match the digest recorded in ``meta.json`` at save time (bit-flipped
+    leaf files, truncated writes that still committed, tampering).
+    Checkpoints written before digests existed skip the check. Pass
+    ``verify=False`` to load a corrupted artifact for forensics."""
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -129,6 +139,16 @@ def load(directory, step: Optional[int] = None, shardings=None,
             leaves.append(jax.numpy.asarray(arr) if not hasattr(arr, "devices")
                           else arr)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    want = meta.get("tree_digest")
+    if verify and want is not None:
+        got = tree_digest(tree)
+        if got != want:
+            from repro.core.errors import ArtifactCorruptError
+            raise ArtifactCorruptError(
+                f"checkpoint {d} failed digest verification: meta.json "
+                f"records {want[:16]}… but the restored tree hashes to "
+                f"{got[:16]}… — the artifact bytes were corrupted after "
+                f"save. Pass verify=False to load anyway (forensics only).")
     return tree, meta.get("extras", {})
 
 
@@ -235,7 +255,8 @@ def save_compressed(directory, cfg, params, plan=None, report=None,
                 extras=extras, keep=keep)
 
 
-def load_compressed(directory, step: Optional[int] = None):
+def load_compressed(directory, step: Optional[int] = None,
+                    verify: bool = True):
     """Restore (cfg, params, artifact) from a :func:`save_compressed`
     directory. ``artifact`` is the extras dict ({"config", "plan",
     "report"}); params come back padded/stacked, ready for the forward.
@@ -245,7 +266,7 @@ def load_compressed(directory, step: Optional[int] = None):
     shardings built for the padded/stacked model tree — re-shard the
     returned params with ``jax.device_put`` instead."""
     from repro.models.config import config_from_dict
-    tree, extras = load(directory, step)
+    tree, extras = load(directory, step, verify=verify)
     art = extras.get("compressed")
     if art is None:
         raise ValueError(

@@ -137,13 +137,21 @@ def admit_trace_budget(buckets, s_max: int, n_slots: int) -> int:
 
 
 def make_slot_decode(cfg: ModelConfig) -> Callable:
-    """slot_decode(params, cache, token [B], active [B]) ->
-    (logits [B, V], greedy [B] int32, cache). The greedy argmax is computed
-    on-device so a temperature-0 engine never transfers the logits."""
-    def slot_decode(params, cache, token, active):
+    """slot_decode(params, cache, token [B], active [B], poison [B] bool) ->
+    (logits [B, V], aux [B, 2] int32, cache) with ``aux[b] = (greedy,
+    finite)``. The greedy argmax AND the numeric-health flag (all-logits-
+    finite per slot, DESIGN.md §12) are computed on-device and packed into
+    one array, so a temperature-0 engine still does exactly one readback
+    per step. ``poison`` is the fault-injection mask (serving.faults):
+    True rows get their logits NaN-poisoned AFTER the forward — an
+    all-False mask is a bitwise no-op (``where`` selects the untouched
+    logits), so fault-free traces are unchanged."""
+    def slot_decode(params, cache, token, active, poison):
         logits, cache = MD.decode_step_slots(cfg, params, cache, token, active)
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return logits, greedy, cache
+        finite = jnp.all(jnp.isfinite(logits), axis=-1).astype(jnp.int32)
+        return logits, jnp.stack([greedy, finite], axis=-1), cache
     return slot_decode
 
 
@@ -233,10 +241,15 @@ def make_slot_decode_multi(cfg: ModelConfig, k_steps: int,
     decode (DESIGN.md §7).
 
     slot_decode_multi(params, cache, token [B], active [B], remaining [B],
-    eos [B], keys [B, 2]) -> (block [K, B, 2] int32, active [B] bool,
-    cache), where ``block[s, b] = (token, emitted)`` — tokens and their
-    emitted flags are PACKED into one array so the engine's per-block
-    device->host readback is a single transfer.
+    eos [B], keys [B, 2], poison [B] bool) -> (block [K, B, 3] int32,
+    active [B] bool, cache), where ``block[s, b] = (token, emitted,
+    finite)`` — tokens, their emitted flags, and the numeric-health
+    sentinel lane (all-logits-finite per step and slot, DESIGN.md §12) are
+    PACKED into one array so the engine's per-block device->host readback
+    is a single transfer; the sentinel costs ZERO additional host syncs.
+    ``poison`` is the fault-injection mask (``serving.faults``): True rows
+    get their logits NaN-poisoned after each scanned forward. An all-False
+    mask is a bitwise no-op, so fault-free decode is unchanged.
 
     ``lax.scan`` runs ``k_steps`` decode steps inside ONE jitted call:
     sampling (:func:`sample_tokens` — greedy argmax, or Gumbel-max at
@@ -250,10 +263,13 @@ def make_slot_decode_multi(cfg: ModelConfig, k_steps: int,
     entirely (``lax.cond``), so an early-finishing block costs control
     flow, not FLOPs. Host syncs drop from one per token to one per K
     tokens."""
-    def slot_decode_multi(params, cache, token, active, remaining, eos, keys):
+    def slot_decode_multi(params, cache, token, active, remaining, eos, keys,
+                          poison):
         def step(carry):
             cache, tok, act, rem = carry
             logits, cache = MD.decode_step_slots(cfg, params, cache, tok, act)
+            logits = jnp.where(poison[:, None], jnp.nan, logits)
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
             # cache["pos"] already advanced for active slots = the position
             # the sampled token will occupy (frozen rows sample garbage
             # that is never emitted)
@@ -263,19 +279,23 @@ def make_slot_decode_multi(cfg: ModelConfig, k_steps: int,
             done = (nxt == eos) | (rem <= 0)
             act = act & ~done
             tok = jnp.where(emitted, nxt, tok)
-            return (cache, tok, act, rem), (nxt, emitted)
+            return (cache, tok, act, rem), (nxt, emitted, finite)
 
         def body(carry, _):
             cache, tok, act, rem = carry
             return jax.lax.cond(
                 jnp.any(act),
                 lambda c: step(c),
-                lambda c: (c, (c[1], jnp.zeros_like(c[2]))),
+                # skipped tail steps emit nothing; their sentinel lane
+                # reports healthy (no forward ran, nothing to flag)
+                lambda c: (c, (c[1], jnp.zeros_like(c[2]),
+                               jnp.ones_like(c[2]))),
                 (cache, tok, act, rem))
 
-        (cache, tok, act, rem), (toks, emits) = jax.lax.scan(
+        (cache, tok, act, rem), (toks, emits, fins) = jax.lax.scan(
             body, (cache, token, active, remaining), None, length=k_steps)
-        block = jnp.stack([toks, emits.astype(jnp.int32)], axis=-1)
+        block = jnp.stack([toks, emits.astype(jnp.int32),
+                           fins.astype(jnp.int32)], axis=-1)
         return block, act, cache
     return slot_decode_multi
 

@@ -1,10 +1,11 @@
 """Request-level serving: continuous batching over the slotted KV cache,
 plus self-speculative decoding (draft = MergeMoE-compressed, verify = full;
-DESIGN.md §10)."""
+DESIGN.md §10) and deterministic fault injection (DESIGN.md §12)."""
 from repro.serving.engine import (  # noqa: F401
     Engine,
     EngineConfig,
     Request,
     poisson_trace,
 )
+from repro.serving.faults import FaultPlan, FaultSpec  # noqa: F401
 from repro.serving.spec import accept_drafts  # noqa: F401

@@ -52,6 +52,22 @@ Design (decode dataflow details in DESIGN.md §7):
   samples, so spec mode is token-for-token identical to full-model decode
   at any temperature.
 
+* **Resilience (DESIGN.md §12).** Requests carry optional deadlines/TTLs
+  and terminate with an explicit ``status`` (``ok`` / ``shed`` /
+  ``failed_numeric`` / ``failed``): expired pending requests are SHED with
+  a reason (deferral-aware — a request stuck behind pool pressure sheds as
+  ``pool_pressure``, not a bare timeout), the pending queue can be bounded
+  with a reject-new or shed-expired-first backpressure policy, and a
+  numeric-health sentinel rides the fused readback block as one extra
+  lane (per-slot ``isfinite`` over the logits, zero additional host
+  syncs) to QUARANTINE any slot that goes non-finite — evicted
+  ``failed_numeric``, pages released, healthy slots bitwise untouched.
+  A seeded ``serving.faults.FaultPlan`` injects NaN poisoning, transient
+  device failures (bounded retry), and pool exhaustion deterministically,
+  and ``Engine.snapshot()/restore()`` serialize the COMPLETE engine state
+  (scheduler, allocator, prefix registry, KV pools, counters) so a
+  mid-trace crash resumes token-for-token identical.
+
 The clock is pluggable: ``clock='steps'`` interprets ``arrival_time`` in
 decode-step units (deterministic — used by tests and the CPU benchmark),
 ``clock='wall'`` in seconds.
@@ -66,19 +82,20 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import errors as ERR
 from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.models.numerics import set_activation_mesh
+from repro.serving.faults import FaultPlan
 from repro.serving.paging import PagedAllocator
 from repro.serving.spec import (build_slot_admit_spec,
                                 build_slot_admit_spec_paged,
@@ -93,16 +110,36 @@ class Request:
     max_new_tokens: int
     eos_token: Optional[int] = None
     arrival_time: float = 0.0           # steps or seconds, per engine clock
+    # latest clock value at which admission may still start (inclusive);
+    # ``ttl`` is the relative form (deadline = arrival_time + ttl) and is
+    # ignored when ``deadline`` is set. None = wait forever (DESIGN.md §12).
+    deadline: Optional[float] = None
+    ttl: Optional[float] = None
     # engine-filled
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
-    finish_reason: Optional[str] = None  # "length" | "eos"
+    finish_reason: Optional[str] = None  # "length" | "eos" | "shed" | "numeric"
+    # terminal status: "queued" until terminal, then "ok" | "shed" |
+    # "failed_numeric" | "failed"
+    status: str = "queued"
+    shed_reason: Optional[str] = None    # "deadline" | "pool_pressure"
+    # True once admission deferred this request for lack of pool blocks —
+    # a later expiry sheds it as "pool_pressure" rather than "deadline"
+    deferred: bool = False
 
     @property
     def n_prompt(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def effective_deadline(self) -> Optional[float]:
+        if self.deadline is not None:
+            return self.deadline
+        if self.ttl is not None:
+            return self.arrival_time + self.ttl
+        return None
 
 
 @dataclasses.dataclass
@@ -148,13 +185,32 @@ class EngineConfig:
     kv_blocks: int = 0
     kv_dtype: str = "bf16"
     prefix_sharing: bool = True
+    # ---- resilience (DESIGN.md §12) ----
+    # numeric-health sentinel over the per-slot isfinite lane of the fused
+    # readback block: "off" ignores the lane, "count" quarantines poisoned
+    # slots (evict failed_numeric + counters["quarantined"]), "strict"
+    # additionally raises NumericHealthError after quarantining — the same
+    # mode ladder as trace_guard
+    numeric_sentinel: str = "count"
+    # bounded pending queue (0 = unbounded) + backpressure policy when
+    # full: "reject_new" raises QueueFullError at submit; "shed_expired"
+    # first sheds expired pending requests, then rejects if still full
+    max_pending: int = 0
+    backpressure: str = "reject_new"
+    # bounded retry for transient device-step failures (injected by a
+    # FaultPlan or, in the field, surfaced by the runtime): how many times
+    # one step call may fail before DeviceStepError, and the exponential
+    # backoff base between attempts (0 = retry immediately; tests keep 0)
+    device_retries: int = 2
+    retry_backoff_s: float = 0.0
 
 
 class Engine:
     """Continuous-batching engine over a slotted KV cache."""
 
     def __init__(self, ec: EngineConfig, cfg=None, params=None,
-                 draft_cfg=None, draft_params=None):
+                 draft_cfg=None, draft_params=None,
+                 faults: Optional[FaultPlan] = None):
         self.ec = ec
         cfg = cfg if cfg is not None else (
             configs.get(ec.arch).reduced() if ec.reduced
@@ -183,6 +239,14 @@ class Engine:
                 f"(dense/moe), not {cfg.family}")
         if ec.decode_block < 1:
             raise ValueError("decode_block must be >= 1")
+        if ec.numeric_sentinel not in ("off", "count", "strict"):
+            raise ValueError(f"numeric_sentinel must be 'off', 'count' or "
+                             f"'strict', got {ec.numeric_sentinel!r}")
+        if ec.backpressure not in ("reject_new", "shed_expired"):
+            raise ValueError(f"backpressure must be 'reject_new' or "
+                             f"'shed_expired', got {ec.backpressure!r}")
+        if ec.max_pending < 0 or ec.device_retries < 0:
+            raise ValueError("max_pending and device_retries must be >= 0")
         self.cfg = cfg
         mesh = make_host_mesh()
         set_activation_mesh(mesh)
@@ -199,7 +263,11 @@ class Engine:
         self.counters: Dict[str, int] = {
             "device_calls": 0, "host_syncs": 0, "tokens_out": 0,
             "tokens_drafted": 0, "tokens_accepted": 0,
-            "tokens_rolled_back": 0}
+            "tokens_rolled_back": 0,
+            # resilience telemetry (§12): all three stay 0 on a healthy,
+            # uncontended trace — check_bench gates that on every
+            # happy-path benchmark row
+            "shed": 0, "quarantined": 0, "transient_retries": 0}
         from repro.analysis.trace_guard import TraceGuard
         self._guard = TraceGuard(ec.trace_guard, counters=self.counters)
         self._buckets = tuple(sorted(set(int(b) for b in ec.prefill_buckets)))
@@ -301,15 +369,27 @@ class Engine:
         self._last_tok = np.zeros((ec.n_slots,), np.int32)
         self._active = np.zeros((ec.n_slots,), bool)
         # heap of (arrival_time, uid, seq, Request): admission is FIFO by
-        # arrival regardless of submission order, O(log n) per push/pop. The
-        # monotonic ``seq`` breaks (arrival, uid) ties (submit() accepts
-        # caller uids and never rejects reuse) so heapq never falls through
-        # to comparing Request objects.
+        # arrival regardless of submission order, O(log n) per push/pop.
+        # The monotonic ``seq`` breaks (arrival, uid) ties so heapq never
+        # falls through to comparing Request objects. It is a plain int
+        # counter (not itertools.count) so snapshot()/restore() can
+        # serialize it.
         self._pending: List[Tuple[float, int, int, Request]] = []
-        self._seq = itertools.count()
+        self._seq_n = 0
         self._next_uid = 0
         self._step_count = 0
         self._t0: Optional[float] = None
+        # uids of every pending/active request: duplicates are rejected at
+        # submission because the sampling key is fold_in(base, uid) — an
+        # in-flight collision would alias two requests' Gumbel streams
+        self._inflight: set = set()
+        # requests shed at SUBMIT time (backpressure) waiting to be
+        # returned from the next step's finished list, so run() reports
+        # every terminal request exactly once
+        self._done_early: List[Request] = []
+        # seeded fault-injection plan (serving.faults); None serves clean
+        self._faults = faults
+        self._zero_poison = np.zeros((ec.n_slots,), bool)
         # per-slot sampling keys: fold_in(base, uid) assigned at admission,
         # so the key travels with the REQUEST — the sampled stream for a
         # (seed, uid, prompt) is identical across engine modes/scheduling
@@ -338,6 +418,152 @@ class Engine:
         eng.artifact = artifact
         return eng
 
+    # -------------------------------------------- snapshot / restore (§12)
+
+    def _req_state(self, r: Request) -> Dict:
+        return {
+            "uid": int(r.uid), "prompt": [int(t) for t in r.prompt],
+            "max_new_tokens": int(r.max_new_tokens),
+            "eos_token": None if r.eos_token is None else int(r.eos_token),
+            "arrival_time": float(r.arrival_time),
+            "deadline": None if r.deadline is None else float(r.deadline),
+            "ttl": None if r.ttl is None else float(r.ttl),
+            "out_tokens": [int(t) for t in r.out_tokens],
+            "t_admitted": r.t_admitted, "t_first_token": r.t_first_token,
+            "status": r.status, "deferred": bool(r.deferred),
+        }
+
+    def snapshot(self) -> Dict:
+        """Serialize the COMPLETE engine state: scheduler (pending heap +
+        in-flight requests), slot occupancy, sampling keys, counters, the
+        PagedAllocator (free list, refcounts, tables, prefix registry with
+        LRU order), and both KV pools — everything needed for
+        :meth:`restore` to finish the trace token-for-token identical to an
+        uninterrupted run. The host part is JSON-safe; the ``arrays`` part
+        holds np copies of the device caches (bf16 preserved exactly).
+        Terminal requests are the caller's to keep — they are not engine
+        state and are not serialized."""
+        reqs: Dict[int, Request] = {}
+        for _, _, _, r in self._pending:
+            reqs[r.uid] = r
+        for r in self._slot_req:
+            if r is not None:
+                reqs[r.uid] = r
+        host = {
+            "version": 1,
+            "step_count": int(self._step_count),
+            "next_uid": int(self._next_uid),
+            "seq": int(self._seq_n),
+            "counters": {k: int(v) for k, v in self.counters.items()},
+            "requests": [self._req_state(r) for _, r in sorted(reqs.items())],
+            "pending": [[float(a), int(u), int(s)]
+                        for a, u, s, _ in self._pending],
+            "slots": [None if r is None else int(r.uid)
+                      for r in self._slot_req],
+            "last_tok": [int(t) for t in self._last_tok],
+            "active": [bool(a) for a in self._active],
+            "slot_keys": self._slot_keys.tolist(),
+            "alloc": (None if self._alloc is None
+                      else self._alloc.state_dict()),
+        }
+        arrays = {"cache": jax.tree.map(
+            lambda a: np.asarray(jax.device_get(a)), self.cache)}
+        if self.cache_draft is not None:
+            arrays["cache_draft"] = jax.tree.map(
+                lambda a: np.asarray(jax.device_get(a)), self.cache_draft)
+        return {"ec": dataclasses.asdict(self.ec), "host": host,
+                "arrays": arrays}
+
+    def save_snapshot(self, directory):
+        """Persist :meth:`snapshot` through the checkpoint layer (atomic,
+        COMMIT-marked, digest-verified on load). Returns the committed
+        directory."""
+        from repro.ckpt import checkpoint as CKPT
+        snap = self.snapshot()
+        ecd = dict(snap["ec"])
+        ecd["prefill_buckets"] = list(ecd["prefill_buckets"])
+        return CKPT.save(directory, self._step_count, snap["arrays"],
+                         extras={"engine": {"ec": ecd,
+                                            "host": snap["host"]}},
+                         keep=0)
+
+    @classmethod
+    def restore(cls, snap, cfg=None, params=None, draft_cfg=None,
+                draft_params=None, faults: Optional[FaultPlan] = None,
+                verify: bool = True) -> "Engine":
+        """Rebuild an engine from :meth:`snapshot` output (dict) or a
+        :meth:`save_snapshot` directory (path). Model parameters are NOT
+        part of the snapshot — pass the same ``params``/``draft_params``
+        the snapshotted engine served (or rely on the seeded ``MD.init``
+        default for test-sized models). Disk restores verify the recorded
+        ``tree_digest`` and refuse corrupted snapshots unless
+        ``verify=False``."""
+        if not isinstance(snap, dict):
+            from repro.ckpt import checkpoint as CKPT
+            arrays, extras = CKPT.load(snap, verify=verify)
+            eng_x = extras.get("engine")
+            if eng_x is None:
+                raise ValueError(f"{snap} holds no engine snapshot "
+                                 f"(missing 'engine' extras)")
+            snap = {"ec": eng_x["ec"], "host": eng_x["host"],
+                    "arrays": arrays}
+        ecd = dict(snap["ec"])
+        ecd["prefill_buckets"] = tuple(ecd["prefill_buckets"])
+        eng = cls(EngineConfig(**ecd), cfg=cfg, params=params,
+                  draft_cfg=draft_cfg, draft_params=draft_params,
+                  faults=faults)
+        eng._load_snapshot(snap)
+        return eng
+
+    def _load_snapshot(self, snap: Dict) -> None:
+        host = snap["host"]
+        if host.get("version") != 1:
+            raise ValueError(f"unknown snapshot version "
+                             f"{host.get('version')!r}")
+        self._step_count = int(host["step_count"])
+        self._next_uid = int(host["next_uid"])
+        self._seq_n = int(host["seq"])
+        self.counters.update({k: int(v)
+                              for k, v in host["counters"].items()})
+        reqs: Dict[int, Request] = {}
+        for st in host["requests"]:
+            r = Request(
+                uid=int(st["uid"]),
+                prompt=np.asarray(st["prompt"], np.int32),
+                max_new_tokens=int(st["max_new_tokens"]),
+                eos_token=(None if st["eos_token"] is None
+                           else int(st["eos_token"])),
+                arrival_time=float(st["arrival_time"]),
+                deadline=(None if st["deadline"] is None
+                          else float(st["deadline"])),
+                ttl=None if st["ttl"] is None else float(st["ttl"]))
+            r.out_tokens = [int(t) for t in st["out_tokens"]]
+            r.t_admitted = st["t_admitted"]
+            r.t_first_token = st["t_first_token"]
+            r.status = st["status"]
+            r.deferred = bool(st["deferred"])
+            reqs[r.uid] = r
+        self._pending = [(float(a), int(u), int(s), reqs[int(u)])
+                         for a, u, s in host["pending"]]
+        heapq.heapify(self._pending)
+        self._slot_req = [None if u is None else reqs[int(u)]
+                          for u in host["slots"]]
+        self._last_tok = np.asarray(host["last_tok"], np.int32)
+        self._active = np.asarray(host["active"], bool)
+        self._slot_keys = np.asarray(host["slot_keys"], np.uint32)
+        self._inflight = set(reqs)
+        if self._alloc is not None:
+            if host["alloc"] is None:
+                raise ValueError("snapshot has no allocator state but the "
+                                 "restored engine is paged")
+            self._alloc.load_state(host["alloc"])
+            self._tab_dirty = True
+        arrays = snap["arrays"]
+        self.cache = jax.tree.map(jnp.asarray, arrays["cache"])
+        if self.cache_draft is not None:
+            self.cache_draft = jax.tree.map(jnp.asarray,
+                                            arrays["cache_draft"])
+
     @property
     def n_active(self) -> int:
         return int(self._active.sum())
@@ -348,7 +574,8 @@ class Engine:
 
     @property
     def idle(self) -> bool:
-        return not self._pending and not self._active.any()
+        return (not self._pending and not self._active.any()
+                and not self._done_early)
 
     @property
     def steps(self) -> int:
@@ -365,17 +592,26 @@ class Engine:
     def _validate_request(self, prompt: np.ndarray,
                           max_new_tokens: int) -> None:
         """Reject requests that cannot be served, with the reason spelled
-        out. A prompt must fit its prefill bucket AND leave generation room
-        in the slot; anything longer used to be silently clamped by
-        ``bucket_for`` and would corrupt the slot — now it is an error at
-        SUBMISSION time (the only place the caller can react)."""
+        out. A prompt must carry only real vocabulary ids (out-of-range ids
+        would silently clamp at the embedding gather and serve garbage),
+        must fit its prefill bucket AND leave generation room in the slot;
+        anything longer used to be silently clamped by ``bucket_for`` and
+        would corrupt the slot — now it is an error at SUBMISSION time (the
+        only place the caller can react). All raises are typed
+        (``core.errors``) and subclass ``ValueError`` for compatibility."""
         if prompt.size == 0:
-            raise ValueError("empty prompt")
+            raise ERR.RequestValidationError("empty prompt")
         if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+            raise ERR.RequestValidationError("max_new_tokens must be >= 1")
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ERR.InvalidTokenError(
+                f"prompt token ids must lie in [0, {self.cfg.vocab_size}) "
+                f"(vocab size of the served model); got ids spanning "
+                f"[{lo}, {hi}]")
         big = min(max(self._buckets, default=1), self.ec.s_max)
         if prompt.size > self.ec.s_max:
-            raise ValueError(
+            raise ERR.RequestValidationError(
                 f"prompt length {prompt.size} cannot fit any prefill bucket: "
                 f"the largest admissible bucket is capped by slot capacity "
                 f"s_max={self.ec.s_max} (declared buckets "
@@ -387,7 +623,7 @@ class Engine:
         # bound is therefore s_max + 1, not s_max — the old check rejected
         # the exactly-fitting request at the boundary.
         if prompt.size + max_new_tokens > self.ec.s_max + 1:
-            raise ValueError(
+            raise ERR.RequestValidationError(
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"needs {prompt.size + max_new_tokens - 1} KV rows, more "
                 f"than slot capacity s_max={self.ec.s_max} (the final "
@@ -402,7 +638,7 @@ class Engine:
         # the KV its own acceptance then reads
         if self.spec and (prompt.size + max_new_tokens + self.ec.spec_k
                           > self.ec.s_max + 1):
-            raise ValueError(
+            raise ERR.RequestValidationError(
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"+ spec_k ({self.ec.spec_k}) exceeds s_max + 1 = "
                 f"{self.ec.s_max + 1}: speculative verify needs spec_k KV "
@@ -410,17 +646,85 @@ class Engine:
                 f"shorten the request, lower spec_k, or raise s_max")
 
     def submit(self, prompt, max_new_tokens: int, eos_token: int | None = None,
-               arrival_time: float = 0.0, uid: int | None = None) -> Request:
+               arrival_time: float = 0.0, uid: int | None = None,
+               deadline: float | None = None,
+               ttl: float | None = None) -> Request:
+        """Queue one request. ``deadline``/``ttl`` bound how long it may
+        WAIT for admission (engine-clock units); past it the engine sheds
+        the request with a reason instead of serving stale work. Raises
+        typed errors (``core.errors``): RequestValidationError /
+        InvalidTokenError for unservable requests, DuplicateUidError for an
+        in-flight uid collision, QueueFullError when the bounded pending
+        queue rejects under the backpressure policy."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         self._validate_request(prompt, max_new_tokens)
+        if uid is not None and uid in self._inflight:
+            raise ERR.DuplicateUidError(
+                f"uid {uid} is already in flight (pending or active): "
+                f"in-flight uids must be unique — the sampling key is "
+                f"fold_in(base, uid), so a duplicate would alias two "
+                f"requests' Gumbel noise streams (DESIGN.md §10/§12)")
+        self._apply_backpressure()
         if uid is None:
             uid = self._next_uid
         self._next_uid = max(self._next_uid, uid) + 1
         req = Request(uid=uid, prompt=prompt, max_new_tokens=max_new_tokens,
-                      eos_token=eos_token, arrival_time=arrival_time)
-        heapq.heappush(self._pending,
-                       (req.arrival_time, req.uid, next(self._seq), req))
+                      eos_token=eos_token, arrival_time=arrival_time,
+                      deadline=deadline, ttl=ttl)
+        self._enqueue(req)
         return req
+
+    def _enqueue(self, req: Request) -> None:
+        if req.uid in self._inflight:
+            raise ERR.DuplicateUidError(
+                f"uid {req.uid} is already in flight (pending or active)")
+        self._inflight.add(req.uid)
+        self._seq_n += 1
+        heapq.heappush(self._pending,
+                       (req.arrival_time, req.uid, self._seq_n, req))
+
+    def _apply_backpressure(self) -> None:
+        """Enforce the bounded pending queue (§12 shed policy). With
+        ``backpressure='shed_expired'`` a full queue first sheds every
+        already-expired pending request (they could never be admitted
+        anyway), making room without dropping live work; ``'reject_new'``
+        — and a still-full queue after shedding — raises QueueFullError."""
+        if not self.ec.max_pending \
+                or len(self._pending) < self.ec.max_pending:
+            return
+        if self.ec.backpressure == "shed_expired":
+            now = self._now()
+            kept = []
+            for entry in self._pending:
+                r = entry[-1]
+                dl = r.effective_deadline
+                if dl is not None and now > dl:
+                    self._shed(r, now,
+                               "pool_pressure" if r.deferred else "deadline")
+                    self._done_early.append(r)
+                else:
+                    kept.append(entry)
+            if len(kept) < len(self._pending):
+                self._pending = kept
+                heapq.heapify(self._pending)
+        if len(self._pending) >= self.ec.max_pending:
+            raise ERR.QueueFullError(
+                f"pending queue full "
+                f"({len(self._pending)}/{self.ec.max_pending}) and "
+                f"backpressure policy {self.ec.backpressure!r} could not "
+                f"make room")
+
+    def _shed(self, req: Request, now: float, reason: str) -> None:
+        """Terminate a pending request without serving it (§12). Shed
+        requests keep any tokens they never had (none — shedding only
+        happens before admission), carry ``status='shed'`` plus the
+        reason, and count toward ``counters['shed']``."""
+        req.status = "shed"
+        req.shed_reason = reason
+        req.finish_reason = "shed"
+        req.t_finished = now
+        self.counters["shed"] += 1
+        self._inflight.discard(req.uid)
 
     def step(self, now: float | None = None) -> List[Request]:
         """Admit due requests, run ONE decode step, evict finished.
@@ -429,21 +733,41 @@ class Engine:
         production path (``run`` picks by ``decode_block``)."""
         now = self._now() if now is None else now
         finished = self._admit(now)
+        quarantined: List[Request] = []
         if self._active.any():
             # host->device conversions happen HERE, before the guard arms:
             # inside the guarded call every argument is already device-side
             self._sync_tab()
             toks = jnp.asarray(self._last_tok)
             act = jnp.asarray(self._active)
-            logits, greedy, self.cache = self._guard.run(
-                "slot_decode", self._decode, self.params, self.cache, toks,
-                act)
+            poison = jnp.asarray(self._poison_mask(1))
+            logits, aux, self.cache = self._with_retries(
+                "decode", "slot_decode",
+                lambda: self._guard.run("slot_decode", self._decode,
+                                        self.params, self.cache, toks, act,
+                                        poison))
             self.counters["device_calls"] += 1
-            next_toks = self._sample(logits, greedy, self._slot_keys,
-                                     self._positions())
-            self.counters["host_syncs"] += 1
+            sentinel = self.ec.numeric_sentinel != "off"
+            aux_np = None
+            if self.ec.temperature <= 0.0:
+                aux_np = np.asarray(aux)    # ONE readback: (greedy, finite)
+                self.counters["host_syncs"] += 1
+                next_toks = aux_np[:, 0]
+            else:
+                next_toks = self._sample(logits, None, self._slot_keys,
+                                         self._positions())
+                self.counters["host_syncs"] += 1
+                if sentinel:
+                    # reference-loop-only extra readback: the fused paths
+                    # carry the sentinel inside their one block transfer
+                    aux_np = np.asarray(aux)
+                    self.counters["host_syncs"] += 1
             for slot in np.flatnonzero(self._active):
                 req = self._slot_req[slot]
+                if sentinel and aux_np is not None and not aux_np[slot, 1]:
+                    quarantined.append(self._quarantine(slot, now))
+                    finished.append(req)
+                    continue
                 tok = int(next_toks[slot])
                 req.out_tokens.append(tok)
                 self.counters["tokens_out"] += 1
@@ -452,6 +776,7 @@ class Engine:
                     self._evict(slot, now)
                     finished.append(req)
         self._step_count += 1
+        self._raise_if_strict(quarantined)
         return finished
 
     def step_block(self, now: float | None = None) -> List[Request]:
@@ -480,16 +805,31 @@ class Engine:
         self._sync_tab()
         args = (self.params, self.cache, jnp.asarray(self._last_tok),
                 jnp.asarray(self._active), jnp.asarray(rem),
-                jnp.asarray(eos), jnp.asarray(self._slot_keys))
-        block, _, self.cache = self._guard.run(
-            "slot_decode_multi", self._decode_multi, *args)
+                jnp.asarray(eos), jnp.asarray(self._slot_keys),
+                jnp.asarray(self._poison_mask(K)))
+        block, _, self.cache = self._with_retries(
+            "decode", "slot_decode_multi",
+            lambda: self._guard.run("slot_decode_multi", self._decode_multi,
+                                    *args))
         self.counters["device_calls"] += 1
-        block_np = np.asarray(block)        # ONE readback: [K, B, (tok, emit)]
+        # ONE readback: [K, B, (tok, emit, finite)] — the numeric sentinel
+        # lane rides the same transfer (§12: zero additional host syncs)
+        block_np = np.asarray(block)
         self.counters["host_syncs"] += 1
+        sentinel = self.ec.numeric_sentinel != "off"
+        quarantined: List[Request] = []
         for s in slots:
             req = self._slot_req[s]
             for j in range(K):
                 if not block_np[j, s, 1]:
+                    break
+                t_j = now + j if self.ec.clock == "steps" else self._now()
+                if sentinel and not block_np[j, s, 2]:
+                    # tokens 0..j-1 already matched the fault-free stream;
+                    # token j was sampled from non-finite logits — truncate
+                    # there and quarantine the slot
+                    quarantined.append(self._quarantine(s, t_j))
+                    finished.append(req)
                     break
                 tok = int(block_np[j, s, 0])
                 req.out_tokens.append(tok)
@@ -499,11 +839,11 @@ class Engine:
                     # steps clock: finish = block start + inner step. Wall
                     # clock has no per-inner-step timestamps (the block is
                     # one device call) — stamp the post-block wall time.
-                    self._evict(s, now + j if self.ec.clock == "steps"
-                                else self._now())
+                    self._evict(s, t_j)
                     finished.append(req)
                     break
         self._step_count += K
+        self._raise_if_strict(quarantined)
         return finished
 
     def step_spec(self, now: float | None = None) -> List[Request]:
@@ -531,26 +871,36 @@ class Engine:
         args = (self.params, self.draft_params, self.cache, self.cache_draft,
                 jnp.asarray(self._last_tok), jnp.asarray(self._active),
                 jnp.asarray(rem), jnp.asarray(eos),
-                jnp.asarray(self._slot_keys))
-        block, _, self.cache, self.cache_draft = self._guard.run(
-            "slot_decode_spec", self._decode_spec, *args)
+                jnp.asarray(self._slot_keys),
+                jnp.asarray(self._poison_mask(K)))
+        block, _, self.cache, self.cache_draft = self._with_retries(
+            "decode", "slot_decode_spec",
+            lambda: self._guard.run("slot_decode_spec", self._decode_spec,
+                                    *args))
         self.counters["device_calls"] += 1
-        # ONE readback: rows 0..K-1 = (token, emitted) like step_block,
-        # row K = (accepted drafts, drafted) per slot
+        # ONE readback: rows 0..K-1 = (token, emitted, finite) like
+        # step_block (sentinel lane over the VERIFY logits), row K =
+        # (accepted drafts, drafted, 1) per slot
         block_np = np.asarray(block)
         self.counters["host_syncs"] += 1
+        sentinel = self.ec.numeric_sentinel != "off"
+        quarantined: List[Request] = []
         for s in slots:
             req = self._slot_req[s]
             for j in range(K):
                 if not block_np[j, s, 1]:
+                    break
+                t_j = now + j if self.ec.clock == "steps" else self._now()
+                if sentinel and not block_np[j, s, 2]:
+                    quarantined.append(self._quarantine(s, t_j))
+                    finished.append(req)
                     break
                 tok = int(block_np[j, s, 0])
                 req.out_tokens.append(tok)
                 self.counters["tokens_out"] += 1
                 self._last_tok[s] = tok
                 if self._is_done(req, tok):
-                    self._evict(s, now + j if self.ec.clock == "steps"
-                                else self._now())
+                    self._evict(s, t_j)
                     finished.append(req)
                     break
             n_match = int(block_np[K, s, 0])
@@ -559,6 +909,7 @@ class Engine:
             self.counters["tokens_accepted"] += n_match
             self.counters["tokens_rolled_back"] += drafted - n_match
         self._step_count += K
+        self._raise_if_strict(quarantined)
         return finished
 
     @property
@@ -575,12 +926,18 @@ class Engine:
             # deep inside a prefill scatter. Validate the WHOLE batch before
             # enqueuing anything, so a rejected call leaves the engine
             # exactly as it found it (no half-enqueued requests).
+            seen = set()
             for r in requests:
                 self._validate_request(np.asarray(r.prompt, np.int32),
                                        r.max_new_tokens)
+                if r.uid in self._inflight or r.uid in seen:
+                    raise ERR.DuplicateUidError(
+                        f"uid {r.uid} is already in flight (or appears "
+                        f"twice in this batch): in-flight uids must be "
+                        f"unique — the sampling key is fold_in(base, uid)")
+                seen.add(r.uid)
             for r in requests:
-                heapq.heappush(self._pending,
-                               (r.arrival_time, r.uid, next(self._seq), r))
+                self._enqueue(r)
         if self.spec:
             advance = self.step_spec
         elif self.ec.decode_block > 1:
@@ -674,13 +1031,13 @@ class Engine:
             raise ValueError(f"k_steps={K} too large for s_max={s_max}")
         multi = ST.make_slot_decode_multi(self.cfg, K, self.ec.temperature)
 
-        def block(params, cache, toks, act, rem, eos, keys):
+        def block(params, cache, toks, act, rem, eos, keys, poison):
             # keep pos in bounds ON DEVICE: reset to mid-cache before the
             # scanned steps would run past the last slot row
             pos = cache["pos"]
             pos = jnp.where(pos + K >= s_max, s_max // 2, pos)
             return multi(params, dict(cache, pos=pos), toks, act, rem, eos,
-                         keys)
+                         keys, poison)
 
         fn = jax.jit(block)
         cache = jax.tree.map(jnp.copy, self.cache)
@@ -691,10 +1048,12 @@ class Engine:
         act = jnp.ones((n,), bool)
         rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
         eos = jnp.full((n,), -1, jnp.int32)
+        poison = jnp.zeros((n,), bool)
         # seeded like every other sampled path (EngineConfig.seed), so a
         # temperature>0 benchmark decode is reproducible run to run
         keys = jax.random.split(jax.random.PRNGKey(self.ec.seed), n)
-        out, _, cache = fn(self.params, cache, toks, act, rem, eos, keys)
+        out, _, cache = fn(self.params, cache, toks, act, rem, eos, keys,
+                           poison)
         jax.block_until_ready(out)                                   # warm
         # the timed loop runs under transfer_guard("disallow"): a benchmark
         # number that silently included an implicit host transfer per block
@@ -703,7 +1062,7 @@ class Engine:
             t0 = time.perf_counter()
             for _ in range(iters):
                 out, _, cache = fn(self.params, cache, toks, act, rem, eos,
-                                   keys)
+                                   keys, poison)
             jax.block_until_ready(out)
             dt = time.perf_counter() - t0
         tok_per_s = n * K * iters / dt
@@ -780,14 +1139,14 @@ class Engine:
                                         self.ec.temperature)
 
         def round_(params, dparams, cache, dcache, toks, act, rem, eos,
-                   keys):
+                   keys, poison):
             # keep pos in bounds ON DEVICE; both caches share one pos by
             # construction, so reset both from the full model's
             pos = cache["pos"]
             pos = jnp.where(pos + K + 1 >= s_max, s_max // 2, pos)
             block, _, cache, dcache = spec(
                 params, dparams, dict(cache, pos=pos), dict(dcache, pos=pos),
-                toks, act, rem, eos, keys)
+                toks, act, rem, eos, keys, poison)
             # next input token = last committed verify sample, computed on
             # device so the timed loop never reads the block back
             emit = block[:K, :, 1]
@@ -807,10 +1166,11 @@ class Engine:
         act = jnp.ones((n,), bool)
         rem = jnp.full((n,), np.iinfo(np.int32).max // 2, jnp.int32)
         eos = jnp.full((n,), -1, jnp.int32)
+        poison = jnp.zeros((n,), bool)
         keys = jax.random.split(jax.random.PRNGKey(self.ec.seed), n)
         block, toks, cache, dcache = fn(self.params, self.draft_params,
                                         cache, dcache, toks, act, rem, eos,
-                                        keys)
+                                        keys, poison)
         jax.block_until_ready(block)                                 # warm
         blocks = []
         with jax.transfer_guard("disallow"):
@@ -818,7 +1178,7 @@ class Engine:
             for _ in range(iters):
                 block, toks, cache, dcache = fn(
                     self.params, self.draft_params, cache, dcache, toks,
-                    act, rem, eos, keys)
+                    act, rem, eos, keys, poison)
                 blocks.append(block)
             jax.block_until_ready(block)
             dt = time.perf_counter() - t0
@@ -936,17 +1296,42 @@ class Engine:
         allocator, adopting any registered prefix chain (the returned shared
         row count shrinks the prompt suffix that is actually forwarded). A
         failed reservation DEFERS the FIFO head — nothing behind it may jump
-        the queue — until eviction returns blocks to the pool."""
+        the queue — until eviction returns blocks to the pool.
+
+        Deadlines (§12): a due request whose effective deadline has passed
+        is SHED here instead of admitted — with reason ``pool_pressure``
+        when an earlier cycle deferred it (it waited on blocks, not on the
+        clock), else ``deadline``. Shed requests ride the finished list so
+        ``run()`` returns every terminal request."""
         finished: List[Request] = []
+        if self._done_early:
+            finished.extend(self._done_early)
+            self._done_early.clear()
         free = [s for s in range(self.ec.n_slots) if not self._active[s]]
         claimed: List[Tuple[Request, int, int]] = []
-        while free and self._pending and self._pending[0][0] <= now:
+        while self._pending and self._pending[0][0] <= now:
             req = self._pending[0][-1]
+            dl = req.effective_deadline
+            if dl is not None and now > dl:
+                heapq.heappop(self._pending)
+                self._shed(req, now,
+                           "pool_pressure" if req.deferred else "deadline")
+                finished.append(req)
+                continue
+            if not free:
+                break
             shared = 0
+            if self._faults is not None \
+                    and self._faults.exhausted(self._step_count):
+                # injected pool exhaustion: defer the head exactly like a
+                # real failed reservation (works in dense layout too)
+                req.deferred = True
+                break
             if self._alloc is not None:
                 shared = self._alloc.admit(free[0], req.prompt,
                                            self._reserve_rows(req))
                 if shared is None:
+                    req.deferred = True
                     break                       # pool exhausted: defer head
                 self._tab_dirty = True
             heapq.heappop(self._pending)
@@ -1009,16 +1394,22 @@ class Engine:
         paged_args = ((jnp.asarray(pos0),) if self._alloc is not None
                       else ())
         if self.spec:
-            logits, first_dev, self.cache, self.cache_draft = self._admit_spec(
-                self.params, self.draft_params, self.cache, self.cache_draft,
-                jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(slots),
-                *paged_args, jnp.asarray(keys))
+            logits, first_dev, self.cache, self.cache_draft = \
+                self._with_retries(
+                    "admit", "slot_admit_spec",
+                    lambda: self._admit_spec(
+                        self.params, self.draft_params, self.cache,
+                        self.cache_draft, jnp.asarray(toks),
+                        jnp.asarray(lengths), jnp.asarray(slots),
+                        *paged_args, jnp.asarray(keys)))
             self.counters["device_calls"] += 1
             first = np.asarray(first_dev[:B])
         else:
-            logits, greedy, self.cache = self._admit_step(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(lengths), jnp.asarray(slots), *paged_args)
+            logits, greedy, self.cache = self._with_retries(
+                "admit", "slot_admit",
+                lambda: self._admit_step(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(lengths), jnp.asarray(slots), *paged_args))
             self.counters["device_calls"] += 1
             # the first token occupies position ``n_prompt`` (= shared
             # prefix rows + suffix length) — same noise index the device
@@ -1046,10 +1437,12 @@ class Engine:
                 self._evict(slot, now)
                 finished.append(req)
 
-    def _evict(self, slot: int, now: float) -> None:
+    def _evict(self, slot: int, now: float, status: str = "ok") -> None:
         req = self._slot_req[slot]
         if req is not None:
             req.t_finished = now
+            req.status = status
+            self._inflight.discard(req.uid)
         self._slot_req[slot] = None
         self._active[slot] = False
         if self._alloc is not None:
@@ -1058,6 +1451,58 @@ class Engine:
             # any write the frozen slot still issues on device is dropped
             self._alloc.release(slot)
             self._tab_dirty = True
+
+    # ------------------------------------------------- resilience (§12)
+
+    def _poison_mask(self, k: int) -> np.ndarray:
+        """Fault-injection NaN mask for the decode block starting at the
+        current step and spanning ``k`` steps; all-False without a plan
+        (a bitwise no-op inside the jitted block)."""
+        if self._faults is None:
+            return self._zero_poison
+        return self._faults.poison_mask(self._step_count, k,
+                                        self.ec.n_slots)
+
+    def _with_retries(self, site: str, name: str, call: Callable):
+        """Run one device-step call through the fault plan's transient-
+        failure site with the engine's bounded retry/backoff budget. Each
+        injected failure consumes one retry; exceeding
+        ``EngineConfig.device_retries`` raises DeviceStepError. Without a
+        plan (or when nothing fires) this is a plain passthrough."""
+        fails = (self._faults.transient_failures(site, self._step_count)
+                 if self._faults is not None else 0)
+        for attempt in range(fails):
+            if attempt >= self.ec.device_retries:
+                raise ERR.DeviceStepError(
+                    f"{name} at site {site!r}, step {self._step_count}: "
+                    f"still failing after {attempt} retries (budget "
+                    f"device_retries={self.ec.device_retries})")
+            self.counters["transient_retries"] += 1
+            if self.ec.retry_backoff_s > 0:
+                time.sleep(self.ec.retry_backoff_s * (2 ** attempt))
+        return call()
+
+    def _quarantine(self, slot: int, now: float) -> Request:
+        """Evict a slot whose sentinel lane reported non-finite logits: its
+        request terminates ``failed_numeric`` with its tokens truncated at
+        the poisoned step (everything before it matches the fault-free
+        stream bitwise), and its pages return to the pool. Healthy slots
+        are untouched — their computation is batch-independent."""
+        req = self._slot_req[slot]
+        req.finish_reason = "numeric"
+        self.counters["quarantined"] += 1
+        self._evict(slot, now, status="failed_numeric")
+        return req
+
+    def _raise_if_strict(self, quarantined: List[Request]) -> None:
+        """Strict sentinel mode: raise AFTER the replay loop finished, so
+        the engine state (evictions, counters, pages) is consistent and the
+        caller can snapshot or continue with the healthy slots."""
+        if quarantined and self.ec.numeric_sentinel == "strict":
+            raise ERR.NumericHealthError(
+                f"non-finite logits quarantined uid(s) "
+                f"{sorted(r.uid for r in quarantined)} at step "
+                f"{self._step_count}; slots evicted failed_numeric")
 
 
 # ---------------------------------------------------------------------------

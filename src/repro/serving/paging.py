@@ -228,6 +228,39 @@ class PagedAllocator:
         while self._evict_registry_one():
             pass
 
+    # -- snapshot / restore (DESIGN.md §12) --------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of the complete allocator state: free list
+        (order preserved — it IS the allocation order), refcounts, block
+        tables, per-slot ownership, and the prefix registry with its LRU
+        order and exact byte keys (hex-encoded)."""
+        return {
+            "free": [int(b) for b in self._free],
+            "ref": [int(r) for r in self.ref],
+            "tab": self.tab.tolist(),
+            "owned": {str(s): [int(b) for b in blocks]
+                      for s, blocks in self._owned.items()},
+            "registry": [[key.hex(), [int(b) for b in chain]]
+                         for key, chain in self._registry.items()],
+            "stats": dict(self.stats),
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict`. Restores onto an allocator built
+        with the same geometry; a restored allocator is indistinguishable
+        from the one that snapshotted (``check_invariants`` holds)."""
+        self._free = [int(b) for b in state["free"]]
+        self.ref = np.asarray(state["ref"], np.int64)
+        self.tab = np.asarray(state["tab"], np.int32)
+        self._owned = {int(s): [int(b) for b in blocks]
+                       for s, blocks in state["owned"].items()}
+        self._registry = OrderedDict(
+            (bytes.fromhex(key), tuple(int(b) for b in chain))
+            for key, chain in state["registry"])
+        self.stats = dict(state["stats"])
+        self.check_invariants()
+
     # -- invariants (asserted by the property tests) -----------------------
 
     def check_invariants(self) -> None:

@@ -92,21 +92,26 @@ def build_slot_decode_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
     ``steps.make_slot_decode_spec``).
 
     slot_decode_spec(params, draft_params, cache, draft_cache, token [B],
-    active [B], remaining [B], eos [B], keys [B, 2])
-    -> (block [K+1, B, 2] int32, active [B] bool, cache, draft_cache)
+    active [B], remaining [B], eos [B], keys [B, 2], poison [B] bool)
+    -> (block [K+1, B, 3] int32, active [B] bool, cache, draft_cache)
 
-    Rows 0..K-1 of ``block`` are ``(token, emitted)`` pairs with exactly
-    the ``make_slot_decode_multi`` contract, so the engine's replay loop is
-    shared. Row K packs the acceptance stats ``(n_match, n_drafted)`` per
-    slot into the same array, keeping the whole round at ONE device->host
-    readback.
+    Rows 0..K-1 of ``block`` are ``(token, emitted, finite)`` triples with
+    exactly the ``make_slot_decode_multi`` contract — including the
+    numeric-health sentinel lane (DESIGN.md §12), computed over the VERIFY
+    logits (committed tokens are always verify samples, so that is where a
+    numeric fault reaches the output stream) — so the engine's replay loop
+    is shared. Row K packs the acceptance stats ``(n_match, n_drafted, 1)``
+    per slot into the same array, keeping the whole round at ONE
+    device->host readback. ``poison`` is the fault-injection mask
+    (``serving.faults``): True rows get their verify logits NaN-poisoned;
+    an all-False mask is a bitwise no-op.
     """
     K = int(k_draft)
     if K < 1:
         raise ValueError(f"k_draft must be >= 1, got {k_draft}")
 
     def slot_decode_spec(params, draft_params, cache, draft_cache, token,
-                         active, remaining, eos, keys):
+                         active, remaining, eos, keys, poison):
         pos0 = cache["pos"]
 
         # 1. draft: K fused decode steps of the compressed model. No eos /
@@ -130,6 +135,8 @@ def build_slot_decode_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
         # model would have sampled exactly this token".
         vtokens = jnp.concatenate([token[:, None], drafts], axis=1)
         vlogits, cache = MD.verify_step_slots(cfg, params, cache, vtokens)
+        vlogits = jnp.where(poison[:, None, None], jnp.nan, vlogits)
+        finite = jnp.all(jnp.isfinite(vlogits), axis=-1)     # [B, K+1]
         B, T, V = vlogits.shape
         vpos = pos0[:, None] + 1 + jnp.arange(T)[None, :]      # [B, K+1]
         vkeys = jnp.broadcast_to(keys[:, None, :],
@@ -153,12 +160,14 @@ def build_slot_decode_spec(cfg: ModelConfig, draft_cfg: ModelConfig,
 
         cand = verify[:, :K]
         stats = jnp.stack(
-            [n_match, jnp.where(active, K, 0).astype(jnp.int32)], axis=-1)
+            [n_match, jnp.where(active, K, 0).astype(jnp.int32),
+             jnp.ones_like(n_match)], axis=-1)
         block = jnp.concatenate(
             [jnp.stack([jnp.swapaxes(cand, 0, 1),
-                        jnp.swapaxes(emitted, 0, 1).astype(jnp.int32)],
+                        jnp.swapaxes(emitted, 0, 1).astype(jnp.int32),
+                        jnp.swapaxes(finite[:, :K], 0, 1).astype(jnp.int32)],
                        axis=-1),
-             stats[None]], axis=0)                             # [K+1, B, 2]
+             stats[None]], axis=0)                             # [K+1, B, 3]
         return block, still, cache, draft_cache
 
     return slot_decode_spec

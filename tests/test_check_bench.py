@@ -13,7 +13,8 @@ from check_bench import _records, check, main  # noqa: E402
 
 def _rec(**over):
     rec = {"weight_dtype": "bfloat16", "retraces": 0,
-           "implicit_transfers": 0, "moe_expert_bytes_per_token": 1.0}
+           "implicit_transfers": 0, "moe_expert_bytes_per_token": 1.0,
+           "shed": 0, "quarantined": 0, "transient_retries": 0}
     rec.update(over)
     return rec
 
@@ -59,6 +60,25 @@ def good():
                                       "int8_bytes_per_token": 264,
                                       "kv_stream_reduction": 1.939},
             "kv_stream_gate": 1.7, "kv_stream_ok": True, "parity_ok": True,
+        },
+        "faults": {
+            "seed": 0,
+            "injected": {"nan_logits": 1, "transient": 1, "exhaust": 1,
+                         "transient_fails": 2},
+            "observed": {"quarantined": 1, "transient_retries": 2,
+                         "shed": 1},
+            "statuses": {"ok": 6, "shed": 1, "failed_numeric": 1},
+            "shed_reasons": {"pool_pressure": 1},
+            "healthy_parity_bitwise": True,
+            "quarantined_prefix_of_clean": True,
+            "clean_run_counters_zero": True,
+            "fault_trace_digest": "deadbeef" * 8,
+            "replay_digest_equal": True,
+            "replay_tokens_bitwise": True,
+            "retraces": 0, "implicit_transfers": 0,
+            "accounting_exact": True,
+            "restore": {"dense": True, "paged": True, "spec": True},
+            "ok": True,
         },
         "parity": {"fused_vs_step_bitwise": True,
                    "gather_vs_ragged_bitwise": True,
@@ -246,3 +266,81 @@ def test_main_exit_codes(good, tmp_path, capsys):
     p.write_text(json.dumps(bad))
     assert main([str(p)]) == 1
     assert "check_bench FAIL" in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------------
+# resilience gates (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def test_happy_row_nonzero_shed_fails_that_row_only(good):
+    """A happy-path row shedding work (or quarantining, or retrying) is a
+    regression even though the degraded-mode row records the same counters
+    nonzero by design."""
+    for c in ("shed", "quarantined", "transient_retries"):
+        bad = copy.deepcopy(good)
+        bad["full"]["after"][c] = 1
+        errs = check(bad)
+        assert len(errs) == 1 and "full/after" in errs[0] and c in errs[0]
+
+
+def test_missing_resilience_counters_pass(good):
+    """Older JSON without the §12 counters still passes — the gate is on
+    regressions, not schema presence (same stance as the guard counters)."""
+    old = copy.deepcopy(good)
+    for _, rec in _records(old):
+        for c in ("shed", "quarantined", "transient_retries"):
+            rec.pop(c)
+    assert check(old) == []
+
+
+def test_faults_section_missing_fails(good):
+    bad = copy.deepcopy(good)
+    del bad["faults"]
+    assert any("faults section missing" in e for e in check(bad))
+
+
+def test_faults_observed_must_equal_injected(good):
+    """The degraded row must account for injected faults EXACTLY — an
+    over-count (spurious quarantine) and an under-count (swallowed fault)
+    both fail, even with accounting_exact left True."""
+    for got, want in (("quarantined", "nan_logits"), ("shed", "exhaust"),
+                      ("transient_retries", "transient_fails")):
+        for delta in (-1, 1):
+            bad = copy.deepcopy(good)
+            bad["faults"]["observed"][got] += delta
+            errs = check(bad)
+            assert any(got in e and want in e and "EXACTLY" in e
+                       for e in errs), (got, delta, errs)
+
+
+def test_faults_accounting_exact_bit_gated(good):
+    bad = copy.deepcopy(good)
+    bad["faults"]["accounting_exact"] = False
+    assert any("accounting_exact" in e for e in check(bad))
+
+
+def test_faults_parity_and_replay_bits_gated(good):
+    for key in ("healthy_parity_bitwise", "quarantined_prefix_of_clean",
+                "clean_run_counters_zero", "replay_digest_equal",
+                "replay_tokens_bitwise"):
+        bad = copy.deepcopy(good)
+        bad["faults"][key] = False
+        errs = check(bad)
+        assert len(errs) == 1 and key in errs[0]
+
+
+def test_faults_degraded_row_guard_counters_gated(good):
+    """Injected faults must not smuggle retraces/implicit transfers into
+    the hot loop — the degraded row keeps the §9 purity contract."""
+    bad = copy.deepcopy(good)
+    bad["faults"]["retraces"] = 4
+    assert any("under" in e and "injected faults" in e for e in check(bad))
+
+
+def test_faults_restore_flags_gated_per_mode(good):
+    for mode in ("dense", "paged", "spec"):
+        bad = copy.deepcopy(good)
+        bad["faults"]["restore"][mode] = False
+        errs = check(bad)
+        assert len(errs) == 1 and f"restore[{mode!r}]" in errs[0] \
+            and "uninterrupted" in errs[0]

@@ -1,0 +1,305 @@
+"""Deterministic fault injection + engine resilience (DESIGN.md §12):
+seeded FaultPlan purity (same seed -> same fault trace), NaN-poisoned
+logits quarantined by the numeric-health sentinel with healthy slots
+bitwise untouched, bounded transient-failure retry, injected pool
+exhaustion -> deferral -> pool-pressure shedding, deadline/TTL expiry,
+and bounded-queue backpressure policies.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import errors as ERR
+from repro.models import model as MD
+from repro.serving import Engine, EngineConfig
+from repro.serving.faults import FaultPlan, FaultSpec
+
+ARCH = "qwen3-moe-30b-a3b"
+P, NEW = 8, 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get(ARCH).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=P, dtype=np.int32)
+               for _ in range(2)]
+    return cfg, params, prompts
+
+
+def _engine(cfg, params, *, faults=None, n_slots=2, **kw):
+    ec = dict(arch=ARCH, n_slots=n_slots, s_max=32, prefill_buckets=(P,))
+    ec.update(kw)
+    return Engine(EngineConfig(**ec), cfg=cfg, params=params, faults=faults)
+
+
+@pytest.fixture(scope="module")
+def clean(setup):
+    """Fault-free fused-block reference run: uid -> out_tokens."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW)
+    done = eng.run()
+    assert all(r.status == "ok" for r in done)
+    assert eng.counters["shed"] == eng.counters["quarantined"] == 0
+    assert eng.counters["transient_retries"] == 0
+    return {r.uid: list(r.out_tokens) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: pure, seeded, replayable (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="scheduler", kind="transient")
+    with pytest.raises(ValueError, match="not injectable"):
+        FaultSpec(site="alloc", kind="nan_logits")
+    with pytest.raises(ValueError, match="outside"):
+        FaultSpec(site="decode", kind="transient", p=1.5)
+    with pytest.raises(ValueError, match="fails"):
+        FaultSpec(site="decode", kind="transient", fails=0)
+
+
+def _drive(plan):
+    """Fixed consultation sequence standing in for an engine trace."""
+    for step in range(0, 64, 8):
+        plan.poison_mask(step, 8, n_slots=4)
+        plan.transient_failures("decode", step)
+        plan.exhausted(step)
+    plan.corrupt(b"0123456789abcdef", step=0)
+    return plan.trace_digest()
+
+
+def test_same_seed_replays_identical_fault_trace():
+    specs = (FaultSpec(site="decode", kind="nan_logits", p=0.3),
+             FaultSpec(site="decode", kind="transient", p=0.2, fails=2),
+             FaultSpec(site="alloc", kind="exhaust", p=0.25),
+             FaultSpec(site="ckpt", kind="corrupt", steps=(0,)))
+    d1 = _drive(FaultPlan(seed=7, specs=specs))
+    d2 = _drive(FaultPlan(seed=7, specs=specs))
+    assert d1 == d2
+    assert _drive(FaultPlan(seed=8, specs=specs)) != d1
+    # probabilistic firings actually fired (p=0.3 over 32 decode consults)
+    plan = FaultPlan(seed=7, specs=specs)
+    _drive(plan)
+    assert plan.counts().get("nan_logits", 0) >= 1
+
+
+def test_poison_mask_covers_the_fused_block_span():
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="decode", kind="nan_logits", steps=(5,),
+                  slots=(1,)),))
+    assert plan.poison_mask(0, 8, 4).tolist() == [False, True, False, False]
+    assert not plan.poison_mask(8, 8, 4).any()     # 5 not in [8, 16)
+    assert plan.poison_mask(5, 1, 4)[1]            # step loop, exact step
+    assert not plan.poison_mask(4, 1, 4).any()
+
+
+def test_poison_mask_hash_picks_a_slot_when_unpinned():
+    plan = FaultPlan(seed=3, specs=(
+        FaultSpec(site="decode", kind="nan_logits", steps=(2,)),))
+    m1 = plan.poison_mask(0, 8, 4)
+    m2 = FaultPlan(seed=3, specs=plan.specs).poison_mask(0, 8, 4)
+    assert m1.sum() == 1 and (m1 == m2).all()      # seed-stable pick
+
+
+def test_transient_failures_sum_over_firing_specs():
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="decode", kind="transient", steps=(8,), fails=2),
+        FaultSpec(site="admit", kind="transient", steps=(8,), fails=1)))
+    assert plan.transient_failures("decode", 8) == 2
+    assert plan.transient_failures("admit", 8) == 1
+    assert plan.transient_failures("decode", 16) == 0
+
+
+def test_corrupt_is_pure_and_deterministic():
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="ckpt", kind="corrupt", steps=(0,),
+                  byte_offsets=(3, 100)),))
+    data = bytes(range(16))
+    out = plan.corrupt(data, step=0)
+    assert data == bytes(range(16))                # input untouched
+    assert out[3] == data[3] ^ 1
+    assert out[100 % 16] == data[100 % 16] ^ 1     # offsets wrap
+    assert plan.corrupt(data, step=0) == out
+    assert plan.corrupt(data, step=5) == data      # non-firing step: no-op
+
+
+# ---------------------------------------------------------------------------
+# numeric-health sentinel: quarantine without collateral damage
+# ---------------------------------------------------------------------------
+
+def _nan_plan(slots=(0,), steps=(2,)):
+    return FaultPlan(seed=0, specs=(
+        FaultSpec(site="decode", kind="nan_logits", steps=steps,
+                  slots=slots),))
+
+
+@pytest.mark.parametrize("decode_block", [8, 1],
+                         ids=["fused-block", "step-loop"])
+def test_nan_quarantine_healthy_slots_bitwise(setup, clean, decode_block):
+    """A poisoned slot is evicted ``failed_numeric`` with its tokens
+    truncated at the fault (a bitwise PREFIX of its fault-free stream);
+    the co-resident healthy slot's stream is bitwise identical to the
+    fault-free run — quarantine has no blast radius."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, faults=_nan_plan(),
+                  decode_block=decode_block)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW)
+    done = {r.uid: r for r in eng.run()}
+    bad, good = done[0], done[1]
+    assert bad.status == "failed_numeric"
+    assert bad.finish_reason == "numeric"
+    assert 1 <= len(bad.out_tokens) < len(clean[0])
+    assert bad.out_tokens == clean[0][:len(bad.out_tokens)]
+    assert good.status == "ok"
+    assert good.out_tokens == clean[1]
+    assert eng.counters["quarantined"] == 1
+    # the plan's record of what fired matches what the engine observed
+    assert eng._faults.counts() == {"nan_logits": 1}
+
+
+def test_nan_quarantine_strict_raises_after_cleanup(setup, clean):
+    """Strict mode raises NumericHealthError AFTER evicting the poisoned
+    slot, leaving a consistent engine: the healthy slot finishes bitwise
+    clean on the next run() call."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, faults=_nan_plan(),
+                  numeric_sentinel="strict")
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW)
+    with pytest.raises(ERR.NumericHealthError, match="uid"):
+        eng.run()
+    assert eng.counters["quarantined"] == 1
+    done = {r.uid: r for r in eng.run()}           # drain the survivors
+    assert done[1].status == "ok"
+    assert list(done[1].out_tokens) == clean[1]
+
+
+def test_sentinel_off_serves_poisoned_garbage(setup):
+    """The ladder's floor: with the sentinel off the finite lane is
+    ignored, nothing quarantines, and the poisoned request terminates
+    'ok' — the mode exists to demonstrate exactly the failure the
+    default 'count' mode prevents."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, faults=_nan_plan(), numeric_sentinel="off")
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW)
+    done = {r.uid: r for r in eng.run()}
+    assert eng.counters["quarantined"] == 0
+    assert done[0].status == done[1].status == "ok"
+    assert len(done[0].out_tokens) == NEW
+
+
+def test_quarantine_releases_paged_blocks(setup):
+    """In the paged layout a quarantined slot's whole reservation returns
+    to the pool — a numeric fault must not leak KV blocks."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, faults=_nan_plan(), kv_layout="paged",
+                  kv_block=16)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW)
+    done = {r.uid: r for r in eng.run()}
+    assert done[0].status == "failed_numeric"
+    assert eng._alloc.free_blocks == eng._alloc.nb   # nothing leaked
+    eng._alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# transient device failures: bounded retry
+# ---------------------------------------------------------------------------
+
+def test_transient_failures_retried_within_budget(setup, clean):
+    """Injected transient decode failures within the retry budget are
+    absorbed: the retries are counted and the output is bitwise identical
+    to the fault-free run (a retry re-issues the same pure call)."""
+    cfg, params, prompts = setup
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="decode", kind="transient", steps=(8,), fails=2),))
+    eng = _engine(cfg, params, faults=plan, device_retries=2)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=NEW)
+    done = {r.uid: r for r in eng.run()}
+    assert eng.counters["transient_retries"] == 2
+    assert {u: list(r.out_tokens) for u, r in done.items()} == clean
+    assert all(r.status == "ok" for r in done.values())
+
+
+def test_transient_failures_beyond_budget_raise(setup):
+    cfg, params, prompts = setup
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="decode", kind="transient", steps=(0,), fails=3),))
+    eng = _engine(cfg, params, faults=plan, device_retries=2)
+    eng.submit(prompts[0], max_new_tokens=NEW)
+    with pytest.raises(ERR.DeviceStepError, match="device_retries=2"):
+        eng.run()
+    assert eng.counters["transient_retries"] == 2  # budget fully consumed
+
+
+# ---------------------------------------------------------------------------
+# deadlines, injected pool exhaustion, backpressure
+# ---------------------------------------------------------------------------
+
+def test_injected_exhaustion_defers_then_sheds_pool_pressure(setup):
+    """Injected allocator exhaustion defers the FIFO head; when the
+    deferral outlives its deadline the request sheds with reason
+    'pool_pressure' — the §12 deferral-aware expiry, exercised without
+    needing a real pool squeeze."""
+    cfg, params, prompts = setup
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="alloc", kind="exhaust", steps=tuple(range(0, 9))),))
+    eng = _engine(cfg, params, faults=plan, n_slots=1)
+    req = eng.submit(prompts[0], max_new_tokens=4, ttl=6.0)
+    done = eng.run()
+    assert [r.uid for r in done] == [req.uid]
+    assert req.status == "shed"
+    assert req.shed_reason == "pool_pressure"
+    assert req.deferred and req.finish_reason == "shed"
+    assert req.out_tokens == []
+    assert eng.counters["shed"] == 1
+    assert "exhaust" in eng._faults.counts()
+
+
+def test_deadline_expiry_sheds_with_deadline_reason(setup):
+    """A request that expires waiting behind a busy slot (never deferred
+    by the allocator) sheds with the plain 'deadline' reason."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, n_slots=1)
+    r0 = eng.submit(prompts[0], max_new_tokens=16)     # occupies the slot
+    r1 = eng.submit(prompts[1], max_new_tokens=4, ttl=4.0)
+    done = {r.uid: r for r in eng.run()}
+    assert done[r0.uid].status == "ok"
+    assert done[r1.uid].status == "shed"
+    assert done[r1.uid].shed_reason == "deadline"
+    assert eng.counters["shed"] == 1
+
+
+def test_backpressure_reject_new(setup):
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, max_pending=1)
+    eng.submit(prompts[0], max_new_tokens=2, arrival_time=100.0)
+    with pytest.raises(ERR.QueueFullError, match="reject_new"):
+        eng.submit(prompts[1], max_new_tokens=2, arrival_time=100.0)
+
+
+def test_backpressure_shed_expired_makes_room(setup):
+    """shed_expired: a full queue first sheds already-expired pending
+    requests (they could never be admitted), admits the newcomer, and
+    run() still reports the shed request exactly once."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, max_pending=1, backpressure="shed_expired")
+    stale = eng.submit(prompts[0], max_new_tokens=2, deadline=-1.0)
+    live = eng.submit(prompts[1], max_new_tokens=2)
+    assert stale.status == "shed" and stale.shed_reason == "deadline"
+    done = {r.uid: r for r in eng.run()}
+    assert set(done) == {stale.uid, live.uid}
+    assert done[live.uid].status == "ok"
+    # still full of LIVE work -> reject
+    eng.submit(prompts[0], max_new_tokens=2, arrival_time=100.0)
+    with pytest.raises(ERR.QueueFullError):
+        eng.submit(prompts[1], max_new_tokens=2, arrival_time=100.0)

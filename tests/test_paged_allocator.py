@@ -297,3 +297,50 @@ def test_sharer_never_allocates_shared_blocks_twice(prompt_len):
     assert (a.nb - a.free_blocks) - used0 == \
         a.blocks_for_rows(n_rows) - full_blocks
     a.check_invariants()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.lists(st.integers(min_value=1, max_value=36),
+                min_size=4, max_size=24))
+def test_fifo_head_never_starves_under_pool_pressure(seed, row_budgets):
+    """No-starvation property (DESIGN.md §12): with FIFO peek-don't-pop
+    admission (the engine's policy — a deferred head blocks everything
+    behind it), the queue head is admitted after at most ``n_slots``
+    completions, for ANY sequence of request sizes that individually fit
+    the pool. Deferral must fully unwind its reservation (adopted prefix
+    refcounts included), or the head's retry finds a shrinking pool and
+    starves behind its own leak."""
+    a = _alloc(n_slots=3, n_blocks=9, block_size=4, s_max=36)
+    rng = np.random.default_rng(seed)
+    live = {}                               # slot -> admission order
+    order = 0
+    admitted = []
+    queue = list(enumerate(row_budgets))    # FIFO, sizes in KV rows
+    stalls = 0
+    while queue:
+        uid, n_rows = queue[0]
+        free = [s for s in range(a.n_slots) if s not in live]
+        if free:
+            prompt = _prompt(rng, int(min(n_rows, 12)))
+            if a.admit(free[0], prompt, n_rows) is not None:
+                if rng.random() < 0.5:      # random registry pins in play
+                    a.register_prefix(free[0], prompt)
+                live[free[0]] = order
+                order += 1
+                queue.pop(0)
+                admitted.append(uid)
+                stalls = 0
+                a.check_invariants()
+                continue
+        # head deferred (or all slots busy): oldest live request completes
+        assert live, "head deferred against an EMPTY pool: unwind leak"
+        oldest = min(live, key=live.get)
+        a.release(oldest)
+        del live[oldest]
+        a.check_invariants()
+        stalls += 1
+        assert stalls <= a.n_slots, (
+            f"request {uid} ({n_rows} rows) starved: still deferred after "
+            f"{stalls} completions freed the whole pool")
+    assert admitted == list(range(len(row_budgets)))    # FIFO order held

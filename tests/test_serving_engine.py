@@ -406,3 +406,70 @@ def test_poisson_trace_deterministic():
     b = poisson_trace(16, rate=0.5, seed=9)
     np.testing.assert_array_equal(a, b)
     assert (np.diff(a) > 0).all() and a.shape == (16,)
+
+
+# --------------------------------------------------------------------------
+# request validation + uid uniqueness (DESIGN.md §12 satellites)
+# --------------------------------------------------------------------------
+
+def test_submit_rejects_out_of_range_token_ids(setup):
+    """Out-of-vocab prompt ids used to clamp silently at the embedding
+    gather and serve garbage; now they raise a typed error (which still
+    IS a ValueError, so pre-§12 callers keep working)."""
+    from repro.core import errors as ERR
+    cfg, params = setup[0], setup[1]
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=32,
+                              prefill_buckets=(P,)),
+                 cfg=cfg, params=params)
+    bad_hi = np.array([0, 1, cfg.vocab_size], np.int32)
+    bad_lo = np.array([0, -3, 1], np.int32)
+    for bad in (bad_hi, bad_lo):
+        with pytest.raises(ERR.InvalidTokenError, match="vocab"):
+            eng.submit(bad, max_new_tokens=2)
+    assert issubclass(ERR.InvalidTokenError, ValueError)
+    assert eng.idle                         # rejected before enqueue
+
+
+def test_duplicate_inflight_uids_alias_gumbel_streams(setup):
+    """Why in-flight uids must be unique: the per-slot sampling key is
+    fold_in(base, uid), so two live requests with one uid draw the SAME
+    Gumbel noise — at temperature > 0 their sampled streams are bitwise
+    identical (aliased), which silently corrupts sampled-mode parity.
+    This test first DEMONSTRATES the corruption by smuggling a duplicate
+    past the guard, then pins the guard that now makes it unreachable."""
+    import heapq
+
+    from repro.core import errors as ERR
+    from repro.serving import Request
+    cfg, params, _, _, prompts = setup
+    eng = Engine(EngineConfig(arch=ARCH, n_slots=2, s_max=32,
+                              prefill_buckets=(P,), temperature=1.0),
+                 cfg=cfg, params=params)
+
+    # (1) the old behavior, reproduced by bypassing submit(): same uid,
+    # same prompt, both slots live at once -> identical sampled streams
+    twins = [Request(uid=7, prompt=prompts[0].copy(), max_new_tokens=NEW)
+             for _ in range(2)]
+    for i, r in enumerate(twins):
+        heapq.heappush(eng._pending, (0.0, r.uid, i, r))
+    eng.run()
+    assert twins[0].out_tokens == twins[1].out_tokens
+    assert len(twins[0].out_tokens) == NEW
+
+    # (2) distinct uids, same prompt: fold_in separates the noise streams
+    a = eng.submit(prompts[0], max_new_tokens=NEW, uid=8)
+    b = eng.submit(prompts[0], max_new_tokens=NEW, uid=9)
+    eng.run()
+    assert a.out_tokens != b.out_tokens
+
+    # (3) the guard: a duplicate of an IN-FLIGHT uid is rejected at
+    # submit, at run(requests=...), and by the internal enqueue
+    eng.submit(prompts[1], max_new_tokens=NEW, uid=42)
+    with pytest.raises(ERR.DuplicateUidError, match="fold_in"):
+        eng.submit(prompts[2], max_new_tokens=NEW, uid=42)
+    dup = [Request(uid=5, prompt=prompts[0].copy(), max_new_tokens=2),
+           Request(uid=5, prompt=prompts[1].copy(), max_new_tokens=2)]
+    with pytest.raises(ERR.DuplicateUidError, match="unique"):
+        eng.run(requests=dup)
+    done = eng.run()                        # uid 42 still serves cleanly
+    assert [r.uid for r in done] == [42]

@@ -1,0 +1,184 @@
+"""Snapshot/restore with verified artifacts (DESIGN.md §12): a mid-trace
+``Engine.snapshot()`` captures the COMPLETE serving state — scheduler,
+slot occupancy, sampling keys, counters, PagedAllocator (free-list order,
+refcounts, prefix registry LRU), and both KV pools — so a restored engine
+finishes the trace token-for-token identical to the uninterrupted run, in
+dense, paged, and speculative modes. Disk snapshots ride the checkpoint
+layer and carry a ``tree_digest``; corrupted bytes refuse to load.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.ckpt import checkpoint as CKPT
+from repro.core import compress as CMP
+from repro.core import errors as ERR
+from repro.models import model as MD
+from repro.serving import Engine, EngineConfig
+from repro.serving.faults import FaultPlan, FaultSpec
+
+ARCH = "qwen3-moe-30b-a3b"
+P, NEW = 8, 10
+ARRIVALS = (0.0, 0.0, 5.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get(ARCH).reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    calib = [{"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 64),
+                                           0, cfg.vocab_size)}]
+    ncfg, nparams, _ = CMP.compress_model(
+        cfg, params, method="mergemoe",
+        merged_experts=cfg.moe.n_experts // 2, split=0, batches=calib)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=P, dtype=np.int32)
+               for _ in range(len(ARRIVALS))]
+    return cfg, params, ncfg, nparams, prompts
+
+
+MODES = {
+    # kv_block=4 so an 8-token prompt registers a full prefix block: the
+    # snapshot then must carry a non-empty registry with its LRU order
+    "dense": dict(),
+    "paged": dict(kv_layout="paged", kv_block=4),
+    "spec": dict(spec_k=4),
+}
+
+
+def _mk(setup, mode, **kw):
+    cfg, params, ncfg, nparams, _ = setup
+    ec = dict(arch=ARCH, n_slots=2, s_max=32, prefill_buckets=(P,))
+    ec.update(MODES[mode])
+    ec.update(kw)
+    spec = mode == "spec"
+    return Engine(EngineConfig(**ec), cfg=cfg, params=params,
+                  draft_cfg=ncfg if spec else None,
+                  draft_params=nparams if spec else None)
+
+
+def _submit(eng, prompts):
+    for i, (p, a) in enumerate(zip(prompts, ARRIVALS)):
+        eng.submit(p, max_new_tokens=NEW, arrival_time=a, uid=i)
+
+
+def _advance_once(eng, mode):
+    return eng.step_spec() if mode == "spec" else eng.step_block()
+
+
+def _tokens(done):
+    return {r.uid: (list(r.out_tokens), r.status) for r in done}
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_restore_finishes_token_for_token(setup, mode):
+    """The §12 acceptance bar: interrupt a trace after one fused call
+    (two slots mid-stream, one request still queued), restore from the
+    snapshot into a FRESH engine, and the union of pre-crash and
+    post-restore outputs equals the uninterrupted run bitwise — and the
+    continued original engine agrees, so snapshotting itself perturbed
+    nothing."""
+    cfg, params, ncfg, nparams, prompts = setup
+    ref = _mk(setup, mode)
+    _submit(ref, prompts)
+    want = _tokens(ref.run())
+    assert all(st == "ok" for _, st in want.values())
+
+    a = _mk(setup, mode)
+    _submit(a, prompts)
+    pre = _advance_once(a, mode)          # mid-trace: 2 active + 1 pending
+    assert not a.idle
+    snap = a.snapshot()
+    step_at_snap = a.steps
+
+    b = Engine.restore(snap, cfg=cfg, params=params,
+                       draft_cfg=ncfg if mode == "spec" else None,
+                       draft_params=nparams if mode == "spec" else None)
+    assert b.steps == step_at_snap
+    got_b = _tokens(list(pre) + b.run())
+    got_a = _tokens(list(pre) + a.run())  # the engine that kept running
+    assert got_b == want
+    assert got_a == want
+    if mode == "paged":
+        # restored allocator drained cleanly: nothing owned, every
+        # non-free block is pinned by the prefix registry, no leaks
+        b._alloc.check_invariants()
+        state = b._alloc.state_dict()
+        assert not state["owned"]
+        pinned = {blk for _, chain in state["registry"] for blk in chain}
+        assert b._alloc.free_blocks == b._alloc.nb - len(pinned)
+        assert snap["host"]["alloc"]["registry"], "registry not captured"
+
+
+def test_snapshot_host_part_is_json_safe(setup):
+    """The host half of a snapshot must survive a JSON round-trip
+    unchanged — that is what lets save_snapshot ship it through the
+    checkpoint layer's meta.json extras."""
+    eng = _mk(setup, "paged")
+    _submit(eng, setup[-1])
+    eng.step_block()
+    snap = eng.snapshot()
+    assert json.loads(json.dumps(snap["host"])) == snap["host"]
+    assert snap["host"]["alloc"]["registry"], "prefix registry not captured"
+    eng.run()                              # drain so the module moves on
+
+
+def test_disk_snapshot_roundtrip_and_digest_guard(setup, tmp_path):
+    """save_snapshot -> Engine.restore(directory) finishes the trace
+    bitwise; a single bit flipped in one leaf file (via the fault plan's
+    ckpt site, so the corruption itself is seeded and replayable) fails
+    digest verification with ArtifactCorruptError, and verify=False still
+    loads it for forensics."""
+    cfg, params, _, _, prompts = setup
+    ref = _mk(setup, "dense")
+    _submit(ref, prompts)
+    want = _tokens(ref.run())
+
+    eng = _mk(setup, "dense")
+    _submit(eng, prompts)
+    pre = eng.step_block()
+    committed = eng.save_snapshot(tmp_path / "snap")
+    assert (committed / "COMMIT").exists()
+    meta = json.loads((committed / "meta.json").read_text())
+    assert meta["tree_digest"]
+
+    b = Engine.restore(tmp_path / "snap", cfg=cfg, params=params)
+    assert _tokens(list(pre) + b.run()) == want
+
+    # flip the HIGH byte of the last element of the largest leaf (bf16 is
+    # stored as f32; a low-bit mantissa flip could round away in the
+    # bf16 cast and dodge the digest — the exponent byte cannot)
+    leaf = max(committed.glob("leaf_*.npy"), key=lambda p: p.stat().st_size)
+    plan = FaultPlan(seed=0, specs=(
+        FaultSpec(site="ckpt", kind="corrupt", steps=(0,),
+                  byte_offsets=(-1,)),))
+    leaf.write_bytes(plan.corrupt(leaf.read_bytes()))
+    with pytest.raises(ERR.ArtifactCorruptError, match="digest"):
+        Engine.restore(tmp_path / "snap", cfg=cfg, params=params)
+    forensic = Engine.restore(tmp_path / "snap", cfg=cfg, params=params,
+                              verify=False)
+    assert isinstance(forensic, Engine)
+
+
+def test_checkpoint_digest_unit(tmp_path):
+    """Checkpoint-layer contract, no engine: save records tree_digest in
+    meta.json, load verifies it by default, a corrupted leaf raises, and
+    verify=False is the explicit forensics escape hatch."""
+    tree = {"w": np.arange(32, dtype=np.float32).reshape(4, 8),
+            "b": {"x": np.ones(5, np.int32)}}
+    d = CKPT.save(tmp_path, 0, tree, extras={"note": "hi"})
+    got, extras = CKPT.load(tmp_path)
+    assert extras["note"] == "hi"
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+    leaf = sorted(d.glob("leaf_*.npy"))[0]
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 1
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(ERR.ArtifactCorruptError, match="verify=False"):
+        CKPT.load(tmp_path)
+    got2, _ = CKPT.load(tmp_path, verify=False)
+    assert got2["w"].shape == (4, 8)
