@@ -65,6 +65,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -509,6 +511,116 @@ def run_spec_trace(cfg, params, draft_cfg, draft_params, *, arch, label, k,
           f"{rec['host_dispatches_per_token']:.3f} disp/tok)")
     tokens = [list(r.out_tokens) for r in sorted(done, key=lambda r: r.uid)]
     return rec, tokens
+
+
+# --- expert-parallel sharded decode (DESIGN.md §13) ------------------------
+# forced-multi-device CPU mesh for the differential rows: 4 host devices as
+# (data=2, model=2) — expert tables split 2-ways, slots/KV split 2-ways
+EP_MESH = "data=2,model=2"
+EP_DEVICES = 4
+EP_MODES = ("dense_block", "paged_block")
+# full-scale modeled-traffic point for the gated EP claim: kimi-k2 1T at a
+# deployment EP degree (E=384 experts split 16 ways, 24 tables/device)
+EP_FULL_SCALE_ARCH = "kimi-k2-1t-a32b"
+EP_FULL_SCALE_EP = 16
+EP_FULL_SCALE_DP = 4
+EP_FULL_SCALE_SLOTS = 64
+# per-device modeled expert stream must drop at least this fraction of the
+# EP degree below the single-device stream (uniform routing gives >= ep
+# exactly — the shard split plus fewer draws per data shard; the 0.8 slack
+# absorbs future non-uniform routing models)
+EP_STREAM_GATE_FRACTION = 0.8
+
+
+def ep_section() -> dict:
+    """The BENCH_serve.json ``ep`` section: the tests/_ep_child.py trace
+    served single-device and on the forced (data=2, model=2) CPU mesh
+    (separate subprocesses — device count is locked at JAX init), parity
+    bits per mode, and the modeled per-device expert-stream + interconnect
+    bytes at full kimi-k2 scale that carry the deployment claim."""
+    repo = Path(__file__).resolve().parents[1]
+
+    def child(mesh=None, devices=None):
+        env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+        env.pop("XLA_FLAGS", None)
+        if devices:
+            env["XLA_FLAGS"] = \
+                f"--xla_force_host_platform_device_count={devices}"
+        cmd = [sys.executable, "tests/_ep_child.py",
+               "--modes", ",".join(EP_MODES)]
+        if mesh:
+            cmd += ["--mesh", mesh]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=str(repo), timeout=1800)
+        if r.returncode != 0:
+            raise RuntimeError(f"ep child failed:\n{r.stdout}\n{r.stderr}")
+        return json.loads(r.stdout)
+
+    single = child()
+    meshed = child(mesh=EP_MESH, devices=EP_DEVICES)
+
+    modes = {}
+    for m in EP_MODES:
+        s, d = single[m], meshed[m]
+        strip = lambda rec: {k: v for k, v in rec.items() if k != "perf"}
+        modes[m] = {
+            "parity_bitwise": strip(s) == strip(d),
+            "tokens": s["tokens_out"],
+            "single": s["perf"],
+            "mesh": d["perf"],
+        }
+        print(f"[{'ep/' + m:>22}] single {s['perf']['tok_per_s']:6.1f} tok/s"
+              f"  mesh({EP_MESH}) {d['perf']['tok_per_s']:6.1f} tok/s  "
+              f"parity={modes[m]['parity_bitwise']}")
+
+    # full-scale modeled traffic: per-device expert stream + interconnect
+    fcfg = configs.get(EP_FULL_SCALE_ARCH)
+    kw = dict(n_slots=EP_FULL_SCALE_SLOTS, pos=FULL_SCALE_POS)
+    t1 = decode_traffic_model(fcfg, **kw)
+    tm = decode_traffic_model(fcfg, **kw, ep_degree=EP_FULL_SCALE_EP,
+                              dp_degree=EP_FULL_SCALE_DP)
+    tm8 = decode_traffic_model(fcfg, **kw, ep_degree=EP_FULL_SCALE_EP,
+                               dp_degree=EP_FULL_SCALE_DP,
+                               combine_wire_dtype="int8")
+    gate = EP_FULL_SCALE_EP * EP_STREAM_GATE_FRACTION
+    sec = {
+        "mesh": EP_MESH,
+        "devices": EP_DEVICES,
+        "modes": modes,
+        "parity_ok": bool(all(v["parity_bitwise"] for v in modes.values())),
+        "full_scale": {
+            "arch": EP_FULL_SCALE_ARCH,
+            "ep_degree": EP_FULL_SCALE_EP,
+            "dp_degree": EP_FULL_SCALE_DP,
+            "n_slots": EP_FULL_SCALE_SLOTS,
+            "expert_stream_bytes_per_token_1dev": round(
+                t1["moe_expert_bytes_per_token"]),
+            "expert_stream_bytes_per_token": round(
+                tm["moe_expert_bytes_per_token"]),
+            "expert_stream_reduction": round(
+                tm["expert_stream_reduction"], 3),
+            "hbm_bytes_per_token": round(tm["bytes_per_token"]),
+            "interconnect_bytes_per_token": round(
+                tm["interconnect_bytes_per_token"]),
+            # opt-in int8 combine wire: the return leg shrinks 4x, the
+            # dispatch leg (bf16 activations) and all-gather stay put
+            "interconnect_bytes_per_token_int8_wire": round(
+                tm8["interconnect_bytes_per_token"]),
+            "wire_savings_int8": round(
+                tm["interconnect_bytes_per_token"]
+                / max(tm8["interconnect_bytes_per_token"], 1e-9), 3),
+        },
+        "expert_stream_gate": gate,
+    }
+    sec["expert_stream_ok"] = bool(
+        sec["full_scale"]["expert_stream_reduction"] >= gate)
+    print(f"[{'ep/full-scale':>22}] expert stream "
+          f"{sec['full_scale']['expert_stream_reduction']}x/dev below "
+          f"single-device (gate {gate}x); interconnect "
+          f"{sec['full_scale']['interconnect_bytes_per_token']}B/tok fp32 "
+          f"wire, {sec['full_scale']['interconnect_bytes_per_token_int8_wire']}"
+          f"B/tok int8 wire")
+    return sec
 
 
 # --- fault injection + resilience (DESIGN.md §12) --------------------------
@@ -986,6 +1098,9 @@ def main():
         and share["parity_duplicates_bitwise"]
         and kv_top1 >= KV_INT8_TOLERANCE)
 
+    # --- expert-parallel sharded decode (DESIGN.md §13) ---------------------
+    ep = ep_section()
+
     # --- fault injection + resilience (DESIGN.md §12) -----------------------
     faults = fault_section(cfg, params, ncfg, nparams)
     summary = {
@@ -999,6 +1114,7 @@ def main():
         "int8": int8,
         "spec": spec,
         "paged": paged,
+        "ep": ep,
         "faults": faults,
         "parity": parity,
         "compression_ratio": round(info["compression_ratio"], 3),
@@ -1049,6 +1165,11 @@ def main():
           f"{share['parity_duplicates_bitwise']}); full-scale KV stream "
           f"{paged['modeled_full_scale_kv']['kv_stream_reduction']}x below "
           f"dense bf16 (gate {KV_STREAM_GATE}x) ==")
+    print(f"== ep: parity={ep['parity_ok']} on {EP_MESH}; full-scale "
+          f"expert stream {ep['full_scale']['expert_stream_reduction']}x/dev "
+          f"below single-device at EP={EP_FULL_SCALE_EP} "
+          f"(gate {ep['expert_stream_gate']}x); interconnect "
+          f"{ep['full_scale']['interconnect_bytes_per_token']}B/tok ==")
     print(f"== faults: injected {faults['injected']} -> observed "
           f"{faults['observed']} (exact={faults['accounting_exact']}); "
           f"healthy-slot parity={faults['healthy_parity_bitwise']}; "
@@ -1106,6 +1227,16 @@ def main():
             f"serve_bench paged-KV stream gate FAILED: full-scale reduction "
             f"{paged['modeled_full_scale_kv']['kv_stream_reduction']}x "
             f"< {KV_STREAM_GATE}x vs dense bf16")
+    if not ep["parity_ok"]:
+        raise SystemExit(
+            f"serve_bench EP parity FAILED: the {EP_MESH} mesh engine must "
+            f"be token-for-token identical to the single-device engine: "
+            + repr({m: v['parity_bitwise'] for m, v in ep['modes'].items()}))
+    if not ep["expert_stream_ok"]:
+        raise SystemExit(
+            f"serve_bench EP expert-stream gate FAILED: modeled per-device "
+            f"reduction {ep['full_scale']['expert_stream_reduction']}x "
+            f"< {ep['expert_stream_gate']}x at EP={EP_FULL_SCALE_EP}")
     happy_degraded = [
         (label, c, rows_rec.get(c))
         for label, rows_rec in (("full/before", rows["full"]["before"]),

@@ -23,6 +23,10 @@ Asserts, on a BENCH_serve.json produced by ``benchmarks/serve_bench.py``:
   prefix-sharing trace), the int8 pool clears its teacher-forced top-1
   tolerance, and the full-scale modeled decode KV stream clears the
   reduction gate vs dense bf16;
+* the expert-parallel rows (DESIGN.md §13) are token-for-token identical
+  between the forced-mesh engine and the single-device engine in every
+  mode, and the full-scale modeled per-device expert stream clears the
+  EP-degree x 0.8 reduction gate;
 * the trace-guard counters are zero on every post-warmup row — no decode
   retraces, no implicit host transfers (DESIGN.md §9);
 * the resilience counters are zero on every HAPPY-PATH row — no sheds, no
@@ -156,6 +160,28 @@ def check(d: dict) -> List[str]:
                             f"(happy-path row shed/quarantined/retried "
                             f"without an injected fault, DESIGN.md §12)")
 
+    ep = d.get("ep")
+    if not isinstance(ep, dict) or not ep.get("modes"):
+        errs.append("ep section missing (no expert-parallel serving rows, "
+                    "DESIGN.md §13)")
+        ep = {}
+    if ep:
+        for mode, rec in ep.get("modes", {}).items():
+            if rec.get("parity_bitwise") is not True:
+                errs.append(
+                    f"ep/{mode}: parity_bitwise is "
+                    f"{rec.get('parity_bitwise')!r}, not True (the "
+                    f"{ep.get('mesh')} mesh engine must match the "
+                    f"single-device engine token-for-token)")
+        fs = ep.get("full_scale", {})
+        red = fs.get("expert_stream_reduction", 0.0)
+        gate = ep.get("expert_stream_gate", 1.0)
+        if red < gate:
+            errs.append(
+                f"ep expert-stream gate failed: modeled per-device "
+                f"reduction {red}x < {gate}x at EP={fs.get('ep_degree')} "
+                f"(full_scale={fs})")
+
     ft = d.get("faults")
     if not isinstance(ft, dict) or "observed" not in ft:
         errs.append("faults section missing (no degraded-mode "
@@ -229,6 +255,13 @@ def main(argv=None) -> int:
           pg["modeled_full_scale_kv"]["kv_stream_reduction"], "x >=",
           pg["kv_stream_gate"], "x vs dense bf16; prefix hit rate",
           pg["prefix_sharing"]["hit_rate"])
+    ep = d["ep"]
+    print("EP parity OK:", ep["mesh"], "mesh bitwise vs single device in",
+          sorted(ep["modes"]))
+    print("EP expert-stream gate OK:",
+          ep["full_scale"]["expert_stream_reduction"], "x >=",
+          ep["expert_stream_gate"], "x at EP=",
+          ep["full_scale"]["ep_degree"])
     print("trace-guard counters OK: 0 retraces / 0 implicit transfers "
           "across", len(list(_records(d))), "rows")
     ft = d["faults"]

@@ -242,12 +242,15 @@ class Analyzer:
             return node.args[0]
         return node
 
-    def _local_assigns(self, fn: ast.AST) -> Dict[str, ast.AST]:
-        out: Dict[str, ast.AST] = {}
+    def _local_assigns(self, fn: ast.AST) -> Dict[str, List[ast.AST]]:
+        # EVERY assignment to the name, not just the last: the engine picks
+        # its jit bodies by branch (`fn = mesh_maker(...)` in one arm,
+        # `fn = maker(...)` in the other) and both arms are traced bodies
+        out: Dict[str, List[ast.AST]] = {}
         for node in ast.walk(fn):
             if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                     and isinstance(node.targets[0], ast.Name):
-                out[node.targets[0].id] = node.value
+                out.setdefault(node.targets[0].id, []).append(node.value)
         return out
 
     def _mark_body(self, mod: ModuleInfo, scope: str, arg: ast.AST,
@@ -256,6 +259,12 @@ class Analyzer:
         if depth > 4:
             return
         arg = self._unwrap_partial(arg)
+        if isinstance(arg, ast.IfExp):
+            # `maker_a(...) if cond else maker_b(...)`: either arm may be
+            # the jitted body depending on runtime config — mark both
+            self._mark_body(mod, scope, arg.body, assigns, depth + 1)
+            self._mark_body(mod, scope, arg.orelse, assigns, depth + 1)
+            return
         if isinstance(arg, ast.Lambda):
             # a jitted lambda's callees are the traced bodies
             for sub in ast.walk(arg.body):
@@ -281,7 +290,8 @@ class Analyzer:
             self.roots.add(target)
             return
         if isinstance(arg, ast.Name) and arg.id in assigns:
-            self._mark_body(mod, scope, assigns[arg.id], assigns, depth + 1)
+            for value in assigns[arg.id]:
+                self._mark_body(mod, scope, value, assigns, depth + 1)
 
     # ---------------------------------------------------------------- roots
     def _collect_roots(self) -> None:

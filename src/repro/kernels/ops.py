@@ -129,6 +129,41 @@ def gather_swiglu_q(x, qt, idx, w):
     return ref.gather_swiglu_q(x, qt, idx, w)
 
 
+# ---------------------------------------------------------------------------
+# expert-parallel (sharded-table) views of the gather kernels
+# ---------------------------------------------------------------------------
+
+def localize_expert_ids(idx, w, e_base, e_local: int):
+    """Map GLOBAL real-expert ids onto this shard's LOCAL table rows.
+
+    ``idx``: [T, k] int32 global ids; ``e_base``: traced scalar — the first
+    global row this shard stores (``axis_index * e_local`` under shard_map);
+    ``e_local``: static local row count. Rows owned elsewhere clip into
+    range with their combine weight zeroed, so the kernels compute a
+    contribution of exactly fp 0.0 for them — the combine stays bitwise
+    whatever the foreign rows gather (DESIGN.md §13).
+    """
+    import jax.numpy as jnp
+    lid = idx - e_base
+    mine = (lid >= 0) & (lid < e_local)
+    return jnp.clip(lid, 0, e_local - 1), jnp.where(mine, w, 0.0)
+
+
+def gather_swiglu_sharded(x, wg, wu, wd, idx, w, e_base):
+    """:func:`gather_swiglu` over one EP shard's expert-table slice.
+
+    Same per-row arithmetic; ``idx`` stays in GLOBAL expert space and is
+    offset by ``e_base`` (this shard's first row) before the gather."""
+    lid, w = localize_expert_ids(idx, w, e_base, wg.shape[0])
+    return gather_swiglu(x, wg, wu, wd, lid, w)
+
+
+def gather_swiglu_q_sharded(x, qt, idx, w, e_base):
+    """Int8 variant of :func:`gather_swiglu_sharded` (qexp table slice)."""
+    lid, w = localize_expert_ids(idx, w, e_base, qt.wg.shape[0])
+    return gather_swiglu_q(x, qt, lid, w)
+
+
 @pallas_dispatch("flash_attention", extra_static=("causal",),
                  contract={"kind": "flash", "quantized": False})
 def flash_attention(q, k, v, causal: bool = True):

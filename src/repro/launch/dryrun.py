@@ -210,6 +210,91 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def run_serve_cell(arch: str, mesh_spec: str, *, n_slots: int = 128,
+                   s_max: int = 32_768, combine_wire_dtype: str = "fp32",
+                   cfg_override=None, tag: str = "") -> dict:
+    """Serve-mode (decode-shaped) dry-run on an ABSTRACT mesh.
+
+    Unlike the train/prefill/decode cells above, this does not compile:
+    1T-class serving programs are proven coherent by ``jax.eval_shape`` of
+    the expert-parallel slot-decode program (``ST.make_slot_decode_mesh``)
+    over an ``AbstractMesh`` — the same shard_map the real engine jits,
+    with expert tables partitioned on "model" and slots/KV on "data" —
+    and the performance surface comes from the ANALYTIC traffic model
+    (``H.decode_traffic_model`` at the mesh's EP/DP degrees), including
+    the all-to-all interconnect bytes that only exist on a mesh
+    (DESIGN.md §13). Works for dense configs too (no MoE ⇒ no a2a term ⇒
+    the record shows interconnect 0 by construction, not by omission)."""
+    import dataclasses
+
+    from repro.launch.mesh import make_abstract_mesh, parse_mesh_spec
+
+    cfg = cfg_override if cfg_override is not None else configs.get(arch)
+    shape, axes = parse_mesh_spec(mesh_spec)
+    amesh = make_abstract_mesh(shape, axes)
+    ep = int(dict(zip(axes, shape)).get("model", 1))
+    dp = int(dict(zip(axes, shape)).get("data", 1))
+    if n_slots % max(dp, 1):
+        raise ValueError(f"n_slots={n_slots} must divide over data={dp}")
+    if cfg.moe is not None:
+        # the engine's serving dispatch: EP engages on the gather path
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, dispatch="gather",
+            gather_max_tokens=max(cfg.moe.gather_max_tokens, n_slots)))
+
+    rec = {"arch": arch, "kind": "serve", "mesh": mesh_spec,
+           "chips": int(np.prod(shape)), "ep_degree": ep, "dp_degree": dp,
+           "n_slots": n_slots, "s_max": s_max,
+           "combine_wire_dtype": combine_wire_dtype, "tag": tag,
+           "ok": False}
+
+    p_specs = I.params_specs(cfg)
+    if ep > 1 and cfg.moe is not None:
+        SH.validate_ep_params(p_specs, amesh)
+    cache_specs = jax.eval_shape(
+        lambda: MD.init_slot_cache(cfg, n_slots, s_max))
+
+    from repro.models.numerics import set_activation_mesh
+    set_activation_mesh(None)   # shard_map body: no sharding constraints
+    t0 = time.perf_counter()
+    fn = ST.make_slot_decode_mesh(cfg, amesh, p_specs, cache_specs,
+                                  combine_wire_dtype=combine_wire_dtype)
+    tok = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    flag = jax.ShapeDtypeStruct((n_slots,), jnp.bool_)
+    logits, aux, out_cache = jax.eval_shape(
+        fn, p_specs, cache_specs, tok, flag, flag)
+    rec["t_trace_s"] = round(time.perf_counter() - t0, 2)
+    assert logits.shape == (n_slots, cfg.vocab_size), logits.shape
+    rec["logits_shape"] = list(logits.shape)
+
+    # per-device parameter bytes under the serving partition (expert tables
+    # /ep on "model", everything else replicated — the honest "fits?" term)
+    pspecs = SH.serve_param_pspecs(p_specs, amesh)
+    sizes = dict(zip(axes, shape))
+    param_b = 0.0
+    for leaf, spec in zip(jax.tree.leaves(p_specs), jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P))):
+        div = 1
+        for entry in spec:
+            for ax in ((entry,) if isinstance(entry, str) else entry or ()):
+                div *= sizes.get(ax, 1)
+        param_b += leaf.size * leaf.dtype.itemsize / div
+    kv_b = sum(l.size * l.dtype.itemsize
+               for l in jax.tree.leaves(cache_specs)) / max(dp, 1)
+    rec["mem_per_dev"] = {"params": int(param_b), "kv_cache": int(kv_b)}
+
+    # interconnect-aware modeled decode traffic at this mesh (mid-cache)
+    traffic = H.decode_traffic_model(
+        cfg, n_slots=n_slots, pos=s_max // 2, ep_degree=ep, dp_degree=dp,
+        combine_wire_dtype=combine_wire_dtype)
+    rec["modeled_traffic"] = traffic
+    rec["roofline"] = H.roofline_terms(
+        traffic["flops_per_token"], traffic["bytes_per_token"],
+        traffic["interconnect_bytes_per_token"])
+    rec["ok"] = True
+    return rec
+
+
 def all_cells():
     for arch in configs.ARCH_IDS:
         cfg = configs.get(arch)
@@ -228,11 +313,57 @@ def main():
     ap.add_argument("--compressed", default="",
                     help="M[:split] — dry-run the MergeMoE-compressed "
                          "variant (M merged experts in layers [split, L))")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve-mode (decode-shaped) dry-run: eval_shape "
+                         "the EP slot-decode program on an AbstractMesh "
+                         "given by --mesh, emit modeled traffic")
+    ap.add_argument("--mesh", default="data=16,model=16",
+                    help="serve-mode mesh spec (parse_mesh_spec form)")
+    ap.add_argument("--slots", type=int, default=128)
+    ap.add_argument("--s-max", type=int, default=32_768)
+    ap.add_argument("--wire", default="fp32", choices=("fp32", "int8"))
     ap.add_argument("--out", default=str(OUT_DIR))
     args = ap.parse_args()
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.serve:
+        cfg_override, comp_tag = None, ""
+        if args.compressed:
+            parts = args.compressed.split(":")
+            merged = int(parts[0])
+            split = int(parts[1]) if len(parts) > 1 else 0
+            cfg_override = configs.get(args.arch).compressed(merged, split)
+            comp_tag = f"__compressed{merged}"
+        mesh_tag = args.mesh.replace("=", "").replace(",", "_")
+        wire_tag = "" if args.wire == "fp32" else f"_{args.wire}"
+        name = (f"{configs.canonical(args.arch)}__serve_{mesh_tag}"
+                f"{wire_tag}{comp_tag}")
+        path = out_dir / f"{name}.json"
+        print(f"[run ] {name}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            rec = run_serve_cell(
+                args.arch, args.mesh, n_slots=args.slots, s_max=args.s_max,
+                combine_wire_dtype=args.wire, cfg_override=cfg_override,
+                tag=comp_tag.strip("_"))
+            rec["t_total_s"] = round(time.perf_counter() - t0, 1)
+            path.write_text(json.dumps(rec, indent=1))
+            t = rec["modeled_traffic"]
+            print(f"[ ok ] {name}: params/dev="
+                  f"{rec['mem_per_dev']['params']/2**30:.2f}GiB "
+                  f"expert_red={t['expert_stream_reduction']:.1f}x "
+                  f"ici/tok={t['interconnect_bytes_per_token']:.3e}B "
+                  f"({rec['t_total_s']}s)", flush=True)
+        except Exception as e:
+            rec = {"arch": args.arch, "kind": "serve", "mesh": args.mesh,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[FAIL] {name}: {type(e).__name__}: {str(e)[:200]}",
+                  flush=True)
+        return
 
     cells = []
     if args.all:

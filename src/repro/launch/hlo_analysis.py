@@ -394,11 +394,19 @@ def expected_distinct_experts(n_experts: int, draws: int) -> float:
     return n_experts * (1.0 - (1.0 - 1.0 / n_experts) ** draws)
 
 
+_ACT_BYTES = {"bf16": 2, "f16": 2, "f32": 4}
+_WIRE_BYTES = {"fp32": 4.0, "int8": 1.0}
+
+
 def decode_traffic_model(cfg, *, n_slots: int, pos: int,
                          weight_dtype: str = "bf16",
                          prefix_weight_dtype: str = "bf16",
                          tokens_per_slot: int = 1,
-                         kv_dtype: str = "bf16"
+                         kv_dtype: str = "bf16",
+                         ep_degree: int = 1,
+                         dp_degree: int = 1,
+                         combine_wire_dtype: str = "fp32",
+                         act_dtype: str = "bf16"
                          ) -> Dict[str, float]:
     """Modeled HBM bytes for ONE decode step of ``n_slots`` tokens at cache
     position ``pos`` (gather-dispatch serving path), per device.
@@ -426,6 +434,24 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     512/264 ≈ 1.94x stream reduction, which is what moves the needle at
     long contexts where the KV prefix dominates the step.
 
+    ``ep_degree`` / ``dp_degree`` model the EXPERT-PARALLEL serving mesh of
+    DESIGN.md §13 (all numbers stay per device): expert tables partition
+    ``ep_degree``-ways on "model" — each device holds ``live/ep`` tables
+    and streams only the distinct experts ITS shard's draws hit, which
+    under uniform routing is ``expected_distinct_experts(live, draws)/ep``
+    (each of the shard's ``draws`` hits a given local expert w.p.
+    ``1/live``) — while slots/KV partition ``dp_degree``-ways on "data".
+    Attention/norm/router/shared/head weights stay replicated and stream
+    in full on every device. The cost of the split is INTERCONNECT: per
+    MoE layer each device all-to-alls its ``T/ep`` local tokens' ``top_k``
+    activation rows to the owner shards (``(ep−1)/ep`` of the payload
+    crosses a link), receives the pair outputs back on a second all-to-all
+    (fp32 wire, or ~4x cheaper opt-in ``combine_wire_dtype='int8'``), and
+    all-gathers the combined token block — reported as
+    ``interconnect_bytes_per_step`` for the ``t_collective_s`` roofline
+    term (``ICI_BW``). Dense models (``cfg.moe is None``) have no a2a:
+    their interconnect term is 0 by construction.
+
     Returns a component breakdown plus ``bytes_per_token`` and
     ``flops_per_token``; feed those to :func:`roofline_terms` for the
     bandwidth-bound tok/s ceiling (``1 / t_memory_s``). Numbers target the
@@ -437,7 +463,17 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     pb = cfg.param_dtype.itemsize
     m = cfg.moe
     L = cfg.n_layers
-    draws = n_slots * tokens_per_slot * (m.top_k if m else 0)
+    ep = max(int(ep_degree), 1)
+    dp = max(int(dp_degree), 1)
+    if act_dtype not in _ACT_BYTES:
+        raise ValueError(f"act_dtype must be one of {sorted(_ACT_BYTES)}, "
+                         f"got {act_dtype!r}")
+    if combine_wire_dtype not in _WIRE_BYTES:
+        raise ValueError(f"combine_wire_dtype must be 'fp32' or 'int8', "
+                         f"got {combine_wire_dtype!r}")
+    # this device's data shard: its slots, its tokens, its routing draws
+    slots_dev = n_slots / dp
+    draws = slots_dev * tokens_per_slot * (m.top_k if m else 0)
 
     # per-layer live expert counts + storage dtype
     layers = []                                   # (live, dtype) per layer
@@ -450,13 +486,36 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
             layers += [(m.n_experts, weight_dtype)] * L
 
     moe_b = 0.0
+    moe_b_1dev = 0.0          # unsharded reference (ep=1, dp=1, all slots)
     router_b = 0.0
     shared_b = 0.0
+    draws_1dev = n_slots * tokens_per_slot * (m.top_k if m else 0)
     for live, wdt in layers:
+        # distinct LOCAL experts this device streams: each of the shard's
+        # draws hits a given local expert w.p. 1/live, and the device holds
+        # live/ep of them -> expected_distinct_experts(live, draws) / ep
         moe_b += (expected_distinct_experts(live, draws)
-                  * expert_bytes(cfg, wdt))
+                  * expert_bytes(cfg, wdt)) / ep
+        moe_b_1dev += (expected_distinct_experts(live, draws_1dev)
+                       * expert_bytes(cfg, wdt))
         router_b += cfg.d_model * m.n_experts * 4          # router is fp32
         shared_b += m.n_shared_experts * 3 * cfg.d_model * m.d_ff_expert * pb
+
+    # interconnect (EP all-to-all dataflow, DESIGN.md §13) — per device
+    act_b = _ACT_BYTES[act_dtype]
+    wire_b = _WIRE_BYTES[combine_wire_dtype]
+    a2a_dispatch = a2a_combine = ag_out = 0.0
+    if m is not None and ep > 1:
+        t_dev = slots_dev * tokens_per_slot        # tokens on this data shard
+        t_loc = t_dev / ep                         # ... on this model shard
+        n_moe_layers = float(len(layers))
+        cross = (ep - 1) / ep                      # payload crossing a link
+        a2a_dispatch = n_moe_layers * t_loc * m.top_k * cfg.d_model \
+            * act_b * cross
+        a2a_combine = n_moe_layers * t_loc * m.top_k * cfg.d_model \
+            * wire_b * cross
+        ag_out = n_moe_layers * t_dev * cfg.d_model * act_b * cross
+    interconnect_b = a2a_dispatch + a2a_combine + ag_out
 
     attn_b = float(L * cfg.attn_params_per_layer() * pb)
     if cfg.moe is None:
@@ -470,13 +529,18 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
     else:
         raise ValueError(f"kv_dtype must be 'bf16' or 'int8', got "
                          f"{kv_dtype!r}")
-    kv_b = float(L * n_slots * (pos + tokens_per_slot) * kv_row_b)
+    # KV shards with the slots on "data": each device streams its own
+    kv_b = float(L * slots_dev * (pos + tokens_per_slot) * kv_row_b)
 
     step = moe_b + router_b + shared_b + attn_b + head_b + kv_b
+    # per-device step bytes over GLOBAL tokens committed per step, so
+    # tok/s_system == HBM_BW / bytes_per_token holds on any mesh
     tokens = max(n_slots * tokens_per_slot, 1)
     return {
         "n_slots": float(n_slots),
         "pos": float(pos),
+        "ep_degree": float(ep),
+        "dp_degree": float(dp),
         "moe_expert_bytes_per_step": moe_b,
         "router_bytes_per_step": router_b,
         "shared_bytes_per_step": shared_b,
@@ -487,6 +551,17 @@ def decode_traffic_model(cfg, *, n_slots: int, pos: int,
         "bytes_per_step": step,
         "bytes_per_token": step / tokens,
         "moe_expert_bytes_per_token": moe_b / tokens,
+        # EP interconnect terms (0 on a single device and for dense models)
+        "a2a_dispatch_bytes_per_step": a2a_dispatch,
+        "a2a_combine_bytes_per_step": a2a_combine,
+        "allgather_bytes_per_step": ag_out,
+        "interconnect_bytes_per_step": interconnect_b,
+        "interconnect_bytes_per_token": interconnect_b / tokens,
+        # how much LESS expert table each device streams vs one device
+        # serving the whole batch (>= ep under uniform routing: the split
+        # plus fewer draws per shard); the serve-bench gate checks this
+        "expert_stream_reduction": (moe_b_1dev / moe_b) if moe_b > 0
+        else 1.0,
         # 2 FLOPs per active weight per token (napkin 2·N_active·D)
         "flops_per_token": 2.0 * cfg.param_count(active_only=True),
     }
@@ -498,7 +573,10 @@ def spec_decode_traffic_model(cfg, draft_cfg, *, k_draft: int, n_slots: int,
                               prefix_weight_dtype: str = "bf16",
                               draft_weight_dtype: str = "bf16",
                               draft_prefix_weight_dtype: str = "bf16",
-                              kv_dtype: str = "bf16"
+                              kv_dtype: str = "bf16",
+                              ep_degree: int = 1,
+                              dp_degree: int = 1,
+                              combine_wire_dtype: str = "fp32"
                               ) -> Dict[str, float]:
     """Modeled HBM bytes per COMMITTED token for one speculative
     draft/verify round (DESIGN.md §10).
@@ -522,17 +600,21 @@ def spec_decode_traffic_model(cfg, draft_cfg, *, k_draft: int, n_slots: int,
     saturation (``expected_distinct_experts`` ≈ all live experts), which
     is why callers model deployment ``n_slots``, not the smoke batch.
     """
+    mesh_kw = dict(ep_degree=ep_degree, dp_degree=dp_degree,
+                   combine_wire_dtype=combine_wire_dtype)
     draft = decode_traffic_model(
         draft_cfg, n_slots=n_slots, pos=pos,
         weight_dtype=draft_weight_dtype,
-        prefix_weight_dtype=draft_prefix_weight_dtype, kv_dtype=kv_dtype)
+        prefix_weight_dtype=draft_prefix_weight_dtype, kv_dtype=kv_dtype,
+        **mesh_kw)
     verify = decode_traffic_model(
         cfg, n_slots=n_slots, pos=pos, weight_dtype=weight_dtype,
         prefix_weight_dtype=prefix_weight_dtype,
-        tokens_per_slot=k_draft + 1, kv_dtype=kv_dtype)
+        tokens_per_slot=k_draft + 1, kv_dtype=kv_dtype, **mesh_kw)
     baseline = decode_traffic_model(
         cfg, n_slots=n_slots, pos=pos, weight_dtype=weight_dtype,
-        prefix_weight_dtype=prefix_weight_dtype, kv_dtype=kv_dtype)
+        prefix_weight_dtype=prefix_weight_dtype, kv_dtype=kv_dtype,
+        **mesh_kw)
 
     draft_round = k_draft * draft["bytes_per_step"]
     round_bytes = draft_round + verify["bytes_per_step"]
@@ -551,6 +633,9 @@ def spec_decode_traffic_model(cfg, draft_cfg, *, k_draft: int, n_slots: int,
         "verify_bytes_per_round": verify["bytes_per_step"],
         "bytes_per_round": round_bytes,
         "bytes_per_token": bytes_per_token,
+        "interconnect_bytes_per_round":
+            k_draft * draft["interconnect_bytes_per_step"]
+            + verify["interconnect_bytes_per_step"],
         "flops_per_token": flops,
         "baseline_bytes_per_token": baseline["bytes_per_token"],
         # bandwidth-roofline tok/s ratio, spec vs plain full-model decode

@@ -231,6 +231,81 @@ def cache_pspecs(cache_shapes, mesh):
 
 
 # ---------------------------------------------------------------------------
+# expert-parallel serving (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# Sharded-decode param layout: ONLY the expert tables (and their int8 qexp
+# leaves) are partitioned — expert dim over "model" — and everything else is
+# replicated. Attention/embeddings/router run replicated inside the decode
+# shard_map (their per-token math is what the data axis parallelizes), so
+# FSDP-style weight sharding would force gathers inside the block. Literal
+# axis names (not "M"/"D" tokens) keep the layout independent of the
+# train-time parallelism profile.
+SERVE_RULES: List[Tuple[str, Tuple]] = [
+    (r"moe/(wg|wu|wd)$",     ("model", None, None)),   # [.., E, ., .]
+    (r"moe/qexp/(wg|wu|wd)$", ("model", None, None)),
+    (r"moe/qexp/\w+_scale$", ("model", None, None)),
+]
+
+
+def serve_param_pspecs(shapes_tree, mesh):
+    """Param pspecs for the EP decode shard_map: expert tables over
+    "model", the rest replicated. Same tree feeds device_put placement and
+    the shard_map in_specs, so layout and program always agree."""
+    return params_pspecs(shapes_tree, mesh, rules=SERVE_RULES)
+
+
+def validate_ep_params(shapes_tree, mesh) -> None:
+    """Fail fast if any expert-table leaf can't split over "model": a
+    silently replicated table would make every shard treat its full copy
+    as the LOCAL slice (owner = id // E_local collapses to shard 0)."""
+    ep = int(mesh.shape.get("model", 1))
+    if ep <= 1:
+        return
+    problems = []
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for rx, _ in SERVE_RULES:
+            if re.search(rx, ps):
+                # expert dim is the leaf's first non-stack axis: templates
+                # are right-aligned 3-dim, so it's shape[-3]
+                if leaf.shape[-3] % ep != 0:
+                    problems.append(f"{ps}: {leaf.shape[-3]} experts % "
+                                    f"model={ep} != 0")
+                return
+    jax.tree_util.tree_map_with_path(one, shapes_tree)
+    if problems:
+        raise ValueError(
+            "expert tables not divisible by the EP degree: "
+            + "; ".join(problems))
+
+
+def slot_cache_pspecs(cache_shapes, mesh):
+    """Serve-cache pspecs (dense slot cache OR paged pool, DESIGN.md §13):
+    slots ride the "data" axis — dense k/v [L, B, S, nkv, hd] and the block
+    pools [L, nb, bs, nkv, hd] shard axis 1, per-slot ``pos`` shards with
+    them — while the block table stays REPLICATED (host-written global ids;
+    the mesh step wrappers localize it in-program). KV is replicated over
+    "model", so attention never crosses the wire."""
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        if name == "tab":
+            return P()
+        if name == "pos":
+            return P("data")
+        return P(None, "data")
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def slot_vector_pspec() -> P:
+    """Per-slot engine vectors (token/active/remaining/eos/keys/poison):
+    sharded over "data" with the slots."""
+    return P("data")
+
+
+# ---------------------------------------------------------------------------
 # calibration capture buffers (mesh-parallel compression, DESIGN.md §6)
 # ---------------------------------------------------------------------------
 

@@ -329,3 +329,293 @@ def make_slot_admit_spec_paged(cfg: ModelConfig, draft_cfg: ModelConfig,
     the same suffix group into their own block pools (one shared table)."""
     from repro.serving.spec import build_slot_admit_spec_paged
     return build_slot_admit_spec_paged(cfg, draft_cfg, temperature)
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel mesh serving (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The ``*_mesh`` builders wrap the single-device slot programs above in a
+# ``shard_map`` over the engine mesh: expert tables partitioned on "model"
+# (the MoE layers switch to the all-to-all pair-exchange dispatch of
+# ``models/moe_ep.py``), slots + KV partitioned on "data" so attention never
+# crosses the wire. Per-slot vectors arrive sharded; admission groups arrive
+# replicated and localize their slot ids in-program; the paged block table
+# is host-written in GLOBAL block ids and localized in-program on the way in
+# (never written by the device, so the wrappers hand the original back out).
+
+
+def ep_serve_cfg(cfg: ModelConfig, mesh,
+                 combine_wire_dtype: str = "fp32") -> ModelConfig:
+    """Config view for traces INSIDE the decode shard_map: bakes the EP
+    degree/axis (and combine wire dtype) into ``cfg.moe`` so the lazily
+    traced model functions pick the EP dispatch without any global state.
+    Identity for dense models and 1-wide "model" axes."""
+    if cfg.moe is None:
+        return cfg
+    ep = int(mesh.shape.get("model", 1))
+    if ep <= 1:
+        return cfg
+    import dataclasses
+    return cfg.replace(moe=dataclasses.replace(
+        cfg.moe, ep_axis="model", ep_degree=ep,
+        combine_wire_dtype=combine_wire_dtype))
+
+
+def _localize_slots(slots: jax.Array, n_local: int):
+    """Global slot ids -> this data shard's local ids. Foreign (and pad)
+    rows map to ``n_local`` — out of bounds for the local cache, so their
+    scatters drop; as a paged-table row index it is the local sentinel row.
+    Returns (local_slots, mine_mask)."""
+    d0 = jax.lax.axis_index("data") * n_local
+    mine = (slots >= d0) & (slots < d0 + n_local)
+    return jnp.where(mine, slots - d0, n_local).astype(slots.dtype), mine
+
+
+def _localize_paged_tab(cache: dict, dp: int):
+    """Global block table -> this data shard's local view.
+
+    The allocator partitions blocks so a shard's slots reference ONLY its
+    own block range ``[di*nb_l, (di+1)*nb_l)`` (serving.paging, n_shards);
+    entries rebase to local ids, the global sentinel (>= nb_global) maps to
+    the local one (nb_l), and a local sentinel row is appended for foreign/
+    pad slot ids. Dense caches pass through. Returns (cache, original_tab —
+    None when nothing was localized)."""
+    if "kp" not in cache:
+        return cache, None
+    tab = cache["tab"]                              # [n_slots + 1, mb]
+    nb_l = cache["kp"].shape[1]
+    n_local = cache["pos"].shape[0]
+    di = jax.lax.axis_index("data")
+    rows = jax.lax.dynamic_slice_in_dim(tab, di * n_local, n_local, axis=0)
+    loc = jnp.where(rows >= nb_l * dp, nb_l, rows - di * nb_l)
+    loc = jnp.concatenate(
+        [loc, jnp.full((1, tab.shape[1]), nb_l, tab.dtype)], axis=0)
+    return dict(cache, tab=loc.astype(tab.dtype)), tab
+
+
+def _restore_tab(cache: dict, tab0):
+    return cache if tab0 is None else dict(cache, tab=tab0)
+
+
+def _mesh_specs(mesh, params, cache):
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as SH
+    return (SH.serve_param_pspecs(params, mesh),
+            SH.slot_cache_pspecs(cache, mesh),
+            P("data"), P())
+
+
+def make_slot_decode_mesh(cfg: ModelConfig, mesh, params, cache,
+                          combine_wire_dtype: str = "fp32") -> Callable:
+    """Mesh form of :func:`make_slot_decode` — same signature and contract,
+    args per-slot-sharded over "data" (``params``/``cache`` are template
+    trees used only for spec derivation)."""
+    from jax.experimental.shard_map import shard_map
+    cfg_l = ep_serve_cfg(cfg, mesh, combine_wire_dtype)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+    dp = int(mesh.shape.get("data", 1))
+
+    def fn(params, cache, token, active, poison):
+        cache, tab0 = _localize_paged_tab(cache, dp)
+        logits, cache = MD.decode_step_slots(cfg_l, params, cache, token,
+                                             active)
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        finite = jnp.all(jnp.isfinite(logits), axis=-1).astype(jnp.int32)
+        return logits, jnp.stack([greedy, finite], axis=-1), \
+            _restore_tab(cache, tab0)
+
+    return shard_map(fn, mesh=mesh, in_specs=(pspec, cspec, v, v, v),
+                     out_specs=(v, v, cspec), check_rep=False)
+
+
+def make_slot_decode_multi_mesh(cfg: ModelConfig, k_steps: int,
+                                temperature: float, mesh, params, cache,
+                                combine_wire_dtype: str = "fp32") -> Callable:
+    """Mesh form of :func:`make_slot_decode_multi`. The scan's early-exit
+    ``lax.cond`` predicate is data-row-consistent (``active`` is sharded on
+    "data", replicated across "model"), and every EP collective runs on the
+    "model" axis only — so all members of a collective group always take
+    the same branch."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    cfg_l = ep_serve_cfg(cfg, mesh, combine_wire_dtype)
+    inner = make_slot_decode_multi(cfg_l, k_steps, temperature)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+    dp = int(mesh.shape.get("data", 1))
+
+    def fn(params, cache, token, active, remaining, eos, keys, poison):
+        cache, tab0 = _localize_paged_tab(cache, dp)
+        block, act, cache = inner(params, cache, token, active, remaining,
+                                  eos, keys, poison)
+        return block, act, _restore_tab(cache, tab0)
+
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(pspec, cspec, v, v, v, v, v, v),
+                     out_specs=(P(None, "data"), v, cspec), check_rep=False)
+
+
+def make_slot_admit_mesh(cfg: ModelConfig, mesh, params, cache) -> Callable:
+    """Mesh form of :func:`make_slot_admit`: the group's tokens arrive
+    REPLICATED (every shard runs the same prefill — the forward reads
+    nothing from the cache, so its logits are exact everywhere, EP splitting
+    the MoE work across "model"); only the KV/pos scatters are localized so
+    each data shard keeps its own slots."""
+    from jax.experimental.shard_map import shard_map
+    cfg_l = ep_serve_cfg(cfg, mesh)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+
+    def fn(params, cache, tokens, lengths, slots):
+        logits, k_new, v_new = MD.prefill_slots(cfg_l, params, tokens,
+                                                lengths)
+        slots_l, _ = _localize_slots(slots, cache["pos"].shape[0])
+        cache = MD.insert_slots(cache, slots_l, k_new, v_new, lengths)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, greedy, cache
+
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(pspec, cspec, rep, rep, rep),
+                     out_specs=(rep, rep, cspec), check_rep=False)
+
+
+def make_slot_admit_paged_mesh(cfg: ModelConfig, mesh, params,
+                               cache) -> Callable:
+    """Mesh form of :func:`make_slot_admit_paged`. Unlike dense admission,
+    the paged forward READS the pool (shared-prefix rows at ``pos0 > 0``),
+    which only the slot-owning data shard holds — foreign shards compute
+    finite garbage for those rows. Owner rows are masked in, summed over
+    "data" (adding exact fp zeros), and the greedy lane recomputed from the
+    reconciled logits."""
+    from jax.experimental.shard_map import shard_map
+    cfg_l = ep_serve_cfg(cfg, mesh)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+    dp = int(mesh.shape.get("data", 1))
+
+    def fn(params, cache, tokens, lengths, slots, pos0):
+        cache, tab0 = _localize_paged_tab(cache, dp)
+        slots_l, mine = _localize_slots(slots, cache["pos"].shape[0])
+        logits, cache = MD.admit_slots_paged(cfg_l, params, cache, tokens,
+                                             lengths, slots_l, pos0)
+        if dp > 1:
+            logits = jax.lax.psum(
+                jnp.where(mine[:, None], logits, 0.0), "data")
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, greedy, _restore_tab(cache, tab0)
+
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(pspec, cspec, rep, rep, rep, rep),
+                     out_specs=(rep, rep, cspec), check_rep=False)
+
+
+def make_slot_decode_spec_mesh(cfg: ModelConfig, draft_cfg: ModelConfig,
+                               k_draft: int, temperature: float, mesh,
+                               params, draft_params, cache, draft_cache,
+                               combine_wire_dtype: str = "fp32") -> Callable:
+    """Mesh form of :func:`make_slot_decode_spec`: one fused draft/verify
+    round with BOTH models' expert tables EP-sharded (draft included — the
+    compressed tables divide the same way) and both caches sharded with the
+    slots. The shared paged block table is localized once per cache."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.serving.spec import build_slot_decode_spec
+    cfg_l = ep_serve_cfg(cfg, mesh, combine_wire_dtype)
+    dcfg_l = ep_serve_cfg(draft_cfg, mesh, combine_wire_dtype)
+    inner = build_slot_decode_spec(cfg_l, dcfg_l, k_draft, temperature)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+    from repro.launch import sharding as SH
+    dpspec = SH.serve_param_pspecs(draft_params, mesh)
+    dcspec = SH.slot_cache_pspecs(draft_cache, mesh)
+    dp = int(mesh.shape.get("data", 1))
+
+    def fn(params, draft_params, cache, draft_cache, token, active,
+           remaining, eos, keys, poison):
+        cache, tab0 = _localize_paged_tab(cache, dp)
+        draft_cache, dtab0 = _localize_paged_tab(draft_cache, dp)
+        block, still, cache, draft_cache = inner(
+            params, draft_params, cache, draft_cache, token, active,
+            remaining, eos, keys, poison)
+        return (block, still, _restore_tab(cache, tab0),
+                _restore_tab(draft_cache, dtab0))
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(pspec, dpspec, cspec, dcspec, v, v, v, v, v, v),
+        out_specs=(P(None, "data"), v, cspec, dcspec), check_rep=False)
+
+
+def make_slot_admit_spec_mesh(cfg: ModelConfig, draft_cfg: ModelConfig,
+                              temperature: float, mesh, params, draft_params,
+                              cache, draft_cache) -> Callable:
+    """Mesh form of :func:`make_slot_admit_spec` (dense caches): replicated
+    dual prefill, localized scatters — the :func:`make_slot_admit_mesh`
+    story applied to both models."""
+    from jax.experimental.shard_map import shard_map
+    from repro.serving.spec import build_slot_admit_spec
+    cfg_l = ep_serve_cfg(cfg, mesh)
+    dcfg_l = ep_serve_cfg(draft_cfg, mesh)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+    from repro.launch import sharding as SH
+    dpspec = SH.serve_param_pspecs(draft_params, mesh)
+    dcspec = SH.slot_cache_pspecs(draft_cache, mesh)
+
+    def fn(params, draft_params, cache, draft_cache, tokens, lengths, slots,
+           keys):
+        n_local = cache["pos"].shape[0]
+        slots_l, _ = _localize_slots(slots, n_local)
+        logits, k_new, v_new = MD.prefill_slots(cfg_l, params, tokens,
+                                                lengths)
+        cache = MD.insert_slots(cache, slots_l, k_new, v_new, lengths)
+        dlogits, dk, dv = MD.prefill_slots(dcfg_l, draft_params, tokens,
+                                           lengths)
+        del dlogits
+        draft_cache = MD.insert_slots(draft_cache, slots_l, dk, dv, lengths)
+        first = sample_tokens(logits, temperature, keys, lengths)
+        return logits, first, cache, draft_cache
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(pspec, dpspec, cspec, dcspec, rep, rep, rep, rep),
+        out_specs=(rep, rep, cspec, dcspec), check_rep=False)
+
+
+def make_slot_admit_spec_paged_mesh(cfg: ModelConfig, draft_cfg: ModelConfig,
+                                    temperature: float, mesh, params,
+                                    draft_params, cache,
+                                    draft_cache) -> Callable:
+    """Mesh form of :func:`make_slot_admit_spec_paged`: both pools admit the
+    localized suffix group; logits reconcile over "data" (the
+    :func:`make_slot_admit_paged_mesh` masking) and the first token is
+    re-sampled from the reconciled logits so it is exact on every shard."""
+    from jax.experimental.shard_map import shard_map
+    from repro.serving.spec import build_slot_admit_spec_paged
+    cfg_l = ep_serve_cfg(cfg, mesh)
+    dcfg_l = ep_serve_cfg(draft_cfg, mesh)
+    pspec, cspec, v, rep = _mesh_specs(mesh, params, cache)
+    from repro.launch import sharding as SH
+    dpspec = SH.serve_param_pspecs(draft_params, mesh)
+    dcspec = SH.slot_cache_pspecs(draft_cache, mesh)
+    dp = int(mesh.shape.get("data", 1))
+
+    def fn(params, draft_params, cache, draft_cache, tokens, lengths, slots,
+           pos0, keys):
+        cache, tab0 = _localize_paged_tab(cache, dp)
+        draft_cache, dtab0 = _localize_paged_tab(draft_cache, dp)
+        slots_l, mine = _localize_slots(slots, cache["pos"].shape[0])
+        logits, cache = MD.admit_slots_paged(cfg_l, params, cache, tokens,
+                                             lengths, slots_l, pos0)
+        _dl, draft_cache = MD.admit_slots_paged(
+            dcfg_l, draft_params, draft_cache, tokens, lengths, slots_l,
+            pos0)
+        del _dl
+        if dp > 1:
+            logits = jax.lax.psum(
+                jnp.where(mine[:, None], logits, 0.0), "data")
+        first = sample_tokens(logits, temperature, keys, pos0 + lengths)
+        return (logits, first, _restore_tab(cache, tab0),
+                _restore_tab(draft_cache, dtab0))
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(pspec, dpspec, cspec, dcspec, rep, rep, rep, rep, rep),
+        out_specs=(rep, rep, cspec, dcspec), check_rep=False)

@@ -36,6 +36,18 @@ class MoEConfig:
     # token-count ceiling for the gather specialization under
     # dispatch='gather' (the serving engine raises it to cover n_slots)
     gather_max_tokens: int = 8
+    # Expert parallelism (serving; DESIGN.md §13). ``ep_axis`` names the
+    # mesh axis the expert tables are partitioned over and must only be set
+    # on configs traced INSIDE a shard_map over that axis; ``ep_degree`` is
+    # the static partition count (tables hold n_real/ep_degree rows per
+    # shard). Defaults keep every existing config / artifact single-device.
+    ep_axis: Optional[str] = None
+    ep_degree: int = 1
+    # Wire dtype for the EP combine step: 'fp32' returns per-pair outputs
+    # via all-to-all (bitwise vs single device); 'int8' all-reduces the
+    # pair table through distributed.compressed_psum (tolerance-gated).
+    combine_wire_dtype: str = "fp32"
+    combine_wire_seed: int = 0
 
 
 @dataclass(frozen=True)

@@ -339,7 +339,18 @@ def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
     wf = w.reshape(T, m.top_k)
     rf = ridx.reshape(T, m.top_k)
 
-    if m.dispatch == "gather":
+    if m.ep_axis is not None and m.ep_degree > 1 \
+            and m.dispatch in ("gather", "ragged"):
+        # Expert-parallel dispatch (DESIGN.md §13): tables are sharded over
+        # the ``ep_axis`` mesh axis and this trace is inside a shard_map.
+        # The combine-mode selection mirrors the single-device rule below
+        # (T here is the per-data-shard slice — smaller than the global
+        # count, so a single-device gather-shaped call stays gather-shaped).
+        from repro.models.moe_ep import moe_apply_ep
+        gather_mode = (m.dispatch == "gather" and S == 1
+                       and T <= m.gather_max_tokens)
+        y = moe_apply_ep(cfg, p, xf, wf, rf, gather_mode)
+    elif m.dispatch == "gather":
         # trace-time selection (shapes are static, so each jit
         # specialization picks exactly one path): gather only for
         # decode-SHAPED calls — one token per sequence (S == 1) and at most

@@ -203,6 +203,25 @@ class EngineConfig:
     # backoff base between attempts (0 = retry immediately; tests keep 0)
     device_retries: int = 2
     retry_backoff_s: float = 0.0
+    # ---- expert-parallel mesh serving (DESIGN.md §13) ----
+    # mesh spec for sharded decode (``launch.mesh.parse_mesh_spec`` form,
+    # e.g. "data=2,model=2"). None serves single-device (the default). The
+    # "model" axis EP-shards the expert tables — MoE layers switch to the
+    # all-to-all pair-exchange dispatch of ``models/moe_ep`` — and the
+    # "data" axis shards slots + KV, so attention never crosses the wire.
+    # Token-for-token identical to the single-device engine under the
+    # default fp32 combine wire.
+    mesh: Optional[str] = None
+    # EP combine-wire dtype: "fp32" (bitwise-exact return all-to-all) or
+    # "int8" (``distributed.compressed_psum`` of the pair-output table —
+    # roughly 4x less combine wire, tolerance-gated instead of bitwise)
+    combine_wire_dtype: str = "fp32"
+    # ---- periodic background snapshots (§12) ----
+    # > 0: persist :meth:`Engine.save_snapshot` to ``snapshot_dir`` every N
+    # engine steps (as counted by the step clock), so a crash loses at most
+    # N steps of committed work; 0 disables
+    snapshot_every_steps: int = 0
+    snapshot_dir: Optional[str] = None
 
 
 class Engine:
@@ -247,11 +266,46 @@ class Engine:
                              f"'shed_expired', got {ec.backpressure!r}")
         if ec.max_pending < 0 or ec.device_retries < 0:
             raise ValueError("max_pending and device_retries must be >= 0")
+        if ec.combine_wire_dtype not in ("fp32", "int8"):
+            raise ValueError(f"combine_wire_dtype must be 'fp32' or 'int8', "
+                             f"got {ec.combine_wire_dtype!r}")
+        if ec.snapshot_every_steps is None:    # None == 0 == disabled
+            ec.snapshot_every_steps = 0
+        if ec.snapshot_every_steps < 0:
+            raise ValueError("snapshot_every_steps must be >= 0")
+        if ec.snapshot_every_steps > 0 and not ec.snapshot_dir:
+            raise ValueError("snapshot_every_steps > 0 requires snapshot_dir")
         self.cfg = cfg
-        mesh = make_host_mesh()
-        set_activation_mesh(mesh)
+
+        # ---- mesh-sharded serving (DESIGN.md §13) ----
+        # ec.mesh builds an explicit (data, model) device mesh and swaps
+        # every device program for its shard_map'd ``steps.make_*_mesh``
+        # form. Activation sharding constraints (numerics.constrain) are
+        # GSPMD-only and illegal inside shard_map bodies, so mesh mode
+        # clears the activation mesh — the mesh programs manage layout
+        # explicitly via their in/out specs.
+        self._mesh = None
+        if ec.mesh is not None:
+            from repro.launch.mesh import parse_mesh_spec
+            shape, axes = parse_mesh_spec(ec.mesh)
+            self._mesh = jax.make_mesh(shape, axes)
+            set_activation_mesh(None)
+        else:
+            mesh = make_host_mesh()
+            set_activation_mesh(mesh)
+        self._dp = (1 if self._mesh is None
+                    else int(self._mesh.shape.get("data", 1)))
+        if ec.n_slots % self._dp:
+            raise ValueError(
+                f"n_slots={ec.n_slots} must divide evenly over the mesh "
+                f"'data' axis ({self._dp}): slots and their KV shard there")
         self.params = params if params is not None else MD.init(
             cfg, jax.random.PRNGKey(ec.seed))
+        if self._mesh is not None:
+            from repro.launch import sharding as SH
+            SH.validate_ep_params(self.params, self._mesh)
+            self.params = jax.device_put(self.params, SH.named(
+                SH.serve_param_pspecs(self.params, self._mesh), self._mesh))
 
         # host<->device crossing telemetry: device_calls counts jitted
         # dispatches, host_syncs counts device->host readbacks, tokens_out
@@ -285,36 +339,57 @@ class Engine:
         if ec.kv_layout == "paged":
             n_blocks = ec.kv_blocks if ec.kv_blocks > 0 else (
                 ec.n_slots * ec.s_max // ec.kv_block)
-            # the allocator validates s_max % kv_block; init_paged_cache
-            # validates kv_dtype
+            # the allocator validates s_max % kv_block (and, sharded, that
+            # blocks and slots split evenly over the data axis so every
+            # slot's reservation stays inside its shard's block range);
+            # init_paged_cache validates kv_dtype
             self._alloc = PagedAllocator(
                 n_slots=ec.n_slots, n_blocks=n_blocks,
-                block_size=ec.kv_block, s_max=ec.s_max)
+                block_size=ec.kv_block, s_max=ec.s_max, n_shards=self._dp)
             self.cache = MD.init_paged_cache(
                 cfg, ec.n_slots, ec.s_max, n_blocks=n_blocks,
                 block_size=ec.kv_block, kv_dtype=ec.kv_dtype)
             self._tab_dirty = True
-            admit_fn = ST.make_slot_admit_paged(cfg)
+            admit_fn = (ST.make_slot_admit_paged(cfg)
+                        if self._mesh is None else None)
         elif ec.kv_layout == "dense":
             if ec.kv_dtype != "bf16":
                 raise ValueError(
                     f"kv_dtype={ec.kv_dtype!r} requires kv_layout='paged' "
                     f"(the dense slot cache stores the model dtype)")
             self.cache = MD.init_slot_cache(cfg, ec.n_slots, ec.s_max)
-            admit_fn = ST.make_slot_admit(cfg)
+            admit_fn = (ST.make_slot_admit(cfg)
+                        if self._mesh is None else None)
         else:
             raise ValueError(f"kv_layout must be 'dense' or 'paged', got "
                              f"{ec.kv_layout!r}")
+        if self._mesh is not None:
+            self.cache = self._place_cache(self.cache)
+            admit_fn = (
+                ST.make_slot_admit_paged_mesh(cfg, self._mesh, self.params,
+                                              self.cache)
+                if self._alloc is not None else
+                ST.make_slot_admit_mesh(cfg, self._mesh, self.params,
+                                        self.cache))
         # admission legitimately compiles one specialization per
         # (pad shape, pow2-group) pair; decode entry points get exactly ONE
         self._admit_step = self._guard.wrap_jit(
             "slot_admit", admit_fn, expected_traces=admit_budget)
+        if self._mesh is not None:
+            decode_fn = ST.make_slot_decode_mesh(
+                cfg, self._mesh, self.params, self.cache,
+                ec.combine_wire_dtype)
+            multi_fn = ST.make_slot_decode_multi_mesh(
+                cfg, ec.decode_block, ec.temperature, self._mesh,
+                self.params, self.cache, ec.combine_wire_dtype)
+        else:
+            decode_fn = ST.make_slot_decode(cfg)
+            multi_fn = ST.make_slot_decode_multi(cfg, ec.decode_block,
+                                                 ec.temperature)
         self._decode = self._guard.wrap_jit(
-            "slot_decode", ST.make_slot_decode(cfg), expected_traces=1)
+            "slot_decode", decode_fn, expected_traces=1)
         self._decode_multi = self._guard.wrap_jit(
-            "slot_decode_multi",
-            ST.make_slot_decode_multi(cfg, ec.decode_block, ec.temperature),
-            expected_traces=1)
+            "slot_decode_multi", multi_fn, expected_traces=1)
 
         # ---- speculative decoding (dual artifact, DESIGN.md §10) ----
         self.draft_artifact: Optional[dict] = None
@@ -337,6 +412,13 @@ class Engine:
             if ec.spec_k < 1:
                 raise ValueError("spec_k must be >= 1")
             self.draft_cfg, self.draft_params = draft_cfg, draft_params
+            if self._mesh is not None:
+                from repro.launch import sharding as SH
+                SH.validate_ep_params(self.draft_params, self._mesh)
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    SH.named(SH.serve_param_pspecs(self.draft_params,
+                                                   self._mesh), self._mesh))
             if self._alloc is not None:
                 # the draft pool mirrors the full pool's block geometry and
                 # shares the ONE allocator table (paging.PagedAllocator
@@ -356,11 +438,27 @@ class Engine:
             # aliases) so the lint analyzer's maker-root walk sees the
             # closure bodies; one spec round per trace, same budget as the
             # single-model entries
+            if self._mesh is not None:
+                self.cache_draft = self._place_cache(self.cache_draft)
+                admit_spec_fn = (
+                    ST.make_slot_admit_spec_paged_mesh(
+                        cfg, draft_cfg, ec.temperature, self._mesh,
+                        self.params, self.draft_params, self.cache,
+                        self.cache_draft)
+                    if self._alloc is not None else
+                    ST.make_slot_admit_spec_mesh(
+                        cfg, draft_cfg, ec.temperature, self._mesh,
+                        self.params, self.draft_params, self.cache,
+                        self.cache_draft))
+                decode_spec_fn = ST.make_slot_decode_spec_mesh(
+                    cfg, draft_cfg, ec.spec_k, ec.temperature, self._mesh,
+                    self.params, self.draft_params, self.cache,
+                    self.cache_draft, ec.combine_wire_dtype)
+            else:
+                decode_spec_fn = build_slot_decode_spec(
+                    cfg, draft_cfg, ec.spec_k, ec.temperature)
             self._decode_spec = self._guard.wrap_jit(
-                "slot_decode_spec",
-                build_slot_decode_spec(cfg, draft_cfg, ec.spec_k,
-                                       ec.temperature),
-                expected_traces=1)
+                "slot_decode_spec", decode_spec_fn, expected_traces=1)
             self._admit_spec = self._guard.wrap_jit(
                 "slot_admit_spec", admit_spec_fn,
                 expected_traces=admit_budget)
@@ -397,6 +495,20 @@ class Engine:
         self._slot_keys = np.zeros((ec.n_slots, 2), np.uint32)
         # plan/report extras when booted via from_checkpoint
         self.artifact: Optional[dict] = None
+        # step count at the last periodic snapshot (snapshot_every_steps)
+        self._last_snap = 0
+
+    def _place_cache(self, cache):
+        """Device-place a KV cache tree on the engine mesh per the serve
+        layout (slots on "data"; block table replicated)."""
+        from repro.launch import sharding as SH
+        return jax.device_put(cache, SH.named(
+            SH.slot_cache_pspecs(cache, self._mesh), self._mesh))
+
+    @property
+    def mesh(self):
+        """The serving device mesh (None in single-device mode)."""
+        return self._mesh
 
     # ------------------------------------------------------------------ API
 
@@ -487,6 +599,19 @@ class Engine:
                                             "host": snap["host"]}},
                          keep=0)
 
+    def _maybe_snapshot(self) -> None:
+        """Periodic background checkpointing (§12): with
+        ``snapshot_every_steps > 0``, persist the full engine snapshot to
+        ``snapshot_dir`` through the staged-commit checkpoint path whenever
+        the step clock has advanced that far since the last one. Called at
+        every step boundary, so a crash between snapshots loses at most one
+        interval of committed work — :meth:`restore` on the directory
+        resumes token-for-token."""
+        every = self.ec.snapshot_every_steps
+        if every > 0 and self._step_count - self._last_snap >= every:
+            self.save_snapshot(self.ec.snapshot_dir)
+            self._last_snap = self._step_count
+
     @classmethod
     def restore(cls, snap, cfg=None, params=None, draft_cfg=None,
                 draft_params=None, faults: Optional[FaultPlan] = None,
@@ -563,6 +688,13 @@ class Engine:
         if self.cache_draft is not None:
             self.cache_draft = jax.tree.map(jnp.asarray,
                                             arrays["cache_draft"])
+        if self._mesh is not None:
+            self.cache = self._place_cache(self.cache)
+            if self.cache_draft is not None:
+                self.cache_draft = self._place_cache(self.cache_draft)
+        # the restored step count is the new snapshot epoch — without this a
+        # periodic-snapshot engine would re-snapshot at its very first step
+        self._last_snap = self._step_count
 
     @property
     def n_active(self) -> int:
@@ -776,6 +908,7 @@ class Engine:
                     self._evict(slot, now)
                     finished.append(req)
         self._step_count += 1
+        self._maybe_snapshot()
         self._raise_if_strict(quarantined)
         return finished
 
@@ -791,6 +924,7 @@ class Engine:
             # nothing to decode: advance one step so arrival admission keeps
             # fine-grained timing while the engine drains the future queue
             self._step_count += 1
+            self._maybe_snapshot()
             return finished
         n = self.ec.n_slots
         rem = np.zeros((n,), np.int32)
@@ -843,6 +977,7 @@ class Engine:
                     finished.append(req)
                     break
         self._step_count += K
+        self._maybe_snapshot()
         self._raise_if_strict(quarantined)
         return finished
 
@@ -858,6 +993,7 @@ class Engine:
         K = self.ec.spec_k
         if not self._active.any():
             self._step_count += 1
+            self._maybe_snapshot()
             return finished
         n = self.ec.n_slots
         rem = np.zeros((n,), np.int32)
@@ -909,6 +1045,7 @@ class Engine:
             self.counters["tokens_accepted"] += n_match
             self.counters["tokens_rolled_back"] += drafted - n_match
         self._step_count += K
+        self._maybe_snapshot()
         self._raise_if_strict(quarantined)
         return finished
 
@@ -1002,7 +1139,7 @@ class Engine:
             self.cfg, n_slots=self.ec.n_slots,
             pos=self.ec.s_max // 2 if pos is None else pos,
             weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt,
-            kv_dtype=self.kv_dtype_served)
+            kv_dtype=self.kv_dtype_served, **self._mesh_model_kwargs())
 
     def bench_decode(self, iters: int = 50,
                      k_steps: int | None = None) -> Dict[str, float]:
@@ -1029,7 +1166,11 @@ class Engine:
         s_max = self.ec.s_max
         if K >= s_max // 2:
             raise ValueError(f"k_steps={K} too large for s_max={s_max}")
-        multi = ST.make_slot_decode_multi(self.cfg, K, self.ec.temperature)
+        multi = (ST.make_slot_decode_multi_mesh(
+                     self.cfg, K, self.ec.temperature, self._mesh,
+                     self.params, self.cache, self.ec.combine_wire_dtype)
+                 if self._mesh is not None else
+                 ST.make_slot_decode_multi(self.cfg, K, self.ec.temperature))
 
         def block(params, cache, toks, act, rem, eos, keys, poison):
             # keep pos in bounds ON DEVICE: reset to mid-cache before the
@@ -1069,8 +1210,10 @@ class Engine:
         from repro.launch.hlo_analysis import roofline_terms
         traffic = self.modeled_decode_traffic()
         terms = roofline_terms(traffic["flops_per_token"],
-                               traffic["bytes_per_token"], 0.0)
-        roof = 1.0 / max(terms["t_memory_s"], terms["t_compute_s"], 1e-30)
+                               traffic["bytes_per_token"],
+                               traffic["interconnect_bytes_per_token"])
+        roof = 1.0 / max(terms["t_memory_s"], terms["t_compute_s"],
+                         terms["t_collective_s"], 1e-30)
         return {
             "tok_per_s": tok_per_s,
             "dispatches_per_s": iters / dt,
@@ -1082,6 +1225,8 @@ class Engine:
             "hbm_bytes_per_token": traffic["bytes_per_token"],
             "moe_expert_bytes_per_token":
                 traffic["moe_expert_bytes_per_token"],
+            "interconnect_bytes_per_token":
+                traffic["interconnect_bytes_per_token"],
             "roofline_tok_per_s": roof,
             "roofline_fraction": tok_per_s / roof,
         }
@@ -1110,7 +1255,16 @@ class Engine:
             weight_dtype=suffix_dt, prefix_weight_dtype=prefix_dt,
             draft_weight_dtype=d_suffix_dt,
             draft_prefix_weight_dtype=d_prefix_dt,
-            kv_dtype=self.kv_dtype_served)
+            kv_dtype=self.kv_dtype_served, **self._mesh_model_kwargs())
+
+    def _mesh_model_kwargs(self) -> Dict[str, float]:
+        """EP/DP degrees of the serving mesh for the analytic traffic
+        models (1/1 when single-device)."""
+        if self._mesh is None:
+            return {}
+        return dict(ep_degree=int(self._mesh.shape.get("model", 1)),
+                    dp_degree=int(self._mesh.shape.get("data", 1)),
+                    combine_wire_dtype=self.ec.combine_wire_dtype)
 
     def bench_spec_decode(self, iters: int = 50) -> Dict[str, float]:
         """Steady-state speculative throughput with every slot active,
@@ -1135,8 +1289,13 @@ class Engine:
         s_max = self.ec.s_max
         if K + 1 >= s_max // 2:
             raise ValueError(f"spec_k={K} too large for s_max={s_max}")
-        spec = ST.make_slot_decode_spec(self.cfg, self.draft_cfg, K,
-                                        self.ec.temperature)
+        spec = (ST.make_slot_decode_spec_mesh(
+                    self.cfg, self.draft_cfg, K, self.ec.temperature,
+                    self._mesh, self.params, self.draft_params, self.cache,
+                    self.cache_draft, self.ec.combine_wire_dtype)
+                if self._mesh is not None else
+                ST.make_slot_decode_spec(self.cfg, self.draft_cfg, K,
+                                         self.ec.temperature))
 
         def round_(params, dparams, cache, dcache, toks, act, rem, eos,
                    keys, poison):

@@ -47,17 +47,37 @@ class PagedAllocator:
     the full-model pool is shared in the draft pool at the same block ids)."""
 
     def __init__(self, *, n_slots: int, n_blocks: int, block_size: int,
-                 s_max: int):
+                 s_max: int, n_shards: int = 1):
         if s_max % block_size:
             raise ValueError(f"s_max={s_max} must be a multiple of "
                              f"kv block size {block_size}")
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if n_blocks % n_shards or n_slots % n_shards:
+            raise ValueError(
+                f"n_blocks={n_blocks} and n_slots={n_slots} must both split "
+                f"evenly over n_shards={n_shards}: a sharded pool pins "
+                f"slot s to the block range of shard s // (n_slots/n_shards) "
+                f"(DESIGN.md §13)")
         self.n_slots = int(n_slots)
         self.nb = int(n_blocks)
         self.bs = int(block_size)
         self.s_max = int(s_max)
         self.mb = s_max // block_size                   # table width
-        # pop() order is ascending block id — deterministic across runs
-        self._free: List[int] = list(range(self.nb - 1, -1, -1))
+        # mesh serving (DESIGN.md §13): with n_shards > 1 the pool is
+        # PARTITIONED — shard ``sh`` owns blocks [sh*nb_l, (sh+1)*nb_l) and
+        # slots [sh*slots_per, (sh+1)*slots_per), and every allocation for a
+        # slot draws only from its shard's range. That is the invariant the
+        # in-program table localization relies on: each data shard's table
+        # rows reference only block ids it physically holds.
+        self.nsh = int(n_shards)
+        self.nb_l = self.nb // self.nsh
+        self.slots_per = self.n_slots // self.nsh
+        # pop() order is ascending block id within each shard —
+        # deterministic across runs
+        self._free: List[List[int]] = [
+            list(range((sh + 1) * self.nb_l - 1, sh * self.nb_l - 1, -1))
+            for sh in range(self.nsh)]
         self.ref = np.zeros(self.nb, np.int64)
         # one sentinel row at index n_slots: admission pads point there so
         # their scatter writes drop on device
@@ -72,22 +92,42 @@ class PagedAllocator:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     def blocks_for_rows(self, n_rows: int) -> int:
         return -(-int(n_rows) // self.bs)
 
+    # -- sharding (DESIGN.md §13) ------------------------------------------
+
+    def shard_of_slot(self, slot: int) -> int:
+        return int(slot) // self.slots_per
+
+    def shard_of_block(self, block: int) -> int:
+        return int(block) // self.nb_l
+
+    def _reg_key(self, shard: int, key: bytes) -> bytes:
+        """Registry keys are shard-qualified when the pool is partitioned:
+        a chain's blocks live on one shard, so only same-shard slots may
+        adopt it. Unsharded pools keep the raw-prefix key (snapshot
+        compatibility)."""
+        if self.nsh == 1:
+            return key
+        return shard.to_bytes(4, "little") + key
+
     # -- prefix registry ---------------------------------------------------
 
-    def lookup_prefix(self, prompt: np.ndarray) -> Tuple[int, Tuple[int, ...]]:
-        """Longest registered chain covering a strict prefix of ``prompt``.
+    def lookup_prefix(self, prompt: np.ndarray,
+                      shard: int = 0) -> Tuple[int, Tuple[int, ...]]:
+        """Longest registered chain covering a strict prefix of ``prompt``
+        that lives on ``shard`` (the only shard whose slots could adopt it
+        in a partitioned pool; ignored when unsharded).
 
         Returns ``(shared_rows, blocks)``; ``shared_rows`` is capped below
         ``len(prompt)`` so the admission forward always has at least one
         suffix token to produce the first sampled token's logits from."""
         prompt = np.ascontiguousarray(prompt, np.int32)
         for mm in range((len(prompt) - 1) // self.bs, 0, -1):
-            key = prompt[:mm * self.bs].tobytes()
+            key = self._reg_key(shard, prompt[:mm * self.bs].tobytes())
             chain = self._registry.get(key)
             if chain is not None:
                 self._registry.move_to_end(key)
@@ -101,10 +141,11 @@ class PagedAllocator:
         the number of chain entries added."""
         prompt = np.ascontiguousarray(prompt, np.int32)
         blocks = self._owned.get(slot, [])
+        sh = self.shard_of_slot(slot)
         added = 0
         for mm in range(1, min((len(prompt) - 1) // self.bs,
                                len(blocks)) + 1):
-            key = prompt[:mm * self.bs].tobytes()
+            key = self._reg_key(sh, prompt[:mm * self.bs].tobytes())
             if key in self._registry:
                 self._registry.move_to_end(key)
                 continue
@@ -115,14 +156,23 @@ class PagedAllocator:
             added += 1
         return added
 
-    def _evict_registry_one(self) -> bool:
-        if not self._registry:
+    def _evict_registry_one(self, shard: Optional[int] = None) -> bool:
+        """Evict the LRU registry chain — restricted to chains whose blocks
+        live on ``shard`` when given (evicting another shard's chain cannot
+        relieve this shard's pressure)."""
+        victim = None
+        for key, chain in self._registry.items():       # LRU order
+            if shard is None or not chain \
+                    or self.shard_of_block(chain[0]) == shard:
+                victim = key
+                break
+        if victim is None:
             return False
-        _, chain = self._registry.popitem(last=False)   # LRU
+        chain = self._registry.pop(victim)
         for b in chain:
             self.ref[b] -= 1
             if self.ref[b] == 0:
-                self._free.append(b)
+                self._free[self.shard_of_block(b)].append(b)
         self.stats["registry_evictions"] += 1
         return True
 
@@ -138,7 +188,9 @@ class PagedAllocator:
         preserved)."""
         if slot in self._owned:
             raise RuntimeError(f"slot {slot} already owns blocks")
-        shared_rows, shared = self.lookup_prefix(prompt)
+        sh = self.shard_of_slot(slot)
+        free = self._free[sh]
+        shared_rows, shared = self.lookup_prefix(prompt, sh)
         # Take the adoption refcounts BEFORE evicting: the eviction loop may
         # pop the very registry entries pinning this chain, and an unpinned
         # chain would fall into the free list and be handed back out by the
@@ -146,18 +198,19 @@ class PagedAllocator:
         for b in shared:
             self.ref[b] += 1
         need_new = self.blocks_for_rows(n_rows) - len(shared)
-        while len(self._free) < need_new and self._evict_registry_one():
+        while len(free) < need_new and self._evict_registry_one(
+                sh if self.nsh > 1 else None):
             pass
-        if len(self._free) < need_new:
+        if len(free) < need_new:
             for b in shared:
                 self.ref[b] -= 1
                 if self.ref[b] == 0:
-                    self._free.append(b)
+                    free.append(b)
             self.stats["deferrals"] += 1
             return None
         blocks = list(shared)
         for _ in range(need_new):
-            b = self._free.pop()
+            b = free.pop()
             self.ref[b] += 1
             blocks.append(b)
         self._owned[slot] = blocks
@@ -175,7 +228,7 @@ class PagedAllocator:
         for b in self._owned.pop(slot, []):
             self.ref[b] -= 1
             if self.ref[b] == 0:
-                self._free.append(b)
+                self._free[self.shard_of_block(b)].append(b)
         self.tab[slot] = self.nb
 
     def trim(self, slot: int, n_rows: int) -> int:
@@ -192,7 +245,7 @@ class PagedAllocator:
         for b in dropped:
             self.ref[b] -= 1
             if self.ref[b] == 0:
-                self._free.append(b)
+                self._free[self.shard_of_block(b)].append(b)
         self._owned[slot] = blocks[:keep]
         self.tab[slot, keep:] = self.nb
         return len(dropped)
@@ -209,11 +262,14 @@ class PagedAllocator:
         b = blocks[block_index]
         if self.ref[b] == 1:
             return b, b
-        while not self._free and self._evict_registry_one():
+        sh = self.shard_of_slot(slot)
+        free = self._free[sh]
+        while not free and self._evict_registry_one(
+                sh if self.nsh > 1 else None):
             pass
-        if not self._free:
+        if not free:
             raise RuntimeError("paged KV pool exhausted during copy-on-write")
-        nb_ = self._free.pop()
+        nb_ = free.pop()
         self.ref[b] -= 1
         self.ref[nb_] = 1
         blocks[block_index] = nb_
@@ -236,7 +292,10 @@ class PagedAllocator:
         tables, per-slot ownership, and the prefix registry with its LRU
         order and exact byte keys (hex-encoded)."""
         return {
-            "free": [int(b) for b in self._free],
+            # flattened in shard order: shard membership is a pure function
+            # of block id, so load_state re-splits losslessly (the format is
+            # identical to the unsharded one when n_shards == 1)
+            "free": [int(b) for f in self._free for b in f],
             "ref": [int(r) for r in self.ref],
             "tab": self.tab.tolist(),
             "owned": {str(s): [int(b) for b in blocks]
@@ -250,7 +309,9 @@ class PagedAllocator:
         """Inverse of :meth:`state_dict`. Restores onto an allocator built
         with the same geometry; a restored allocator is indistinguishable
         from the one that snapshotted (``check_invariants`` holds)."""
-        self._free = [int(b) for b in state["free"]]
+        self._free = [[] for _ in range(self.nsh)]
+        for b in state["free"]:
+            self._free[self.shard_of_block(int(b))].append(int(b))
         self.ref = np.asarray(state["ref"], np.int64)
         self.tab = np.asarray(state["tab"], np.int32)
         self._owned = {int(s): [int(b) for b in blocks]
@@ -272,15 +333,24 @@ class PagedAllocator:
             for b in chain:
                 expected[b] += 1
         assert (expected == self.ref).all(), "refcount drift"
-        free = self._free
+        free = [b for f in self._free for b in f]
         assert len(set(free)) == len(free), "double-freed block"
         free_set = set(free)
+        for sh, f in enumerate(self._free):
+            for b in f:
+                assert self.shard_of_block(b) == sh, (
+                    f"block {b} on shard {sh}'s free list, belongs to "
+                    f"{self.shard_of_block(b)}")
         for b in range(self.nb):
             assert (self.ref[b] == 0) == (b in free_set), (
                 f"block {b}: ref={self.ref[b]} free={b in free_set}")
         for slot, blocks in self._owned.items():
             assert len(set(blocks)) == len(blocks), (
                 f"slot {slot} owns a block twice: {blocks}")
+            for b in blocks:
+                assert self.shard_of_block(b) == self.shard_of_slot(slot), (
+                    f"slot {slot} (shard {self.shard_of_slot(slot)}) owns "
+                    f"block {b} of shard {self.shard_of_block(b)}")
             assert list(self.tab[slot, :len(blocks)]) == list(blocks)
             assert (self.tab[slot, len(blocks):] == self.nb).all()
         assert (self.tab[self.n_slots] == self.nb).all(), "sentinel row"

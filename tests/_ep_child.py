@@ -1,0 +1,124 @@
+"""Subprocess worker for the expert-parallel serving differential tests.
+
+Runs the SAME deterministic request trace through the continuous-batching
+engine in every decode mode — plain step loop, fused block, speculative,
+dense and paged KV, batched admission throughout — either single-device
+(no ``--mesh``) or shard_map'd over a forced multi-device host platform
+(``--mesh data=2,model=2`` under ``XLA_FLAGS=--xla_force_host_platform_
+device_count=4``), and emits a JSON record of every request's token stream.
+The parent test asserts the records are token-for-token IDENTICAL across
+device counts: the DESIGN.md §13 contract (EP all-to-all dispatch + sharded
+KV is bitwise-transparent under the fp32 combine wire).
+
+Not a test module (no ``test_`` prefix); invoked by
+``tests/test_ep_serving.py`` and reusable from the command line:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python tests/_ep_child.py --mesh data=2,model=2
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def build_trace(cfg, seed: int = 3, n_requests: int = 6):
+    """Deterministic request set: varied prompt lengths across two buckets,
+    two requests sharing a 16-token prefix (exercises paged prefix
+    sharing), staggered arrivals so admission batches some and not others,
+    a temperature stream per-uid as always."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    arrivals = [0.0, 0.0, 0.0, 2.0, 5.0, 9.0, 13.0, 17.0]
+    shared = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int64)
+    for i in range(n_requests):
+        n = int(rng.integers(4, 28))
+        prompt = rng.integers(0, cfg.vocab_size, size=n, dtype=np.int64)
+        if i in (1, 4):     # prefix sharers (identical first 16 tokens)
+            prompt = np.concatenate([shared, prompt[:8]])
+        reqs.append({
+            "prompt": prompt,
+            "max_new_tokens": int(rng.integers(4, 12)),
+            "arrival_time": arrivals[i % len(arrivals)],
+        })
+    return reqs
+
+
+def run_trace(cfg, params, ec_kwargs, trace, draft_cfg=None,
+              draft_params=None):
+    import time
+    from repro.serving.engine import Engine, EngineConfig
+    eng = Engine(EngineConfig(**ec_kwargs), cfg=cfg, params=params,
+                 draft_cfg=draft_cfg, draft_params=draft_params)
+    for t in trace:
+        eng.submit(t["prompt"], t["max_new_tokens"],
+                   arrival_time=t["arrival_time"])
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = int(eng.counters["tokens_out"])
+    return {
+        "tokens": {str(r.uid): [int(t) for t in r.out_tokens]
+                   for r in done},
+        "statuses": {str(r.uid): r.status for r in done},
+        "tokens_out": toks,
+        "quarantined": int(eng.counters["quarantined"]),
+        # run-local performance — excluded from cross-device-count parity
+        # comparisons (wall time obviously differs)
+        "perf": {
+            "wall_s": round(dt, 3),
+            "tok_per_s": round(toks / max(dt, 1e-9), 1),
+            "host_dispatches_per_token": round(
+                eng.host_dispatches_per_token, 4),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--modes", default=None,
+                    help="comma-separated subset (default: all)")
+    args = ap.parse_args()
+
+    import jax
+    from repro import configs
+    from repro.models import model as MD
+
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    params = MD.init(cfg, jax.random.PRNGKey(0))
+    # an independently seeded model of the same architecture serves as the
+    # draft: spec mode's token-for-token contract holds for ANY draft (low
+    # acceptance just exercises rollback harder), and it keeps the child
+    # free of a compression run
+    draft_params = MD.init(cfg, jax.random.PRNGKey(2))
+    trace = build_trace(cfg)
+
+    base = dict(n_slots=4, s_max=64, prefill_buckets=(16, 32),
+                seed=0, mesh=args.mesh)
+    modes = {
+        "dense_plain": dict(base, decode_block=1),
+        "dense_block": dict(base, decode_block=4),
+        "dense_block_t": dict(base, decode_block=4, temperature=0.7),
+        "paged_block": dict(base, decode_block=4, kv_layout="paged",
+                            kv_block=8),
+        "spec_dense": dict(base, spec_k=3),
+        "spec_paged": dict(base, spec_k=3, kv_layout="paged", kv_block=8),
+    }
+    wanted = (set(args.modes.split(",")) if args.modes else set(modes))
+
+    out = {"devices": jax.device_count(), "mesh": args.mesh}
+    for name, kwargs in modes.items():
+        if name not in wanted:
+            continue
+        spec = name.startswith("spec")
+        out[name] = run_trace(
+            cfg, params, kwargs, trace,
+            draft_cfg=cfg if spec else None,
+            draft_params=draft_params if spec else None)
+    json.dump(out, sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

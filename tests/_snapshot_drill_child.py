@@ -1,0 +1,60 @@
+"""Subprocess worker for the crash-recovery drill (DESIGN.md §12).
+
+Boots a paged engine with periodic background snapshots
+(``snapshot_every_steps``), submits the full request trace up front, then
+dies hard (``os._exit``) mid-trace — after at least one periodic snapshot
+has committed, before the trace drains. The parent test restores from the
+snapshot directory and finishes the trace; the combined token streams must
+be token-for-token identical to an uninterrupted run.
+
+Not a test module (no ``test_`` prefix); invoked by
+``tests/test_ep_serving.py``.
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snapshot-dir", required=True)
+    ap.add_argument("--kill-after-steps", type=int, default=12)
+    args = ap.parse_args()
+
+    import jax  # noqa: F401  (imported for side effects before repro)
+    from repro import configs
+    from repro.serving.engine import Engine, EngineConfig
+    from _ep_child import build_trace
+
+    cfg = configs.get("qwen3-moe-30b-a3b").reduced()
+    ec = EngineConfig(n_slots=4, s_max=64, prefill_buckets=(16, 32),
+                      seed=0, decode_block=4, kv_layout="paged", kv_block=8,
+                      snapshot_every_steps=4,
+                      snapshot_dir=args.snapshot_dir)
+    eng = Engine(ec, cfg=cfg)     # params = seeded MD.init default
+    for t in build_trace(cfg):
+        eng.submit(t["prompt"], t["max_new_tokens"],
+                   arrival_time=t["arrival_time"])
+    while not eng.idle:
+        # report each finished request the moment it completes (flushed),
+        # so the parent knows which token streams terminated PRE-crash —
+        # terminal requests are the caller's to keep, not snapshot state
+        for r in eng.step_block():
+            sys.stdout.write(json.dumps(
+                {"uid": int(r.uid), "status": r.status,
+                 "tokens": [int(t) for t in r.out_tokens]}) + "\n")
+            sys.stdout.flush()
+        if eng.steps >= args.kill_after_steps:
+            # SIGKILL-grade exit: no atexit, no cleanup, no farewell — the
+            # only survivors are the committed snapshot directories and the
+            # finished-request lines already flushed above
+            os._exit(17)
+    # reaching here means the trace drained before the kill point — the
+    # drill proved nothing; fail loudly so the parent knows
+    sys.stdout.write("TRACE DRAINED before kill point\n")
+    sys.exit(3)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,6 +61,19 @@ def good():
                                       "kv_stream_reduction": 1.939},
             "kv_stream_gate": 1.7, "kv_stream_ok": True, "parity_ok": True,
         },
+        "ep": {
+            "mesh": "data=2,model=2", "devices": 4,
+            "modes": {
+                "dense_block": {"parity_bitwise": True, "tokens": 120},
+                "paged_block": {"parity_bitwise": True, "tokens": 120},
+            },
+            "parity_ok": True,
+            "full_scale": {"arch": "kimi-k2-1t-a32b", "ep_degree": 16,
+                           "dp_degree": 4, "n_slots": 64,
+                           "expert_stream_reduction": 13.5,
+                           "interconnect_bytes_per_token": 1.0e5},
+            "expert_stream_gate": 12.8, "expert_stream_ok": True,
+        },
         "faults": {
             "seed": 0,
             "injected": {"nan_logits": 1, "transient": 1, "exhaust": 1,
@@ -266,6 +279,34 @@ def test_main_exit_codes(good, tmp_path, capsys):
     p.write_text(json.dumps(bad))
     assert main([str(p)]) == 1
     assert "check_bench FAIL" in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------------
+# expert-parallel gates (DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def test_ep_section_missing_fails(good):
+    bad = copy.deepcopy(good)
+    del bad["ep"]
+    assert any("ep section missing" in e for e in check(bad))
+
+
+def test_ep_mode_parity_gated_per_mode(good):
+    for mode in ("dense_block", "paged_block"):
+        bad = copy.deepcopy(good)
+        bad["ep"]["modes"][mode]["parity_bitwise"] = False
+        errs = check(bad)
+        assert len(errs) == 1 and f"ep/{mode}" in errs[0] \
+            and "token-for-token" in errs[0]
+
+
+def test_ep_expert_stream_checked_against_recorded_gate(good):
+    """Re-checks the NUMBER against the recorded gate, not the summary's
+    expert_stream_ok bit."""
+    bad = copy.deepcopy(good)
+    bad["ep"]["full_scale"]["expert_stream_reduction"] = 2.0  # ok untouched
+    errs = check(bad)
+    assert len(errs) == 1 and "2.0x < 12.8x" in errs[0] and "EP=16" in errs[0]
 
 
 # --------------------------------------------------------------------------
